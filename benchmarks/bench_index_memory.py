@@ -1,0 +1,42 @@
+"""Table 2 reproduction: index memory consumption.
+
+Bitmap vs EWAH vs LossyBitmap vs DensityMap on the synthetic / taxi-like /
+airline-like workloads (same card-inality structure as the paper's datasets).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Workload, emit
+from repro.data.synthetic import make_clustered_table, make_real_like_table
+
+
+def run(num_records: int = 400_000, rpb: int = 1024) -> list[dict]:
+    rows = []
+    for name, table in [
+        ("synthetic", make_clustered_table(num_records=num_records, num_dims=8, seed=0)),
+        ("taxi", make_real_like_table("taxi", num_records=num_records, seed=0)),
+        ("airline", make_real_like_table("airline", num_records=num_records, seed=0)),
+    ]:
+        w = Workload(table, rpb)
+        data_mb = w.store.data_nbytes() / 1e6
+        bitmap = w.bitmap.nbytes() / 1e6
+        ewah = w.ewah.nbytes() / 1e6
+        lossy = w.lossy.nbytes() / 1e6
+        dmap = w.store.index.nbytes_maps_only() / 1e6
+        dmap_sorted = w.store.index.nbytes() / 1e6
+        rows.append(dict(
+            dataset=name, data_mb=round(data_mb, 2), bitmap_mb=round(bitmap, 4),
+            ewah_mb=round(ewah, 4), lossy_mb=round(lossy, 4),
+            densitymap_mb=round(dmap, 4), densitymap_with_sorted_mb=round(dmap_sorted, 4),
+            bitmap_over_dmap=round(bitmap / dmap, 1),
+            ewah_over_dmap=round(ewah / dmap, 1),
+        ))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, list(rows[0].keys()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / native on TPU) vs jnp ref.
+
+On this CPU container the numbers measure the *reference* path and interpret
+overhead — correctness plumbing, not TPU perf; TPU perf is derived structurally
+in benchmarks/roofline.py from the compiled dry-run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    dens = jnp.asarray(rng.random((64, 8192)).astype(np.float32))
+    rids = jnp.asarray([1, 5, 9], jnp.int32)
+    rows.append(dict(kernel="density_combine", shape="64x8192,g3",
+                     pallas_us=round(_bench(ops.density_combine, dens, rids), 1),
+                     ref_us=round(_bench(jax.jit(ref.density_combine_ref, static_argnames=()), dens, rids), 1)))
+    x = jnp.asarray(rng.random(16384).astype(np.float32))
+    rows.append(dict(kernel="prefix_sum", shape="16384",
+                     pallas_us=round(_bench(ops.prefix_sum, x), 1),
+                     ref_us=round(_bench(jax.jit(ref.prefix_sum_ref), x), 1)))
+    ths = jnp.linspace(0.01, 0.99, 16).astype(jnp.float32)
+    rows.append(dict(kernel="theta_stats", shape="16384x16",
+                     pallas_us=round(_bench(ops.theta_stats, x, ths), 1),
+                     ref_us=round(_bench(jax.jit(ref.theta_stats_ref), x, ths), 1)))
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 256, 128)).astype(np.float32))
+    kv = jnp.asarray(rng.normal(0, 1, (1, 2, 256, 128)).astype(np.float32))
+    rows.append(dict(kernel="flash_attention", shape="b1h4s256d128",
+                     pallas_us=round(_bench(ops.flash_attention, q, kv, kv), 1),
+                     ref_us=round(_bench(jax.jit(ref.attention_ref), q, kv, kv), 1)))
+    u = jnp.asarray(rng.normal(0, 0.1, (1, 2, 256, 64)).astype(np.float32))
+    ld = -jnp.abs(jnp.asarray(rng.normal(0, 0.1, (1, 2, 256)).astype(np.float32)))
+    bm = jnp.asarray(rng.normal(0, 0.3, (1, 2, 256, 32)).astype(np.float32))
+    rows.append(dict(kernel="ssd_scan", shape="b1h2s256",
+                     pallas_us=round(_bench(ops.ssd_scan, u, ld, bm, bm), 1),
+                     ref_us=round(_bench(jax.jit(lambda *a: ref.ssd_ref(*a)[0]), u, ld, bm, bm), 1)))
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    emit(run(), ["kernel", "shape", "pallas_us", "ref_us"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""§7.6 reproduction: parameter effects on THRESHOLD / TWO-PRONG.
+
+data size (flat runtimes), #predicates (more blocks), overall density (fewer
+blocks), block size (random-I/O sensitivity).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Workload, emit
+from repro.data.synthetic import make_clustered_table
+
+
+def run() -> list[dict]:
+    rows = []
+    K = 2000
+    # data size sweep
+    for n in (50_000, 200_000, 800_000):
+        t = make_clustered_table(num_records=n, num_dims=4, density=0.1, seed=1)
+        w = Workload(t, 1024)
+        for algo in ("threshold", "two_prong"):
+            r = w.run(algo, [(0, 1), (1, 1)], K)
+            rows.append(dict(sweep="data_size", value=n, algo=algo,
+                             blocks=r["blocks"], total_ms=round(1e3 * (r["cpu_s"] + r["io_s"]), 2)))
+    # predicate count sweep
+    t = make_clustered_table(num_records=400_000, num_dims=8, density=0.3, seed=2)
+    w = Workload(t, 1024)
+    for gamma in (1, 2, 3, 4):
+        preds = [(a, 1) for a in range(gamma)]
+        if int(t.valid_mask(preds).sum()) < K:
+            continue
+        for algo in ("threshold", "two_prong"):
+            r = w.run(algo, preds, K)
+            rows.append(dict(sweep="num_predicates", value=gamma, algo=algo,
+                             blocks=r["blocks"], total_ms=round(1e3 * (r["cpu_s"] + r["io_s"]), 2)))
+    # density sweep
+    for dens in (0.05, 0.1, 0.2, 0.4):
+        t = make_clustered_table(num_records=400_000, num_dims=4, density=dens, seed=3)
+        w = Workload(t, 1024)
+        for algo in ("threshold", "two_prong"):
+            r = w.run(algo, [(0, 1), (1, 1)], K)
+            rows.append(dict(sweep="density", value=dens, algo=algo,
+                             blocks=r["blocks"], total_ms=round(1e3 * (r["cpu_s"] + r["io_s"]), 2)))
+    # block size sweep
+    t = make_clustered_table(num_records=400_000, num_dims=4, density=0.1, seed=4)
+    for rpb in (64, 256, 1024, 4096):
+        w = Workload(t, rpb)
+        for algo in ("threshold", "two_prong"):
+            r = w.run(algo, [(0, 1), (1, 1)], K)
+            rows.append(dict(sweep="block_size", value=rpb, algo=algo,
+                             blocks=r["blocks"], total_ms=round(1e3 * (r["cpu_s"] + r["io_s"]), 2)))
+    return rows
+
+
+def main():
+    emit(run(), ["sweep", "value", "algo", "blocks", "total_ms"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Fig. 8 reproduction: time vs error for hybrid sampling.
+
+THRESHOLD-only (α=0) vs hybrid α ∈ {0.1, 0.3} (HT + ratio estimators) vs
+BITMAP-RANDOM, on the taxi and airline proxies, with the layout-correlated
+measure that makes pure any-k biased (§5 motivation).  For each scheme we grow
+the time budget and record the relative error of the mean estimate — the
+paper's 500 ms interactivity column is printed explicitly.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Workload, emit
+from repro.core.baselines import bitmap_random
+from repro.data.synthetic import make_clustered_table, make_real_like_table
+
+
+def _budget_curve(w: Workload, preds, measure: int, true_mean: float,
+                  scheme: str, ks: list[int], trials: int = 6) -> list[dict]:
+    rows = []
+    for k in ks:
+        errs, times, ns = [], [], []
+        for trial in range(trials):
+            t0 = time.perf_counter()
+            if scheme == "bitmap_random":
+                rng = np.random.default_rng(trial)
+                recs, blocks = bitmap_random(w.bitmap, preds, k, w.rpb, rng)
+                cpu = time.perf_counter() - t0
+                vals = w.table.measures[recs, measure] if recs.size else np.asarray([0.0])
+                est = float(np.mean(vals))
+                io = w.cost.io_time(blocks)
+                n = len(recs)
+            else:
+                alpha = {"threshold": 0.0, "hybrid_0.1": 0.1, "hybrid_0.3": 0.3}[scheme]
+                estimator = "ratio"
+                e, qr, plan = w.engine.aggregate(
+                    preds, measure, k, alpha=alpha, estimator=estimator, seed=trial
+                )
+                cpu = qr.cpu_time_s
+                est = e.mean
+                io = qr.modeled_io_s
+                n = e.num_samples
+            errs.append(abs(est - true_mean) / (abs(true_mean) + 1e-12))
+            times.append(cpu + io)
+            ns.append(n)
+        rows.append(dict(scheme=scheme, k=k,
+                         mean_err_pct=round(100 * float(np.mean(errs)), 2),
+                         mean_time_ms=round(1e3 * float(np.mean(times)), 1),
+                         mean_samples=int(np.mean(ns))))
+    return rows
+
+
+def run(num_records: int = 300_000, rpb: int = 1024) -> list[dict]:
+    rows = []
+    for name, table, preds, measure in [
+        ("taxi", make_real_like_table("taxi", num_records=num_records, seed=0), [(1, 5)], 0),
+        ("airline", make_real_like_table("airline", num_records=num_records, seed=0), [(2, 1)], 0),
+        ("synthetic-corr", make_clustered_table(num_records=num_records, num_dims=4,
+                                                seed=3, correlated_measure=True),
+         [(0, 1)], 0),
+    ]:
+        w = Workload(table, rpb)
+        mask = table.valid_mask(preds)
+        true_mean = float(table.measures[mask, measure].mean())
+        n_valid = int(mask.sum())
+        ks = [max(n_valid // 100, 10), max(n_valid // 20, 50), max(n_valid // 5, 200)]
+        for scheme in ("threshold", "hybrid_0.1", "hybrid_0.3", "bitmap_random"):
+            for r in _budget_curve(w, preds, measure, true_mean, scheme, ks):
+                r["workload"] = name
+                rows.append(r)
+        # HT-vs-ratio comparison at the middle budget
+        for estimator in ("ht", "ratio"):
+            errs = []
+            for trial in range(6):
+                e, _, _ = w.engine.aggregate(preds, measure, ks[1], alpha=0.1,
+                                             estimator=estimator, seed=100 + trial)
+                errs.append(abs(e.mean - true_mean) / (abs(true_mean) + 1e-12))
+            rows.append(dict(workload=name, scheme=f"hybrid_0.1[{estimator}]",
+                             k=ks[1], mean_err_pct=round(100 * float(np.mean(errs)), 2),
+                             mean_time_ms=-1, mean_samples=-1))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, ["workload", "scheme", "k", "mean_err_pct", "mean_time_ms", "mean_samples"])
+
+
+if __name__ == "__main__":
+    main()

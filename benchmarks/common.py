@@ -1,0 +1,78 @@
+"""Shared benchmark harness utilities.
+
+I/O time is the paper's own cost model (§4.3.1 constants: HDD sequential
+<1 ms, full seek ≈7 ms; SSD near-flat) — this container has no spinning disk,
+so we reproduce the paper's *algorithmic* quantities exactly (blocks fetched,
+seeks, samples returned, estimator error) and translate to time through the
+same fitted model (DESIGN.md §7).  CPU time is measured.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import (
+    BitmapIndex, EwahIndex, LossyBitmapIndex, bitmap_scan, build_bitmap_index,
+    build_ewah_index, build_lossy_bitmap, disk_scan, ewah_scan, lossy_bitmap_scan,
+)
+from repro.core.cost_model import CostModel, make_cost_model
+from repro.core.engine import NeedleTailEngine
+from repro.data.block_store import BlockStore, Table, build_block_store
+
+
+class Workload:
+    """Table + all index structures + engines, built once per dataset."""
+
+    def __init__(self, table: Table, records_per_block: int, cost: CostModel | None = None):
+        self.table = table
+        self.rpb = records_per_block
+        self.store = build_block_store(table, records_per_block)
+        self.cost = cost or make_cost_model("hdd")
+        self.engine = NeedleTailEngine(self.store, self.cost)
+        self.bitmap = build_bitmap_index(table.dims, table.cards)
+        self.ewah = build_ewah_index(self.bitmap)
+        self.lossy = build_lossy_bitmap(
+            np.asarray(self.store.index.densities), self.store.index.vocab.attr_offsets
+        )
+
+    def run(self, algo: str, preds, k: int, rng=None) -> dict:
+        """Returns dict(samples, blocks, cpu_s, io_s)."""
+        t0 = time.perf_counter()
+        if algo in ("threshold", "two_prong", "forward_optimal", "auto"):
+            r = self.engine.any_k(preds, k, algo=algo)
+            cpu = time.perf_counter() - t0
+            return dict(samples=r.num_records, blocks=len(r.blocks_fetched),
+                        cpu_s=cpu, io_s=r.modeled_io_s)
+        if algo == "bitmap_scan":
+            recs, blocks = bitmap_scan(self.bitmap, preds, k, self.rpb)
+        elif algo == "ewah":
+            recs, blocks = ewah_scan(self.ewah, preds, k, self.rpb)
+        elif algo == "lossy_bitmap":
+            cand = lossy_bitmap_scan(self.lossy, preds)
+            # fetch candidate blocks in order until k valid records seen
+            got, used = 0, []
+            mask_all = self.table.valid_mask(preds)
+            for b in cand:
+                used.append(b)
+                lo = b * self.rpb
+                got += int(mask_all[lo : lo + self.rpb].sum())
+                if got >= k:
+                    break
+            recs, blocks = np.zeros(got), np.asarray(used)
+        elif algo == "disk_scan":
+            recs, blocks = disk_scan(self.table.valid_mask(preds), k, self.rpb)
+        else:
+            raise ValueError(algo)
+        cpu = time.perf_counter() - t0
+        return dict(samples=min(len(recs), k) if algo != "lossy_bitmap" else min(got, k),
+                    blocks=len(blocks), cpu_s=cpu, io_s=self.cost.io_time(blocks))
+
+
+ALGOS = ["threshold", "two_prong", "bitmap_scan", "lossy_bitmap", "ewah", "disk_scan"]
+
+
+def emit(rows: list[dict], header: list[str]):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r[h]) for h in header))

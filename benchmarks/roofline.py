@@ -1,0 +1,136 @@
+"""Roofline analysis from the compiled dry-run artifacts (§Roofline protocol).
+
+Per (arch × shape), single-pod mesh, TPU v5e constants:
+  compute   = flops_per_device / 197 TF/s (bf16)
+  memory    = hbm_bytes_per_device / 819 GB/s
+  collective= collective_bytes_per_device / 50 GB/s/link
+
+flops/bytes come from the trip-count-corrected HLO walker
+(launch/hlo_analysis.py), since ``cost_analysis()`` counts scan bodies once;
+both raw and corrected numbers live in the artifacts.  MODEL_FLOPS uses
+6·N_active·tokens (train) / 2·N_active·tokens (prefill, decode); the ratio
+MODEL/HLO exposes remat + dispatch overheads.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--suffix _opt] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARCH_ORDER = [
+    "whisper-tiny", "grok-1-314b", "qwen3-moe-235b-a22b", "phi-3-vision-4.2b",
+    "yi-9b", "h2o-danube-3-4b", "gemma3-12b", "qwen1.5-4b", "zamba2-7b",
+    "mamba2-130m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops_per_device(arch: str, shape: str, num_devices: int) -> float:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * n_active * tokens / num_devices
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * n_active * tokens / num_devices
+    # decode: one token per sequence
+    return 2.0 * n_active * sh.global_batch / num_devices
+
+
+def load_cells(mesh: str = "single", suffix: str = "") -> list[dict]:
+    out = []
+    art = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    for f in sorted(glob.glob(str(art / f"*__{mesh}{suffix}.json"))):
+        d = json.load(open(f))
+        if suffix == "" and not f.endswith(f"__{mesh}.json"):
+            continue  # don't mix perf-variant artifacts into the baseline table
+        out.append(d)
+    return out
+
+
+def analyze(cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return dict(arch=cell["arch"], shape=cell["shape"], skip=cell.get("status"))
+    a = cell["analyzer"]
+    nd = cell["num_devices"]
+    compute = a["flops_per_device"] / PEAK_FLOPS
+    memory = a["hbm_bytes_per_device"] / HBM_BW
+    coll = a["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(cell["arch"], cell["shape"], nd)
+    bound = max(terms.values())
+    # roofline fraction: time the chip MUST spend on useful model math vs the
+    # modeled step time (= dominant term, assuming perfect overlap)
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return dict(
+        arch=cell["arch"], shape=cell["shape"],
+        compute_s=compute, memory_s=memory, collective_s=coll,
+        dominant=dom, model_flops=mf, hlo_flops=a["flops_per_device"],
+        useful_ratio=mf / a["flops_per_device"] if a["flops_per_device"] else 0.0,
+        roofline_fraction=frac,
+        peak_gb=cell["memory"]["peak_bytes_per_device"] / 1e9,
+        top_collectives=a.get("top_collectives", {}),
+    )
+
+
+_SUGGEST = {
+    "compute": "cut recompute: looser remat policy / fewer capacity-overhead expert flops",
+    "memory": "fuse elementwise chains and stream KV/state tiles; raise arithmetic intensity per HBM pass",
+    "collective": "reshard to kill the dominant gather (see top_collectives); overlap with compute in the scan body",
+}
+
+
+def to_markdown(rows: list[dict], title: str) -> str:
+    lines = [f"### {title}", "",
+             "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO flops | roofline frac | peak GB/dev | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    key = {(a, s): i for i, (a, s) in enumerate(
+        [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER])}
+    rows = sorted(rows, key=lambda r: key.get((r["arch"], r["shape"]), 999))
+    for r in rows:
+        if r.get("skip"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | {r['skip']} | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['peak_gb']:.2f} | {_SUGGEST[r['dominant']]} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--suffix", default="")
+    ap.add_argument("--json", default="")
+    ap.add_argument("--pick", action="store_true", help="print hillclimb candidates")
+    args = ap.parse_args()
+    rows = [a for a in (analyze(c) for c in load_cells(args.mesh, args.suffix)) if a]
+    print(to_markdown(rows, f"Roofline terms ({args.mesh}-pod{args.suffix or ''})"))
+    ok = [r for r in rows if not r.get("skip")]
+    if args.pick:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collbound = max(ok, key=lambda r: r["collective_s"] / max(r["compute_s"], 1e-12))
+        print("\n# hillclimb candidates:")
+        print(f"#   worst roofline fraction: {worst['arch']} {worst['shape']} ({worst['roofline_fraction']:.3f})")
+        print(f"#   most collective-bound:   {collbound['arch']} {collbound['shape']} "
+              f"(coll/compute = {collbound['collective_s']/max(collbound['compute_s'],1e-12):.1f})")
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()

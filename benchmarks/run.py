@@ -1,0 +1,47 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = {
+    "fig3": ("Fig 3: synthetic any-k runtimes", "benchmarks.bench_anyk_synthetic"),
+    "fig456": ("Figs 4-6: real-layout any-k runtimes (HDD+SSD)", "benchmarks.bench_anyk_real"),
+    "table2": ("Table 2: index memory consumption", "benchmarks.bench_index_memory"),
+    "fig7": ("Fig 7: FORWARD-OPTIMAL I/O vs CPU", "benchmarks.bench_forward_optimal"),
+    "fig8": ("Fig 8: time vs error (hybrid sampling)", "benchmarks.bench_time_error"),
+    "params": ("Sec 7.6: parameter effects", "benchmarks.bench_parameters"),
+    "kernels": ("Kernel microbenchmarks", "benchmarks.bench_kernels"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated section keys")
+    args = ap.parse_args()
+    keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(SECTIONS)
+    failures = 0
+    for key in keys:
+        title, module = SECTIONS[key]
+        print(f"\n===== [{key}] {title} =====")
+        t0 = time.time()
+        try:
+            __import__(module, fromlist=["main"]).main()
+            print(f"# [{key}] ok in {time.time()-t0:.1f}s")
+        except Exception as e:  # keep the suite going; report at the end
+            import traceback
+
+            traceback.print_exc()
+            print(f"# [{key}] FAILED: {e}")
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

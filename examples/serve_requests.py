@@ -1,0 +1,9 @@
+"""Serve a small model with wave-batched requests (KV-cache decode path).
+
+  PYTHONPATH=src python examples/serve_requests.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen1.5-4b", "--reduced", "--requests", "8",
+          "--max-new", "16", "--slots", "4", "--max-seq", "128"])

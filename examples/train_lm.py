@@ -1,0 +1,19 @@
+"""End-to-end driver: train an LM on NeedleTail-filtered corpus slices.
+
+The corpus is an attribute-tagged token block store; the any-k engine fills
+each batch from the densest matching blocks (DESIGN.md §4.1) — with checkpoint/
+auto-resume. Reduced mamba2-130m on CPU; drop --reduced on a TPU fleet.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "mamba2-130m", "--reduced",
+        "--steps", "60", "--batch", "8", "--seq", "128",
+        "--filter", "domain=code,quality=hi",
+        "--corpus-seqs", "2048",
+        "--ckpt-dir", "/tmp/needletail_ckpt", "--ckpt-every", "20",
+        "--log-every", "10",
+    ])

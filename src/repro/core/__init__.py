@@ -1,0 +1,31 @@
+# The paper's primary contribution: DensityMap index + any-k algorithms +
+# hybrid sampling / unequal-probability estimation, as a composable JAX module.
+from repro.core.cost_model import CostModel, fit_cost_curve, make_cost_model
+from repro.core.density_map import (
+    AND,
+    OR,
+    DensityMapIndex,
+    PredicateVocab,
+    build_density_maps,
+    combine_densities,
+    combine_densities_np,
+)
+from repro.core.engine import NeedleTailEngine, QueryResult
+from repro.core.predicates import And, Eq, In, Not, Or, Range, from_pairs
+from repro.core.sharded import DistributedAnyK
+from repro.core.estimators import Estimate, horvitz_thompson, ratio_estimator
+from repro.core.forward_optimal import forward_optimal_faithful, forward_optimal_scan
+from repro.core.hybrid import HybridPlan, plan_hybrid
+from repro.core.threshold import threshold_faithful, threshold_select
+from repro.core.two_prong import two_prong_faithful, two_prong_select
+
+__all__ = [
+    "AND", "OR", "And", "CostModel", "DensityMapIndex", "DistributedAnyK",
+    "Eq", "Estimate", "HybridPlan", "In", "NeedleTailEngine", "Not", "Or",
+    "PredicateVocab", "QueryResult", "Range", "from_pairs",
+    "build_density_maps", "combine_densities", "combine_densities_np",
+    "fit_cost_curve", "forward_optimal_faithful", "forward_optimal_scan",
+    "horvitz_thompson", "make_cost_model", "plan_hybrid", "ratio_estimator",
+    "threshold_faithful", "threshold_select", "two_prong_faithful",
+    "two_prong_select",
+]

@@ -1,0 +1,272 @@
+"""First-to-k baselines the paper compares against (§7.1).
+
+* BITMAP-SCAN   — uncompressed per-value bitmaps, bitwise ⊕, first k set bits.
+* LOSSY-BITMAP  — one bit per block per value (≡ DensityMap rounded up to 1).
+* EWAH          — 64-bit word-aligned hybrid compressed bitmaps (run-length RLWs +
+                  literal words), bitwise ops on the compressed form.
+* DISK-SCAN     — scan blocks in order until k valid records found (no index).
+* BITMAP-RANDOM — k uniform random records among the valid set (gold standard for
+                  aggregate estimation, §7.5).
+
+All baselines report (record_ids, blocks_fetched) so the benchmark harness can
+charge them I/O through the same cost model as the any-k algorithms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.density_map import AND, OR
+
+# ----------------------------------------------------------------------------
+# Uncompressed bitmap index
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BitmapIndex:
+    """One packed bitmap per (attr, value) row; rows addressed as in PredicateVocab."""
+
+    bits: np.ndarray  # [num_rows, ceil(N/64)] uint64
+    num_records: int
+    attr_offsets: np.ndarray
+
+    def nbytes(self) -> int:
+        return int(self.bits.size * 8)
+
+    def row(self, attr: int, value: int) -> np.ndarray:
+        return self.bits[int(self.attr_offsets[attr]) + int(value)]
+
+
+def build_bitmap_index(dims: np.ndarray, cards: Sequence[int]) -> BitmapIndex:
+    dims = np.asarray(dims)
+    n, r = dims.shape
+    cards = np.asarray(cards, dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(cards)])
+    words = -(-n // 64)
+    bits = np.zeros((int(offsets[-1]), words), dtype=np.uint64)
+    rec = np.arange(n)
+    w, b = rec // 64, rec % 64
+    for attr in range(r):
+        rows = offsets[attr] + dims[:, attr]
+        np.bitwise_or.at(bits, (rows, w), np.uint64(1) << b.astype(np.uint64))
+    return BitmapIndex(bits=bits, num_records=n, attr_offsets=offsets)
+
+
+def combine_bitmaps(index: BitmapIndex, predicates, op: str = AND) -> np.ndarray:
+    acc = None
+    for attr, value in predicates:
+        row = index.row(attr, value)
+        if acc is None:
+            acc = row.copy()
+        elif op == AND:
+            acc &= row
+        elif op == OR:
+            acc |= row
+        else:
+            raise ValueError(op)
+    assert acc is not None
+    return acc
+
+
+def _first_k_set_bits(words: np.ndarray, k: int, num_records: int) -> np.ndarray:
+    """First k set bit positions of a packed bitmap (vectorized per word batch)."""
+    out: list[int] = []
+    nz = np.nonzero(words)[0]
+    for wi in nz:
+        w = int(words[wi])
+        base = int(wi) * 64
+        while w:
+            low = w & -w
+            pos = base + low.bit_length() - 1
+            if pos < num_records:
+                out.append(pos)
+                if len(out) == k:
+                    return np.asarray(out, dtype=np.int64)
+            w ^= low
+    return np.asarray(out, dtype=np.int64)
+
+
+def bitmap_scan(
+    index: BitmapIndex, predicates, k: int, records_per_block: int, op: str = AND
+) -> tuple[np.ndarray, np.ndarray]:
+    """BITMAP-SCAN: first k valid record ids + the blocks they live in."""
+    acc = combine_bitmaps(index, predicates, op)
+    recs = _first_k_set_bits(acc, k, index.num_records)
+    blocks = np.unique(recs // records_per_block)
+    return recs, blocks
+
+
+def bitmap_random(
+    index: BitmapIndex, predicates, k: int, records_per_block: int,
+    rng: np.random.Generator, op: str = AND,
+) -> tuple[np.ndarray, np.ndarray]:
+    """BITMAP-RANDOM: k uniform random valid records (gold standard)."""
+    acc = combine_bitmaps(index, predicates, op)
+    all_recs = _all_set_bits(acc, index.num_records)
+    if all_recs.size == 0:
+        return all_recs, np.asarray([], dtype=np.int64)
+    take = min(k, all_recs.size)
+    recs = np.sort(rng.choice(all_recs, size=take, replace=False))
+    blocks = np.unique(recs // records_per_block)
+    return recs, blocks
+
+
+def _all_set_bits(words: np.ndarray, num_records: int) -> np.ndarray:
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little")[:num_records]
+    return np.nonzero(bits)[0].astype(np.int64)
+
+
+# ----------------------------------------------------------------------------
+# LOSSY-BITMAP (block-level presence bits)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LossyBitmapIndex:
+    bits: np.ndarray  # [num_rows, ceil(lam/64)] uint64, 1 = block has >=1 match
+    num_blocks: int
+    attr_offsets: np.ndarray
+
+    def nbytes(self) -> int:
+        return int(self.bits.size * 8)
+
+
+def build_lossy_bitmap(densities: np.ndarray, attr_offsets: np.ndarray) -> LossyBitmapIndex:
+    present = np.asarray(densities) > 0.0
+    rows, lam = present.shape
+    words = -(-lam // 64)
+    bits = np.zeros((rows, words), dtype=np.uint64)
+    r, b = np.nonzero(present)
+    np.bitwise_or.at(
+        bits, (r, b // 64), np.uint64(1) << (b % 64).astype(np.uint64)
+    )
+    return LossyBitmapIndex(bits=bits, num_blocks=lam, attr_offsets=attr_offsets)
+
+
+def lossy_bitmap_scan(
+    index: LossyBitmapIndex, predicates, op: str = AND
+) -> np.ndarray:
+    """Candidate block ids in storage order (caller fetches until k found)."""
+    acc = None
+    for attr, value in predicates:
+        row = index.bits[int(index.attr_offsets[attr]) + int(value)]
+        acc = row.copy() if acc is None else (acc & row if op == AND else acc | row)
+    assert acc is not None
+    return _all_set_bits(acc, index.num_blocks)
+
+
+# ----------------------------------------------------------------------------
+# EWAH compressed bitmaps (64-bit word-aligned hybrid)
+# ----------------------------------------------------------------------------
+# Encoding: stream of u64 words. A marker word holds (run_bit, run_len:32,
+# num_literals:31); it is followed by num_literals literal words.  This follows
+# Lemire et al.'s EWAH layout closely enough to reproduce its compression behaviour.
+
+
+def ewah_compress(words: np.ndarray) -> np.ndarray:
+    words = np.ascontiguousarray(words, dtype=np.uint64)
+    out: list[int] = []
+    i, n = 0, words.size
+    ZERO, ONES = np.uint64(0), np.uint64(0xFFFFFFFFFFFFFFFF)
+    while i < n:
+        # count run of identical all-0 / all-1 words
+        run_bit = 1 if words[i] == ONES else 0
+        run_val = ONES if run_bit else ZERO
+        j = i
+        while j < n and words[j] == run_val:
+            j += 1
+        run_len = j - i
+        if run_len == 0 and words[i] != ZERO and words[i] != ONES:
+            run_bit = 0
+        # collect literals until next run of >=1 clean word
+        lit_start = j
+        while j < n and words[j] != ZERO and words[j] != ONES:
+            j += 1
+        lits = words[lit_start:j]
+        marker = (run_bit << 63) | (min(run_len, (1 << 31) - 1) << 32) | len(lits)
+        out.append(marker)
+        out.extend(int(x) for x in lits)
+        i = j
+    return np.asarray(out, dtype=np.uint64)
+
+
+def ewah_decompress(stream: np.ndarray, num_words: int) -> np.ndarray:
+    out = np.zeros(num_words, dtype=np.uint64)
+    pos = 0
+    i = 0
+    ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
+    while i < stream.size and pos < num_words:
+        marker = int(stream[i])
+        i += 1
+        run_bit = marker >> 63
+        run_len = (marker >> 32) & ((1 << 31) - 1)
+        nlit = marker & ((1 << 32) - 1)
+        if run_bit:
+            out[pos : pos + run_len] = ONES
+        pos += run_len
+        out[pos : pos + nlit] = stream[i : i + nlit]
+        i += nlit
+        pos += nlit
+    return out
+
+
+@dataclasses.dataclass
+class EwahIndex:
+    streams: list[np.ndarray]
+    num_records: int
+    attr_offsets: np.ndarray
+
+    def nbytes(self) -> int:
+        return int(sum(s.size * 8 for s in self.streams))
+
+
+def build_ewah_index(index: BitmapIndex) -> EwahIndex:
+    streams = [ewah_compress(index.bits[r]) for r in range(index.bits.shape[0])]
+    return EwahIndex(
+        streams=streams,
+        num_records=index.num_records,
+        attr_offsets=index.attr_offsets,
+    )
+
+
+def ewah_scan(
+    index: EwahIndex, predicates, k: int, records_per_block: int, op: str = AND
+) -> tuple[np.ndarray, np.ndarray]:
+    """EWAH baseline: decompress-and-combine, then first-k (word-aligned ops)."""
+    num_words = -(-index.num_records // 64)
+    acc = None
+    for attr, value in predicates:
+        row = ewah_decompress(
+            index.streams[int(index.attr_offsets[attr]) + int(value)], num_words
+        )
+        acc = row if acc is None else (acc & row if op == AND else acc | row)
+    assert acc is not None
+    recs = _first_k_set_bits(acc, k, index.num_records)
+    blocks = np.unique(recs // records_per_block)
+    return recs, blocks
+
+
+# ----------------------------------------------------------------------------
+# DISK-SCAN
+# ----------------------------------------------------------------------------
+
+
+def disk_scan(
+    valid_mask: np.ndarray, k: int, records_per_block: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Scan blocks in storage order until k valid records are found.
+
+    ``valid_mask``: [N] bool ground-truth validity (the scan reads the raw data, so
+    it sees the truth; it is charged I/O for *every* block up to the stop point).
+    """
+    idx = np.nonzero(valid_mask)[0]
+    recs = idx[:k]
+    if recs.size == 0:
+        last_block = (len(valid_mask) - 1) // records_per_block
+    else:
+        last_block = int(recs[-1]) // records_per_block
+    blocks = np.arange(0, last_block + 1, dtype=np.int64)
+    return recs.astype(np.int64), blocks

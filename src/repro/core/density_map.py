@@ -1,0 +1,145 @@
+"""DensityMap index (paper §3).
+
+A DensityMap stores, for every (dimension attribute, value) pair, the fraction of
+records in each block that match ``A_i == V_i^j``.  The full index is a dense
+``[num_rows, num_blocks]`` float32 tensor where a *row* is one (attr, value) pair.
+Rows are addressed through :class:`PredicateVocab`.
+
+Sorted density maps (paper §4.1) — per-row block ids in descending density order —
+are precomputed at build time, exactly as the paper builds them at load time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AND = "and"
+OR = "or"
+
+
+@dataclasses.dataclass(frozen=True)
+class PredicateVocab:
+    """Maps (attr_id, value) -> row index in the density tensor."""
+
+    attr_offsets: np.ndarray  # [r+1] int64; row range for attr i is [off[i], off[i+1])
+    attr_cards: np.ndarray  # [r] int64 number of distinct values per attribute
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.attr_offsets[-1])
+
+    @property
+    def num_attrs(self) -> int:
+        return len(self.attr_cards)
+
+    def row(self, attr: int, value: int) -> int:
+        if not (0 <= value < self.attr_cards[attr]):
+            raise ValueError(f"value {value} out of range for attr {attr}")
+        return int(self.attr_offsets[attr]) + int(value)
+
+    def rows(self, predicates: Sequence[tuple[int, int]]) -> np.ndarray:
+        return np.asarray([self.row(a, v) for a, v in predicates], dtype=np.int32)
+
+
+@dataclasses.dataclass
+class DensityMapIndex:
+    """The in-memory index: densities + sorted variants (paper §3.2, §4.1)."""
+
+    vocab: PredicateVocab
+    densities: jax.Array  # [num_rows, lam] f32, d[r, b] = frac of block b matching row r
+    sorted_block_ids: jax.Array  # [num_rows, lam] int32, per-row desc-density order
+    sorted_densities: jax.Array  # [num_rows, lam] f32, densities in that order
+    records_per_block: int
+    num_records: int
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.densities.shape[1])
+
+    def nbytes(self) -> int:
+        """Index memory (Table 2 accounting): densities + sorted structures."""
+        return int(
+            self.densities.size * 4
+            + self.sorted_block_ids.size * 4
+            + self.sorted_densities.size * 4
+        )
+
+    def nbytes_maps_only(self) -> int:
+        return int(self.densities.size * 4)
+
+
+def build_density_maps(
+    dims: np.ndarray,
+    cards: Sequence[int],
+    records_per_block: int,
+) -> DensityMapIndex:
+    """Build the index from a dimension-attribute table.
+
+    Args:
+      dims: ``[N, r]`` integer array of dimension attributes.
+      cards: number of distinct values per attribute (δ_i).
+      records_per_block: records per storage block; the last block may be padded
+        (padding never matches any value, matching the paper's fractional density).
+    """
+    dims = np.asarray(dims)
+    n, r = dims.shape
+    cards = np.asarray(cards, dtype=np.int64)
+    if r != len(cards):
+        raise ValueError("cards length must equal number of dim attributes")
+    lam = -(-n // records_per_block)  # ceil
+    offsets = np.concatenate([[0], np.cumsum(cards)])
+    vocab = PredicateVocab(attr_offsets=offsets, attr_cards=cards)
+
+    dens = np.zeros((vocab.num_rows, lam), dtype=np.float32)
+    block_of = np.arange(n) // records_per_block
+    for attr in range(r):
+        # row id for each record under this attribute
+        rows = offsets[attr] + dims[:, attr]
+        # 2D histogram over (row, block)
+        flat = rows * lam + block_of
+        counts = np.bincount(flat, minlength=vocab.num_rows * lam)
+        dens += counts.reshape(vocab.num_rows, lam) / float(records_per_block)
+    order = np.argsort(-dens, axis=1, kind="stable").astype(np.int32)
+    sdens = np.take_along_axis(dens, order, axis=1)
+    return DensityMapIndex(
+        vocab=vocab,
+        densities=jnp.asarray(dens),
+        sorted_block_ids=jnp.asarray(order),
+        sorted_densities=jnp.asarray(sdens),
+        records_per_block=records_per_block,
+        num_records=n,
+    )
+
+
+def combine_densities(
+    densities: jax.Array, rows: jax.Array, op: str = AND
+) -> jax.Array:
+    """Paper §3.2: estimated per-block density of the conjunction/disjunction.
+
+    AND -> product of per-predicate densities (independence assumption);
+    OR  -> sum, clipped to 1.
+    """
+    sel = densities[rows]  # [gamma, lam]
+    if op == AND:
+        return jnp.prod(sel, axis=0)
+    elif op == OR:
+        return jnp.clip(jnp.sum(sel, axis=0), 0.0, 1.0)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def combine_densities_np(densities: np.ndarray, rows: np.ndarray, op: str = AND):
+    sel = np.asarray(densities)[np.asarray(rows)]
+    if op == AND:
+        return np.prod(sel, axis=0)
+    elif op == OR:
+        return np.clip(np.sum(sel, axis=0), 0.0, 1.0)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def estimated_valid_records(index: DensityMapIndex, combined: jax.Array) -> jax.Array:
+    """Estimate L, the total number of valid records, from the combined map."""
+    return jnp.sum(combined) * index.records_per_block

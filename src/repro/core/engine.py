@@ -1,0 +1,204 @@
+"""The NeedleTail engine (paper §6): any-k module + random-sampling module +
+index + block access module, over a :class:`BlockStore`.
+
+The engine returns *all valid records in the fetched blocks* (paper §4.1) and
+re-executes the plan over unexamined blocks when a fetch under-delivers (density
+estimates are approximate).  I/O is charged through a :class:`CostModel`, with the
+§4.1 fetch optimization (ascending block order) applied before costing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+from repro.core import estimators as est
+from repro.core.cost_model import CostModel, make_cost_model
+from repro.core.density_map import AND, combine_densities_np
+from repro.core.forward_optimal import forward_optimal_faithful
+from repro.core.hybrid import HybridPlan, plan_hybrid
+from repro.core.threshold import threshold_select_jit
+from repro.core.two_prong import two_prong_select_jit
+
+if TYPE_CHECKING:  # avoid core <-> data import cycle
+    from repro.data.block_store import BlockStore
+
+Predicates = Sequence[tuple[int, int]]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    record_block: np.ndarray  # [n] block id per returned record
+    record_row: np.ndarray  # [n] row-in-block per returned record
+    measures: np.ndarray  # [n, s] measures of returned records
+    blocks_fetched: np.ndarray  # ids actually read
+    algo: str
+    cpu_time_s: float
+    modeled_io_s: float
+    plan_rounds: int
+
+    @property
+    def num_records(self) -> int:
+        return int(self.record_block.shape[0])
+
+
+class NeedleTailEngine:
+    def __init__(
+        self,
+        store: "BlockStore",
+        cost_model: CostModel | None = None,
+        max_refills: int = 8,
+    ):
+        self.store = store
+        self.cost = cost_model or make_cost_model("hdd")
+        self.max_refills = max_refills
+        self._dens_np = np.asarray(store.index.densities)
+
+    # ------------------------------------------------------------------ plans
+    def combined_density(self, predicates, op: str = AND) -> np.ndarray:
+        from repro.core.predicates import Predicate
+
+        if isinstance(predicates, Predicate):
+            return np.asarray(predicates.density(self.store.index), dtype=np.float32)
+        rows = self.store.index.vocab.rows(predicates)
+        return combine_densities_np(self._dens_np, rows, op)
+
+    def _mask(self, block_dims, predicates, op: str = AND):
+        from repro.core.predicates import Predicate
+
+        if isinstance(predicates, Predicate):
+            return predicates.mask(np.asarray(block_dims))
+        return self.store.predicate_mask(block_dims, predicates, op)
+
+    def plan(
+        self,
+        predicates: Predicates,
+        k: int,
+        op: str = AND,
+        algo: str = "auto",
+        exclude: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, str]:
+        """Choose blocks. Returns (block ids, algorithm actually used)."""
+        combined = self.combined_density(predicates, op)
+        if exclude is not None and exclude.size:
+            combined = combined.copy()
+            combined[exclude] = 0.0
+        rpb = self.store.records_per_block
+
+        def plan_threshold() -> np.ndarray:
+            r = threshold_select_jit(combined, float(k), rpb)
+            n = int(r.num_selected)
+            return np.asarray(r.block_ids)[:n].astype(np.int64)
+
+        def plan_two_prong() -> np.ndarray:
+            r = two_prong_select_jit(combined, float(k), rpb)
+            return np.arange(int(r.start), int(r.end), dtype=np.int64)
+
+        if algo == "threshold":
+            return plan_threshold(), algo
+        if algo == "two_prong":
+            return plan_two_prong(), algo
+        if algo == "forward_optimal":
+            sel, _ = forward_optimal_faithful(combined, k, rpb, self.cost)
+            return np.asarray(sel, dtype=np.int64), algo
+        if algo == "auto":
+            # §7.2 Discussion: plan with both, cost both, take the cheaper.
+            bt, b2 = plan_threshold(), plan_two_prong()
+            ct, c2 = self.cost.io_time(bt), self.cost.io_time(b2)
+            return (bt, "threshold") if ct <= c2 else (b2, "two_prong")
+        raise ValueError(f"unknown algo {algo!r}")
+
+    # ------------------------------------------------------------------ query
+    def any_k(
+        self,
+        predicates: Predicates,
+        k: int,
+        op: str = AND,
+        algo: str = "auto",
+    ) -> QueryResult:
+        t0 = time.perf_counter()
+        fetched: list[np.ndarray] = []
+        rec_blocks: list[np.ndarray] = []
+        rec_rows: list[np.ndarray] = []
+        meas: list[np.ndarray] = []
+        got = 0
+        rounds = 0
+        used_algo = algo
+        exclude = np.asarray([], dtype=np.int64)
+        need = k
+        while got < k and rounds < self.max_refills:
+            blocks, used_algo = self.plan(predicates, need, op, algo, exclude)
+            blocks = np.setdiff1d(blocks, exclude)
+            if blocks.size == 0:
+                break
+            blocks = np.sort(blocks)  # §4.1 fetch optimization
+            bd, bm, bv = self.store.fetch(blocks)
+            mask = np.asarray(self._mask(bd, predicates, op) & bv)
+            bi, ri = np.nonzero(mask)
+            rec_blocks.append(blocks[bi])
+            rec_rows.append(ri)
+            meas.append(np.asarray(bm)[bi, ri])
+            fetched.append(blocks)
+            got += int(bi.size)
+            exclude = np.concatenate([exclude, blocks])
+            need = k - got
+            rounds += 1
+        cpu = time.perf_counter() - t0
+        all_blocks = (
+            np.concatenate(fetched) if fetched else np.asarray([], dtype=np.int64)
+        )
+        return QueryResult(
+            record_block=np.concatenate(rec_blocks) if rec_blocks else np.asarray([], np.int64),
+            record_row=np.concatenate(rec_rows) if rec_rows else np.asarray([], np.int64),
+            measures=np.concatenate(meas) if meas else np.zeros((0, 0), np.float32),
+            blocks_fetched=all_blocks,
+            algo=used_algo,
+            cpu_time_s=cpu,
+            modeled_io_s=self.cost.io_time(all_blocks),
+            plan_rounds=rounds,
+        )
+
+    # -------------------------------------------------------------- aggregate
+    def aggregate(
+        self,
+        predicates: Predicates,
+        measure: int,
+        k: int,
+        alpha: float = 0.1,
+        op: str = AND,
+        estimator: str = "ratio",
+        algo: str = "threshold",
+        seed: int = 0,
+    ) -> tuple[est.Estimate, QueryResult, HybridPlan]:
+        """Hybrid-sampled aggregate estimation (paper §5)."""
+        t0 = time.perf_counter()
+        combined = self.combined_density(predicates, op)
+        rpb = self.store.records_per_block
+        anyk_blocks, _ = self.plan(predicates, k, op, algo)
+        rng = np.random.default_rng(seed)
+        plan = plan_hybrid(anyk_blocks, combined, k, alpha, rpb, rng)
+        blocks = np.sort(plan.blocks)
+        bd, bm, bv = self.store.fetch(blocks)
+        mask = np.asarray(self._mask(bd, predicates, op) & bv)
+        vals = np.asarray(bm)[..., measure]
+        tau_i = np.sum(np.where(mask, vals, 0.0), axis=1)  # per-block sums
+        n_i = np.sum(mask, axis=1).astype(np.float64)  # per-block valid counts
+        in_sc = np.isin(blocks, plan.sc)
+        L = float(np.sum(combined) * rpb)  # estimated population size
+        fn = est.horvitz_thompson if estimator == "ht" else est.ratio_estimator
+        e = fn(tau_i[in_sc], tau_i[~in_sc], n_i[in_sc], n_i[~in_sc], plan, L)
+        cpu = time.perf_counter() - t0
+        bi, ri = np.nonzero(mask)
+        qr = QueryResult(
+            record_block=blocks[bi],
+            record_row=ri,
+            measures=np.asarray(bm)[bi, ri],
+            blocks_fetched=blocks,
+            algo=f"hybrid-{algo}",
+            cpu_time_s=cpu,
+            modeled_io_s=self.cost.io_time(blocks),
+            plan_rounds=1,
+        )
+        return e, qr, plan

@@ -1,0 +1,100 @@
+"""Unequal-probability estimators (paper §5.2): Horvitz-Thompson and ratio.
+
+Inputs are block-level statistics of the *fetched* blocks:
+  tau_i = per-block sum of the measure over valid records,
+  L_i   = per-block count of valid records,
+  pi_i  = per-block inclusion probabilities from the HybridPlan.
+
+Estimates (Eqs. 1-8):
+  HT:    tau_hat = Σ tau_i / pi_i          mu_hat = tau_hat / L
+  ratio: mu_hat  = tau_hat / Σ (L_i/pi_i)  tau_hat = mu_hat * L
+plus the corresponding variance estimators.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hybrid import HybridPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    total: float  # tau_hat
+    mean: float  # mu_hat
+    var_total: float
+    var_mean: float
+    num_samples: int
+
+    @property
+    def se_mean(self) -> float:
+        return float(np.sqrt(max(self.var_mean, 0.0)))
+
+
+def _pairwise_terms(
+    tau_c: np.ndarray, tau_r: np.ndarray, plan: HybridPlan, center: float = 0.0
+) -> float:
+    """Σ_i Σ_{j≠i} ((π_ij − π_i π_j)/(π_i π_j)) (τ_i−c)(τ_j−c) over sampled blocks.
+
+    For the hybrid design the (S_c, S_c) and (S_c, S_r) terms vanish
+    (π_ij = π_i π_j); only (S_r, S_r) pairs contribute.
+    """
+    tr = tau_r - center
+    nr, rem = len(tau_r), plan.num_valid_blocks - len(plan.sc)
+    if nr < 2 or rem < 2:
+        return 0.0
+    p1 = nr / rem
+    p2 = p1 * (nr - 1) / (rem - 1)
+    w = (p2 - p1 * p1) / (p1 * p1)
+    s = float(np.sum(tr)) ** 2 - float(np.sum(tr * tr))
+    return w * s
+
+
+def horvitz_thompson(
+    tau_c: np.ndarray,
+    tau_r: np.ndarray,
+    n_c: np.ndarray,
+    n_r: np.ndarray,
+    plan: HybridPlan,
+    population_size: float,
+) -> Estimate:
+    """Eqs. 1-4. ``tau_c``/``tau_r``: block sums for S_c / S_r blocks."""
+    pi_r = max(plan.pi_r, 1e-12)
+    tau_hat = float(np.sum(tau_c) + np.sum(tau_r) / pi_r)
+    L = max(population_size, 1e-12)
+    mu_hat = tau_hat / L
+    # Var (Eq. 3): the (1-π)/π leading term is zero for S_c blocks (π=1).
+    var = float(np.sum((1.0 - pi_r) / pi_r * tau_r**2)) + _pairwise_terms(
+        tau_c, tau_r, plan
+    )
+    var = max(var, 0.0)
+    n = int(np.sum(n_c) + np.sum(n_r))
+    return Estimate(tau_hat, mu_hat, var, var / (L * L), n)
+
+
+def ratio_estimator(
+    tau_c: np.ndarray,
+    tau_r: np.ndarray,
+    n_c: np.ndarray,
+    n_r: np.ndarray,
+    plan: HybridPlan,
+    population_size: float,
+) -> Estimate:
+    """Eqs. 5-8: mu_hat_R = tau_hat_HT / L_hat_HT."""
+    pi_r = max(plan.pi_r, 1e-12)
+    tau_hat_ht = float(np.sum(tau_c) + np.sum(tau_r) / pi_r)
+    L_hat = float(np.sum(n_c) + np.sum(n_r) / pi_r)
+    mu_hat = tau_hat_ht / max(L_hat, 1e-12)
+    L = max(population_size, 1e-12)
+    tau_hat = mu_hat * L
+    # Var (Eq. 7) with τ_i − μ·L_i residuals (mean-centered block totals)
+    res_c = tau_c - mu_hat * n_c
+    res_r = tau_r - mu_hat * n_r
+    var_mu = (
+        float(np.sum((1.0 - pi_r) / pi_r * res_r**2))
+        + _pairwise_terms(res_c, res_r, plan)
+    ) / (L * L)
+    var_mu = max(var_mu, 0.0)
+    n = int(np.sum(n_c) + np.sum(n_r))
+    return Estimate(tau_hat, mu_hat, var_mu * L * L, var_mu, n)

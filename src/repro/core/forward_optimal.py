@@ -1,0 +1,143 @@
+"""FORWARD-OPTIMAL — globally I/O-optimal any-k selection (paper §4.3, Algorithm 3).
+
+DP over (s = records collected, i = last block fetched):
+
+  C(s,i)   = min cost to hold s estimated valid records with block i fetched last,
+  Opt(s,i) = min cost over the first i blocks,
+
+  C(s,i)   = min( min_{j in [i-t, i-1]} C(s - s_i, j) + RandIO(j, i),
+                  Opt(s - s_i, i - t - 1) + far_cost )
+  Opt(s,i) = min( C(s,i), Opt(s, i-1) )
+
+Complexity O(λ·k·t) — the paper shows (and we re-show in
+``benchmarks/bench_forward_optimal.py``) that the DP's CPU cost outweighs its I/O
+savings on large λ; it is the optimality yardstick, not the production path.
+
+Host version (:func:`forward_optimal_faithful`) keeps parent pointers and
+reconstructs the chosen block set.  The JAX version (:func:`forward_optimal_scan`)
+runs the same DP as a `lax.scan` over blocks with the s-dimension vectorized —
+the TPU-native formulation (depth λ instead of λ·k·t).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CostModel
+
+_INF = np.float64(1e18)
+
+
+def _block_records(combined: np.ndarray, records_per_block: int, k: int) -> np.ndarray:
+    """s_i = estimated valid records per block, clipped to [0, k] ints."""
+    s = np.rint(np.asarray(combined, dtype=np.float64) * records_per_block)
+    return np.clip(s, 0, k).astype(np.int64)
+
+
+def forward_optimal_faithful(
+    combined: np.ndarray, k: int, records_per_block: int, cost: CostModel
+) -> tuple[list[int], float]:
+    """Algorithm 3 with parent pointers. Returns (selected block ids, optimal cost)."""
+    s_blk = _block_records(combined, records_per_block, k)
+    lam = s_blk.shape[0]
+    t = cost.max_dist
+    rio = cost.rand_io_table()  # rio[d], d=0..t
+    kappa = cost.first_block_cost
+
+    # C[s, i], Opt[s, i]; parent[s, i] = previous block id (or -1 if i is first)
+    C = np.full((k + 1, lam), _INF)
+    Opt = np.full((k + 1, lam), _INF)
+    parent = np.full((k + 1, lam), -2, dtype=np.int64)
+    # Opt_arg[s, i] = block achieving Opt(s, i)
+    opt_arg = np.full((k + 1, lam), -2, dtype=np.int64)
+
+    for i in range(lam):
+        si = int(s_blk[i])
+        for s in range(0, k + 1):
+            rem = max(s - si, 0)
+            best, par = _INF, -2
+            if rem == 0:
+                best, par = kappa, -1  # i can be the first block fetched
+            lo = max(i - t, 0)
+            for j in range(lo, i):
+                if C[rem, j] + rio[i - j] < best:
+                    best, par = C[rem, j] + rio[i - j], j
+            if i - t - 1 >= 0 and Opt[rem, i - t - 1] + cost.far_cost < best:
+                best, par = Opt[rem, i - t - 1] + cost.far_cost, opt_arg[rem, i - t - 1]
+            C[s, i] = best
+            parent[s, i] = par
+            if i > 0 and Opt[s, i - 1] <= best:
+                Opt[s, i] = Opt[s, i - 1]
+                opt_arg[s, i] = opt_arg[s, i - 1]
+            else:
+                Opt[s, i] = best
+                opt_arg[s, i] = i
+
+    total = float(Opt[k, lam - 1])
+    if total >= _INF:  # fewer than k records exist in the whole table
+        return [int(b) for b in np.nonzero(s_blk > 0)[0]], float("inf")
+    # reconstruct: follow parent pointers from Opt(k, λ-1)
+    sel: list[int] = []
+    s, i = k, int(opt_arg[k, lam - 1])
+    while i >= 0:
+        sel.append(i)
+        j = int(parent[s, i])
+        s = max(s - int(s_blk[i]), 0)
+        i = j
+    sel.reverse()
+    return sel, total
+
+
+class ForwardOptimalResult(NamedTuple):
+    opt_cost: jax.Array  # [] f32 — Opt(k, λ)
+    opt_table: jax.Array  # [k+1] f32 — Opt(·, λ) (cost frontier)
+
+
+def forward_optimal_scan(
+    combined: jax.Array, k: int, records_per_block: int, cost: CostModel
+) -> ForwardOptimalResult:
+    """`lax.scan` DP computing Opt(k, λ). Carries a rolling window of the last t
+    columns of C plus the Opt column; vectorized over the s axis."""
+    lam = combined.shape[0]
+    t = cost.max_dist
+    s_blk = jnp.clip(
+        jnp.rint(combined * records_per_block), 0, k
+    ).astype(jnp.int32)  # [lam]
+    rio = jnp.asarray(cost.rand_io_table(), dtype=jnp.float32)  # [t+1]
+    far = jnp.float32(cost.far_cost)
+    kappa = jnp.float32(cost.first_block_cost)
+    inf = jnp.float32(1e18)
+    s_ax = jnp.arange(k + 1, dtype=jnp.int32)
+
+    def shift_down(col: jax.Array, si: jax.Array) -> jax.Array:
+        """col[s - si] with col[<0] treated as row `rem==0` base case handled outside."""
+        idx = jnp.clip(s_ax - si, 0, k)
+        return col[idx]
+
+    def step(carry, xs):
+        # cwin: [t, k+1] last t C-columns (cwin[-1] = C(:, i-1));
+        # opt:  [k+1] Opt(:, i-1); opt_lag: [t+1, k+1] Opt columns i-1-t..i-1
+        cwin, opt, opt_lag = carry
+        si = xs
+        rem_idx = jnp.clip(s_ax - si, 0, k)
+        base = jnp.where(s_ax - si <= 0, kappa, inf)  # i as the first fetched block
+        # near candidates: C(rem, j) + rio(i-j), j = i-t .. i-1
+        dists = jnp.arange(t, 0, -1)  # cwin[0] is j = i-t (dist t) .. cwin[-1] dist 1
+        near = cwin[:, rem_idx] + rio[dists][:, None]  # [t, k+1]
+        near_best = jnp.min(near, axis=0)
+        # far candidate: Opt(rem, i-t-1) + far  (opt_lag[0] = Opt(:, i-1-t))
+        far_best = opt_lag[0][rem_idx] + far
+        c_col = jnp.minimum(jnp.minimum(near_best, far_best), base)
+        new_opt = jnp.minimum(opt, c_col)
+        new_cwin = jnp.concatenate([cwin[1:], c_col[None]], axis=0)
+        new_opt_lag = jnp.concatenate([opt_lag[1:], new_opt[None]], axis=0)
+        return (new_cwin, new_opt, new_opt_lag), None
+
+    cwin0 = jnp.full((t, k + 1), inf, dtype=jnp.float32)
+    opt0 = jnp.full((k + 1,), inf, dtype=jnp.float32).at[0].set(0.0)
+    opt_lag0 = jnp.full((t + 1, k + 1), inf, dtype=jnp.float32).at[:, 0].set(0.0)
+    (cwin, opt, _), _ = jax.lax.scan(step, (cwin0, opt0, opt_lag0), s_blk)
+    return ForwardOptimalResult(opt_cost=opt[k], opt_table=opt)

@@ -1,0 +1,133 @@
+"""Group-by / join any-k (paper Appendix A).
+
+Priority of block l for groups {V_G^j}:
+    d_(S,G)_l = d_P_l * Σ_j w_l(V_G^j)
+with NeedleTail's inverse-frequency heuristic (Eq. 10):
+    w_l(V_G^j) = (1/f_G^j) * min(k - r_G^j, d_G_l^j * records_per_block)
+    f_G^j = mean block density of the group.
+
+The iterative algorithm re-scores after every ψ fetched blocks (Algorithm 4); joins
+reduce to group-by on the FK attribute (Appendix A.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.density_map import AND, combine_densities_np
+from repro.core.engine import NeedleTailEngine, Predicates
+
+
+@dataclasses.dataclass
+class GroupByResult:
+    per_group_counts: np.ndarray  # [num_groups] retrieved sample counts
+    blocks_fetched: np.ndarray
+    record_block: np.ndarray
+    record_row: np.ndarray
+    record_group: np.ndarray
+    modeled_io_s: float
+    rounds: int
+
+
+def groupby_any_k(
+    engine: NeedleTailEngine,
+    predicates: Predicates,
+    group_attr: int,
+    k: int,
+    op: str = AND,
+    psi: int = 8,
+    max_rounds: int = 64,
+) -> GroupByResult:
+    """Algorithm 4 with the Eq. 10 priority."""
+    store = engine.store
+    vocab = store.index.vocab
+    rpb = store.records_per_block
+    dens = np.asarray(store.index.densities)
+    lam = dens.shape[1]
+
+    d_p = (
+        combine_densities_np(dens, vocab.rows(predicates), op)
+        if predicates
+        else np.ones(lam, dtype=np.float64)
+    )
+    num_groups = int(vocab.attr_cards[group_attr])
+    g_rows = np.asarray(
+        [vocab.row(group_attr, g) for g in range(num_groups)], dtype=np.int64
+    )
+    d_g = dens[g_rows]  # [G, lam]
+    f_g = np.maximum(d_g.mean(axis=1), 1e-12)  # group frequencies (Appendix A.1)
+
+    r_g = np.zeros(num_groups, dtype=np.int64)  # samples retrieved per group
+    seen = np.zeros(lam, dtype=bool)
+    rec_b: list[np.ndarray] = []
+    rec_r: list[np.ndarray] = []
+    rec_g: list[np.ndarray] = []
+    fetched: list[np.ndarray] = []
+    rounds = 0
+    while np.any(r_g < k) and rounds < max_rounds:
+        # Eq. 10 priorities
+        w = np.minimum((k - r_g)[:, None], d_g * rpb)  # [G, lam]
+        w = np.maximum(w, 0.0) / f_g[:, None]
+        prio = d_p * w.sum(axis=0)
+        prio[seen] = 0.0
+        if not np.any(prio > 0):
+            break
+        top = np.argsort(-prio, kind="stable")[:psi]
+        top = top[prio[top] > 0]
+        if top.size == 0:
+            break
+        top = np.sort(top)
+        bd, _, bv = store.fetch(top)
+        pmask = (
+            np.asarray(store.predicate_mask(bd, predicates, op))
+            if predicates
+            else np.ones(bd.shape[:2], dtype=bool)
+        )
+        mask = pmask & np.asarray(bv)
+        gvals = np.asarray(bd)[..., group_attr]
+        bi, ri = np.nonzero(mask)
+        gv = gvals[bi, ri]
+        # admit records only for groups still short of k (cap at k per group)
+        for g in range(num_groups):
+            gi = np.nonzero(gv == g)[0]
+            take = gi[: max(k - int(r_g[g]), 0)]
+            if take.size:
+                rec_b.append(top[bi[take]])
+                rec_r.append(ri[take])
+                rec_g.append(np.full(take.size, g, dtype=np.int64))
+                r_g[g] += take.size
+        seen[top] = True
+        fetched.append(top)
+        rounds += 1
+    blocks = np.concatenate(fetched) if fetched else np.asarray([], dtype=np.int64)
+    return GroupByResult(
+        per_group_counts=r_g,
+        blocks_fetched=blocks,
+        record_block=np.concatenate(rec_b) if rec_b else np.asarray([], np.int64),
+        record_row=np.concatenate(rec_r) if rec_r else np.asarray([], np.int64),
+        record_group=np.concatenate(rec_g) if rec_g else np.asarray([], np.int64),
+        modeled_io_s=engine.cost.io_time(blocks),
+        rounds=rounds,
+    )
+
+
+def join_any_k(
+    engine: NeedleTailEngine,
+    join_attr: int,
+    join_values: Sequence[int],
+    k: int,
+    predicates: Predicates = (),
+    psi: int = 8,
+) -> GroupByResult:
+    """FK/PK join any-k (Appendix A.2): k samples per join value, reduced to
+    group-by on the FK attribute. ``join_values`` come from scanning the PK table."""
+    res = groupby_any_k(engine, predicates, join_attr, k, psi=psi)
+    keep = np.isin(res.record_group, np.asarray(list(join_values)))
+    return dataclasses.replace(
+        res,
+        record_block=res.record_block[keep],
+        record_row=res.record_row[keep],
+        record_group=res.record_group[keep],
+    )

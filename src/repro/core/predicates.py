@@ -1,0 +1,114 @@
+"""Richer predicate algebra over DensityMaps (paper §2/§3.2).
+
+The paper's index "can handle range predicates, projections, and even joins";
+this module provides the predicate-to-density compiler:
+
+  Eq(attr, v)               d = D[attr=v]
+  In(attr, {v1..vm})        d = Σ_j D[attr=vj]            (disjoint values)
+  Range(attr, lo, hi)       = In(attr, lo..hi)            (ordinal dims)
+  And(p1..pγ)               d = Π d_i   (independence assumption, §3.2)
+  Or(p1..pγ)                d = min(Σ d_i, 1)             (upper bound)
+  Not(p)                    d = 1 − d_p
+
+Every node also compiles to an exact row-level mask for the fetched blocks, so
+the engine's filter step stays exact while planning stays approximate — the
+paper's contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+class Predicate:
+    def density(self, index) -> np.ndarray:  # [lam]
+        raise NotImplementedError
+
+    def mask(self, block_dims: np.ndarray) -> np.ndarray:  # [..., R]
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq(Predicate):
+    attr: int
+    value: int
+
+    def density(self, index):
+        return np.asarray(index.densities)[index.vocab.row(self.attr, self.value)]
+
+    def mask(self, block_dims):
+        return block_dims[..., self.attr] == self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class In(Predicate):
+    attr: int
+    values: tuple[int, ...]
+
+    def density(self, index):
+        dens = np.asarray(index.densities)
+        rows = [index.vocab.row(self.attr, v) for v in self.values]
+        return np.minimum(dens[rows].sum(axis=0), 1.0)  # disjoint values
+
+    def mask(self, block_dims):
+        return np.isin(block_dims[..., self.attr], np.asarray(self.values))
+
+
+def Range(attr: int, lo: int, hi: int) -> In:
+    """Inclusive ordinal range lo..hi."""
+    return In(attr, tuple(range(lo, hi + 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Predicate):
+    parts: tuple[Predicate, ...]
+
+    def density(self, index):
+        d = self.parts[0].density(index)
+        for p in self.parts[1:]:
+            d = d * p.density(index)
+        return d
+
+    def mask(self, block_dims):
+        m = self.parts[0].mask(block_dims)
+        for p in self.parts[1:]:
+            m = m & p.mask(block_dims)
+        return m
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Predicate):
+    parts: tuple[Predicate, ...]
+
+    def density(self, index):
+        d = self.parts[0].density(index)
+        for p in self.parts[1:]:
+            d = d + p.density(index)
+        return np.minimum(d, 1.0)
+
+    def mask(self, block_dims):
+        m = self.parts[0].mask(block_dims)
+        for p in self.parts[1:]:
+            m = m | p.mask(block_dims)
+        return m
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Predicate):
+    part: Predicate
+
+    def density(self, index):
+        return np.clip(1.0 - self.part.density(index), 0.0, 1.0)
+
+    def mask(self, block_dims):
+        return ~self.part.mask(block_dims)
+
+
+def from_pairs(pairs: Sequence[tuple[int, int]], op: str = "and") -> Predicate:
+    """Adapter from the engine's legacy [(attr, value), ...] form."""
+    parts = tuple(Eq(a, v) for a, v in pairs)
+    if len(parts) == 1:
+        return parts[0]
+    return And(parts) if op == "and" else Or(parts)

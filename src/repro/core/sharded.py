@@ -1,0 +1,278 @@
+"""Distributed any-k (the paper's "future work: distributed NeedleTail", §6).
+
+The density-map index and block store are sharded over the mesh `data` axis
+(each shard owns a contiguous range of λ/P blocks — locality-preserving).  Plans
+are computed SPMD with `shard_map`:
+
+* :func:`sharded_threshold` — exact distributed THRESHOLD: each shard selects its
+  local top-C candidate blocks (sort + slice), candidates are all-gathered
+  (C·P ≪ λ bytes on the wire), and every shard computes the identical global
+  density-sorted prefix cutoff.  A `sufficient` flag reports whether C was large
+  enough for exactness (driver refills with 2C otherwise — geometric backoff).
+* :func:`sharded_two_prong` — hierarchical distributed TWO-PRONG: per-group
+  (G-block) sums are all-gathered, the global minimal *group-aligned* window is
+  computed identically on every shard.  The returned window is within G blocks of
+  the true optimum per side; G trades collective bytes for window slack.
+* :func:`sharded_ht_terms` — psum-reduction of per-shard Horvitz-Thompson terms.
+
+Collective footprint per query: one all-gather of `C·P·(4+4)` bytes (THRESHOLD) or
+`(λ/G)·4` bytes (TWO-PRONG) — this is the term the §Perf hillclimb drives down.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+class ShardedThresholdResult(NamedTuple):
+    block_ids: jax.Array  # [C*P] global ids, density-desc; -1 past num_selected
+    num_selected: jax.Array  # [] int32
+    expected_records: jax.Array  # [] f32
+    sufficient: jax.Array  # [] bool — True iff the cutoff is provably exact
+
+
+def _local_threshold_body(
+    combined: jax.Array,  # [lam_local] this shard's combined densities
+    k: jax.Array,
+    records_per_block: int,
+    candidates: int,
+    axis: str | tuple[str, ...],
+):
+    lam_local = combined.shape[0]
+    axis_index = jax.lax.axis_index(axis)
+    base = axis_index.astype(jnp.int32) * lam_local
+    order = jnp.argsort(-combined, stable=True).astype(jnp.int32)
+    top_ids = order[:candidates] + base
+    top_d = combined[order[:candidates]]
+    # gather candidate frontiers from all shards
+    all_d = jax.lax.all_gather(top_d, axis, tiled=True)  # [C*P]
+    all_ids = jax.lax.all_gather(top_ids, axis, tiled=True)
+    # identical global cutoff on every shard
+    g_order = jnp.argsort(-all_d, stable=True)
+    g_d = all_d[g_order]
+    g_ids = all_ids[g_order]
+    cum = jnp.cumsum(g_d) * records_per_block
+    reached = cum >= k
+    any_hit = jnp.any(reached)
+    first_hit = jnp.argmax(reached)
+    n_sel = jnp.where(any_hit, first_hit + 1, jnp.sum(g_d > 0)).astype(jnp.int32)
+    pos = jnp.arange(g_d.shape[0], dtype=jnp.int32)
+    ids = jnp.where(pos < n_sel, g_ids, -1)
+    exp = jnp.where(n_sel > 0, cum[jnp.maximum(n_sel - 1, 0)], 0.0)
+    # exactness: no shard whose entire C-frontier was consumed could be hiding a
+    # denser block than the cutoff density. If shard s contributed c_s selected
+    # candidates with c_s == C, blocks beyond its frontier may exceed the cutoff.
+    sel_mask = pos < n_sel
+    shard_of = all_ids // lam_local
+    counts = jnp.zeros((jax.lax.axis_size(axis),), jnp.int32).at[
+        shard_of[g_order]
+    ].add(sel_mask.astype(jnp.int32))
+    # NOTE: no ~any_hit escape — if the frontier can't reach k we cannot tell
+    # "no more records exist" from "frontier too small"; a saturated shard
+    # (counts == C) always demands a refill.
+    sufficient = jnp.all(counts < candidates)
+    return ids, n_sel, exp.astype(jnp.float32), sufficient
+
+
+def sharded_threshold(
+    combined_global: jax.Array,  # [lam] sharded over `axis`
+    k: float,
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str = "data",
+    candidates: int = 64,
+) -> ShardedThresholdResult:
+    """Exact distributed THRESHOLD (one round; check `.sufficient`)."""
+    kv = jnp.asarray(k, jnp.float32)
+    body = partial(
+        _local_threshold_body,
+        records_per_block=records_per_block,
+        candidates=candidates,
+        axis=axis,
+    )
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )
+    ids, n_sel, exp, ok = fn(combined_global, kv)
+    return ShardedThresholdResult(ids, n_sel, exp, ok)
+
+
+class ShardedTwoProngResult(NamedTuple):
+    start_block: jax.Array  # [] int32 (group-aligned)
+    end_block: jax.Array  # [] int32 exclusive
+    expected_records: jax.Array  # [] f32
+
+
+def sharded_two_prong(
+    combined_global: jax.Array,
+    k: float,
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str = "data",
+    group: int = 64,
+) -> ShardedTwoProngResult:
+    """Hierarchical distributed TWO-PRONG at G-block granularity."""
+    kv = jnp.asarray(k, jnp.float32)
+
+    def body(local: jax.Array, k: jax.Array):
+        lam_local = local.shape[0]
+        g = lam_local // group
+        gsums = jnp.sum(local.reshape(g, group), axis=1) * records_per_block
+        all_g = jax.lax.all_gather(gsums, axis, tiled=True)  # [G_total]
+        c = jnp.concatenate([jnp.zeros((1,), all_g.dtype), jnp.cumsum(all_g)])
+        targets = c[:-1] + k
+        ends = jnp.searchsorted(c, targets, side="left").astype(jnp.int32)
+        starts = jnp.arange(all_g.shape[0], dtype=jnp.int32)
+        feasible = ends <= all_g.shape[0]
+        lengths = jnp.where(feasible, ends - starts, jnp.iinfo(jnp.int32).max)
+        best = jnp.argmin(lengths).astype(jnp.int32)
+        any_f = jnp.any(feasible)
+        s = jnp.where(any_f, best, 0) * group
+        e = jnp.where(any_f, ends[best], all_g.shape[0]) * group
+        exp = c[jnp.where(any_f, ends[best], all_g.shape[0])] - c[jnp.where(any_f, best, 0)]
+        return s, e, exp.astype(jnp.float32)
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    s, e, exp = fn(combined_global, kv)
+    return ShardedTwoProngResult(s, e, exp)
+
+
+def sharded_ht_terms(
+    tau_over_pi_local: jax.Array,  # [B_local] per-block τ_i/π_i on this shard
+    n_over_pi_local: jax.Array,
+    mesh: Mesh,
+    axis: str = "data",
+) -> tuple[jax.Array, jax.Array]:
+    """Global HT numerator/denominator via psum (Eq. 1/5 across shards)."""
+
+    def body(t, n):
+        return (
+            jax.lax.psum(jnp.sum(t), axis),
+            jax.lax.psum(jnp.sum(n), axis),
+        )
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(tau_over_pi_local, n_over_pi_local)
+
+
+def shard_density_maps(
+    densities: jax.Array, mesh: Mesh, axis: str = "data"
+) -> jax.Array:
+    """Place the [rows, λ] index with λ sharded over `axis` (block ranges)."""
+    return jax.device_put(densities, NamedSharding(mesh, P(None, axis)))
+
+class ShardedBisectResult(NamedTuple):
+    theta: jax.Array  # [] f32 — largest θ with ≥ k expected records above it
+    num_selected: jax.Array  # [] int32 blocks with density ≥ θ
+    expected_records: jax.Array  # [] f32
+
+
+def sharded_threshold_bisect(
+    combined_global: jax.Array,  # [lam] sharded over `axis`
+    k: float,
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str | tuple[str, ...] = "data",
+    rounds: int = 3,
+    fanout: int = 16,
+) -> ShardedBisectResult:
+    """Sort-free distributed THRESHOLD via θ-bisection (kernels/theta_stats).
+
+    Each round every shard computes masked (count, Σdensity) statistics for
+    `fanout` candidate thresholds over its local blocks — a streamed reduction,
+    no sort, no candidate materialization — and one psum of 2·fanout floats
+    merges them fleet-wide.  This is the paper's running-threshold invariant
+    evaluated directly: wire bytes per query = rounds · 2 · fanout · 4 B
+    (vs. candidates·P·8 B for the gather-based planner)."""
+    kv = jnp.asarray(k, jnp.float32)
+
+    def body(local: jax.Array, kk: jax.Array):
+        lo = jnp.float32(0.0)
+        hi = jnp.float32(1.0 + 1e-6)
+        n_sel = jnp.int32(0)
+        exp = jnp.float32(0.0)
+        for _ in range(rounds):
+            ths = lo + (hi - lo) * (jnp.arange(fanout, dtype=jnp.float32) + 1.0) / fanout
+            m = local[None, :] >= ths[:, None]  # [T, lam_local]
+            counts = jax.lax.psum(jnp.sum(m, axis=1).astype(jnp.float32), axis)
+            recsum = jax.lax.psum(
+                jnp.sum(jnp.where(m, local[None, :], 0.0), axis=1), axis
+            )
+            ok = recsum * records_per_block >= kk
+            any_ok = jnp.any(ok)
+            idx = jnp.where(any_ok, jnp.argmax(jnp.where(ok, jnp.arange(fanout), -1)), 0)
+            n_sel = jnp.where(any_ok, counts[idx], n_sel).astype(jnp.int32)
+            exp = jnp.where(any_ok, recsum[idx] * records_per_block, exp)
+            new_lo = jnp.where(any_ok, ths[idx], lo)
+            new_hi = jnp.where(
+                any_ok & (idx < fanout - 1), ths[jnp.minimum(idx + 1, fanout - 1)], hi
+            )
+            lo, hi = new_lo, jnp.where(any_ok, new_hi, ths[0])
+        return lo, n_sel, exp
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P()), out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    theta, n_sel, exp = fn(combined_global, kv)
+    return ShardedBisectResult(theta=theta, num_selected=n_sel, expected_records=exp)
+
+
+class DistributedAnyK:
+    """Production wrapper over the SPMD planners: geometric candidate refill on
+    an insufficient THRESHOLD frontier, planner selection by shard count
+    (sort-gather below ``bisect_above`` shards, θ-bisection beyond — the wire
+    crossover measured in EXPERIMENTS.md §Perf HC-C iter 4)."""
+
+    def __init__(self, mesh: Mesh, axis="data", records_per_block: int = 8192,
+                 candidates: int = 16, max_refills: int = 4,
+                 bisect_above: int = 512):
+        self.mesh = mesh
+        self.axis = axis
+        self.rpb = records_per_block
+        self.candidates = candidates
+        self.max_refills = max_refills
+        sz = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            sz *= mesh.shape[a]
+        self.num_shards = sz
+        self.use_bisect = sz > bisect_above
+
+    def threshold_plan(self, combined_global: jax.Array, k: float):
+        if self.use_bisect:
+            return sharded_threshold_bisect(
+                combined_global, k, self.rpb, self.mesh, self.axis
+            )
+        c = self.candidates
+        for _ in range(self.max_refills):
+            r = sharded_threshold(
+                combined_global, k, self.rpb, self.mesh, self.axis, candidates=c
+            )
+            if bool(r.sufficient):
+                return r
+            c *= 2  # geometric backoff: some shard's frontier was exhausted
+        return r
+
+    def two_prong_plan(self, combined_global: jax.Array, k: float, group: int = 64):
+        return sharded_two_prong(
+            combined_global, k, self.rpb, self.mesh, self.axis, group=group
+        )
+

@@ -1,0 +1,77 @@
+"""TWO-PRONG — locality-optimal any-k block selection (paper §4.2, Algorithm 2).
+
+* :func:`two_prong_faithful` — 1:1 host port of Algorithm 2 (two-pointer walk).
+* :func:`two_prong_select` — TPU-native outcome-equivalent form: prefix sums +
+  per-start binary search (`searchsorted`) for the minimal window end, then an
+  argmin over starts.  For every start block i this computes the same "smallest
+  sequence beginning at i with ≥ k expected records" that the two-pointer walk
+  considers (Theorem 2 proof structure), so the global minimum window is identical;
+  ties resolve to the smallest start id in both.  O(λ log λ) work, O(log λ) depth —
+  the sequential walk is O(λ) work but O(λ) depth, which is the wrong trade on a
+  vector machine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def two_prong_faithful(
+    combined: np.ndarray, k: int, records_per_block: int
+) -> tuple[int, int]:
+    """Algorithm 2, line for line. Returns [start, end) of the minimal window.
+
+    Follows the paper exactly, including its guard behaviour: if fewer than k
+    valid records exist in total, the window degenerates to the initial state.
+    """
+    m = np.asarray(combined, dtype=np.float64) * records_per_block
+    lam = m.shape[0]
+    tau = 0.0
+    start = end = 0
+    min_start, min_end = 0, lam + 1  # sentinel: "no window found yet"
+    while end < lam:
+        while tau < k and end < lam:
+            tau += m[end]
+            end += 1
+        while tau >= k and start < lam:
+            if (end - start) < (min_end - min_start):
+                min_end, min_start = end, start
+            tau -= m[start]
+            start += 1
+    if min_end > lam:  # fewer than k records total: return everything (engine refills)
+        return 0, lam
+    return min_start, min_end
+
+
+class TwoProngResult(NamedTuple):
+    start: jax.Array  # [] int32 inclusive
+    end: jax.Array  # [] int32 exclusive
+    expected_records: jax.Array  # [] f32
+
+
+def two_prong_select(
+    combined: jax.Array, k: jax.Array | int, records_per_block: int
+) -> TwoProngResult:
+    """TPU-native TWO-PRONG. jit-safe."""
+    lam = combined.shape[0]
+    m = combined * records_per_block
+    c = jnp.concatenate([jnp.zeros((1,), m.dtype), jnp.cumsum(m)])  # [lam+1]
+    k = jnp.asarray(k, dtype=m.dtype)
+    # minimal end for each start: smallest e with c[e] >= c[i] + k
+    targets = c[:-1] + k
+    ends = jnp.searchsorted(c, targets, side="left").astype(jnp.int32)  # [lam]
+    starts = jnp.arange(lam, dtype=jnp.int32)
+    feasible = ends <= lam
+    lengths = jnp.where(feasible, ends - starts, jnp.iinfo(jnp.int32).max)
+    best = jnp.argmin(lengths).astype(jnp.int32)  # first occurrence == smallest start
+    any_feasible = jnp.any(feasible)
+    start = jnp.where(any_feasible, best, 0)
+    end = jnp.where(any_feasible, ends[best], lam)
+    exp = c[end] - c[start]
+    return TwoProngResult(start=start, end=end, expected_records=exp)
+
+
+two_prong_select_jit = jax.jit(two_prong_select, static_argnums=(2,))

@@ -1,0 +1,4 @@
+from repro.data.block_store import BlockStore, Table
+from repro.data.synthetic import make_clustered_table, make_real_like_table
+
+__all__ = ["BlockStore", "Table", "make_clustered_table", "make_real_like_table"]

@@ -1,0 +1,73 @@
+"""Incremental index maintenance: append records to a BlockStore without a
+full rebuild (production corpora grow; the paper assumes read-mostly data and
+builds at load time — this is the write path that keeps its invariants).
+
+Only the trailing partial block and the newly created blocks have their
+density-map columns recomputed; untouched column prefixes are reused.  The
+per-row *sorted* density maps are re-sorted (argsort over λ — O(λ log λ) per
+touched row, still ≪ a rebuild which rescans all N records).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density_map import DensityMapIndex
+from repro.data.block_store import BlockStore, Table
+
+
+def append_records(store: BlockStore, new: Table) -> BlockStore:
+    """Returns a new BlockStore with `new` rows appended (same schema)."""
+    rpb = store.records_per_block
+    old_n = store.num_records
+    dims_flat = np.concatenate([
+        np.asarray(store.dims).reshape(-1, store.dims.shape[-1])[:old_n],
+        new.dims.astype(np.int32),
+    ])
+    meas_flat = np.concatenate([
+        np.asarray(store.measures).reshape(-1, store.measures.shape[-1])[:old_n],
+        new.measures.astype(np.float32),
+    ])
+    n = dims_flat.shape[0]
+    lam_new = -(-n // rpb)
+    r, s_ = dims_flat.shape[1], meas_flat.shape[1]
+    pad = lam_new * rpb - n
+    dims_b = np.concatenate([dims_flat, np.full((pad, r), -1, np.int32)]).reshape(lam_new, rpb, r)
+    meas_b = np.concatenate([meas_flat, np.zeros((pad, s_), np.float32)]).reshape(lam_new, rpb, s_)
+    valid_b = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)]).reshape(lam_new, rpb)
+
+    # density columns: reuse untouched prefix, recompute only touched blocks
+    idx = store.index
+    old_dens = np.asarray(idx.densities)
+    first_touched = old_n // rpb  # trailing partial (or first new) block
+    dens = np.zeros((idx.vocab.num_rows, lam_new), np.float32)
+    dens[:, :first_touched] = old_dens[:, :first_touched]
+    touched = np.arange(first_touched, lam_new)
+    off = idx.vocab.attr_offsets
+    for b in touched:
+        blk = dims_b[b]
+        for attr in range(r):
+            vals, counts = np.unique(blk[:, attr], return_counts=True)
+            for v, c in zip(vals, counts):
+                if v >= 0:
+                    dens[off[attr] + v, b] = c / rpb
+    order = np.argsort(-dens, axis=1, kind="stable").astype(np.int32)
+    sdens = np.take_along_axis(dens, order, axis=1)
+    new_index = DensityMapIndex(
+        vocab=idx.vocab,
+        densities=jnp.asarray(dens),
+        sorted_block_ids=jnp.asarray(order),
+        sorted_densities=jnp.asarray(sdens),
+        records_per_block=rpb,
+        num_records=n,
+    )
+    return BlockStore(
+        dims=jnp.asarray(dims_b),
+        measures=jnp.asarray(meas_b),
+        valid_rows=jnp.asarray(valid_b),
+        index=new_index,
+        records_per_block=rpb,
+        num_records=n,
+    )

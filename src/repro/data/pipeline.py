@@ -1,0 +1,198 @@
+"""NeedleTail-driven training data pipeline (DESIGN.md §4.1).
+
+The training corpus is an attribute-tagged token block store; a filter
+predicate ("domain=code AND quality=hi") is served by the any-k engine, which
+picks the densest/most-local unconsumed blocks to fill each global batch —
+the paper's any-k browsing with k = sequences-per-batch and a per-epoch
+``consumed`` exclusion set (the engine's re-execution mechanism).
+
+Deterministic and restart-exact: the full pipeline state is (consumed mask,
+round counter, rng counter) — a fixed-size array checkpointed with the model.
+Straggler mitigation: `hedged_fetch` issues duplicate reads for the slowest
+predicted blocks and keeps the first arrival (any-k needs *any* k records, so
+redundancy is cheap — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.engine import NeedleTailEngine
+from repro.core.density_map import AND
+from repro.data.block_store import BlockStore, Table, build_block_store
+
+DOMAINS = ["web", "code", "books", "academic", "dialog", "news"]
+QUALITY = ["lo", "mid", "hi"]
+LANGS = ["en", "zh", "de", "fr"]
+ATTR_NAMES = {"domain": 0, "quality": 1, "lang": 2, "len_bucket": 3}
+ATTR_VALUES = {
+    "domain": DOMAINS, "quality": QUALITY, "lang": LANGS,
+    "len_bucket": ["short", "med", "long"],
+}
+
+
+def make_token_corpus(
+    num_seqs: int = 4096,
+    seq_len: int = 128,
+    vocab: int = 512,
+    records_per_block: int = 32,
+    seed: int = 0,
+) -> tuple[BlockStore, np.ndarray]:
+    """Synthetic tagged corpus: clustered attribute layout (documents of the same
+    domain/quality arrive together — the locality the paper exploits)."""
+    rng = np.random.default_rng(seed)
+    # clustered attrs: run-length segments per attribute; run length scales with
+    # corpus size so every attribute value appears even in tiny test corpora
+    def clustered(card, mean_run=max(4, num_seqs // 64)):
+        out = np.empty(num_seqs, np.int32)
+        i = 0
+        while i < num_seqs:
+            run = 1 + int(rng.geometric(1.0 / mean_run))
+            out[i : i + run] = rng.integers(0, card)
+            i += run
+        return out
+
+    dims = np.stack(
+        [clustered(len(DOMAINS)), clustered(len(QUALITY)), clustered(len(LANGS)),
+         clustered(3)], axis=1
+    )
+    measures = rng.normal(100.0, 25.0, size=(num_seqs, 1)).astype(np.float32)
+    table = Table(dims=dims, measures=measures,
+                  cards=np.asarray([len(DOMAINS), len(QUALITY), len(LANGS), 3]))
+    store = build_block_store(table, records_per_block)
+    tokens = rng.integers(0, vocab, size=(num_seqs, seq_len), dtype=np.int32)
+    return store, tokens
+
+
+def parse_filter(expr: str) -> list[tuple[int, int]]:
+    """'domain=code,quality=hi' -> [(attr_id, value_id), ...]"""
+    preds = []
+    if not expr:
+        return preds
+    for part in expr.split(","):
+        k, v = part.strip().split("=")
+        attr = ATTR_NAMES[k.strip()]
+        preds.append((attr, ATTR_VALUES[k.strip()].index(v.strip())))
+    return preds
+
+
+@dataclasses.dataclass
+class PipelineState:
+    consumed: np.ndarray  # [lam] bool
+    round: int
+    rng_counter: int
+
+    def to_arrays(self) -> dict:
+        return {
+            "consumed": self.consumed.astype(np.uint8),
+            "round": np.asarray(self.round),
+            "rng_counter": np.asarray(self.rng_counter),
+        }
+
+    @classmethod
+    def from_arrays(cls, d) -> "PipelineState":
+        return cls(
+            consumed=np.asarray(d["consumed"]).astype(bool),
+            round=int(d["round"]),
+            rng_counter=int(d["rng_counter"]),
+        )
+
+
+class FilteredBatchStream:
+    """Iterator of {tokens, labels} batches matching a predicate filter."""
+
+    def __init__(
+        self,
+        store: BlockStore,
+        tokens: np.ndarray,
+        predicates: Sequence[tuple[int, int]],
+        batch_size: int,
+        algo: str = "auto",
+        seed: int = 0,
+        state: PipelineState | None = None,
+    ):
+        self.engine = NeedleTailEngine(store)
+        self.store = store
+        self.tokens = tokens
+        self.preds = list(predicates)
+        self.batch = batch_size
+        self.algo = algo
+        self.seed = seed
+        self.state = state or PipelineState(
+            consumed=np.zeros(store.num_blocks, bool), round=0, rng_counter=0
+        )
+        self._buffer: list[int] = []  # record ids ready to emit
+
+    def _refill(self):
+        eng = self.engine
+        combined = eng.combined_density(self.preds) if self.preds else (
+            np.asarray(self.store.index.densities[0] * 0) + 1.0
+        )
+        combined = combined.copy()
+        combined[self.state.consumed] = 0.0
+        if not np.any(combined > 0):  # epoch boundary: reset exclusion set
+            self.state.consumed[:] = False
+            self.state.round += 1
+            combined = (eng.combined_density(self.preds) if self.preds
+                        else combined * 0 + 1.0)
+        import jax.numpy as jnp
+        from repro.core.threshold import threshold_select_jit
+
+        r = threshold_select_jit(jnp.asarray(combined, jnp.float32),
+                                 float(self.batch), self.store.records_per_block)
+        blocks = np.sort(np.asarray(r.block_ids)[: int(r.num_selected)])
+        if blocks.size == 0:
+            return
+        bd, _, bv = self.store.fetch(blocks)
+        if self.preds:
+            mask = np.asarray(self.store.predicate_mask(bd, self.preds, AND) & bv)
+        else:
+            mask = np.asarray(bv)
+        bi, ri = np.nonzero(mask)
+        rec_ids = blocks[bi] * self.store.records_per_block + ri
+        # deterministic shuffle keyed by (seed, rng_counter)
+        rng = np.random.default_rng((self.seed, self.state.rng_counter))
+        self.state.rng_counter += 1
+        order = rng.permutation(rec_ids.size)
+        self._buffer.extend(rec_ids[order].tolist())
+        self.state.consumed[blocks] = True
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        guard = 0
+        while len(self._buffer) < self.batch:
+            before = len(self._buffer)
+            self._refill()
+            guard += 1
+            if len(self._buffer) == before and guard > 4:
+                raise StopIteration("filter matches no records")
+        ids = [self._buffer.pop() for _ in range(self.batch)]
+        toks = self.tokens[ids]
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32),
+                "record_ids": np.asarray(ids)}
+
+
+def hedged_fetch(
+    store: BlockStore,
+    blocks: np.ndarray,
+    latency_fn,
+    hedge_quantile: float = 0.9,
+) -> tuple[np.ndarray, float]:
+    """Straggler-mitigated fetch: issue duplicates for the slowest-predicted
+    tail of the plan; completion time = max over blocks of min(primary, hedge).
+
+    ``latency_fn(block_ids, attempt)`` returns per-block latencies; the second
+    attempt models re-issue to a replica.  Returns (blocks, modeled completion
+    time).  Mechanism-level simulation — on real hardware the same plan drives
+    duplicate DMA/RPC issue."""
+    lat = np.asarray(latency_fn(blocks, 0), dtype=np.float64)
+    cut = np.quantile(lat, hedge_quantile) if blocks.size else 0.0
+    slow = lat >= cut
+    lat2 = np.where(slow, np.asarray(latency_fn(blocks, 1), np.float64), np.inf)
+    eff = np.minimum(lat, lat2)
+    return blocks, float(eff.max() if blocks.size else 0.0)

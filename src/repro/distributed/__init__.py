@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_specs,
+    make_rules,
+    param_specs,
+    train_state_specs,
+)
+
+__all__ = [
+    "batch_spec", "cache_specs", "make_rules", "param_specs", "train_state_specs",
+]

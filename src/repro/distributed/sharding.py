@@ -1,0 +1,216 @@
+"""Sharding rules: param / optimizer / batch / cache PartitionSpecs.
+
+Layout (DESIGN.md §5): FSDP over the data axes (and 'pod'), 1-D Megatron TP over
+'model', EP for MoE experts over 'model', SP for long sequences.
+
+Parameter rule table (path-pattern -> spec), applied to the stacked pytrees from
+``models.lm.init_params`` (leading axis of 'cycles' leaves is the scan axis and
+is never sharded):
+
+  embed [V, D]            -> (tp, dp)       vocab-TP + FSDP on D
+  lm_head [D, V]          -> (dp, tp)
+  attn wq [.., D, H, hd]  -> (dp, tp, None) heads-TP, FSDP on D
+  attn wk/wv              -> (dp, tp, None)
+  attn wo [.., H, hd, D]  -> (tp, None, dp)
+  mlp w_gate/w_up [D, F]  -> (dp, tp)
+  mlp w_down [F, D]       -> (tp, dp)
+  moe router [D, E]       -> (dp, None)
+  moe w_* [E, D, F]       -> (tp, dp, None)  expert-parallel (EP)
+  mamba w_z/w_x [D, di]   -> (dp, tp)
+  mamba w_out [di, D]     -> (tp, dp)
+  mamba small tensors     -> replicated
+  norms / biases          -> replicated
+
+Optimizer moments inherit the param specs (ZeRO: state sharded with params).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.layers import MeshRules
+
+
+def make_rules(mesh: Mesh, layout: str = "tp_sp") -> MeshRules:
+    names = mesh.axis_names
+    if layout == "fsdp":  # ZeRO-3: every axis is a data/param-shard axis
+        return MeshRules(mesh=mesh, dp=tuple(names), tp=None)
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return MeshRules(mesh=mesh, dp=dp, tp="model")
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def _fits(shape, spec: P, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if dim % _axis_size(mesh, entry) != 0:
+            return False
+    return True
+
+
+def _choose(shape, candidates: list[tuple], mesh: Mesh) -> P:
+    """First fully-divisible candidate; else first candidate with non-divisible
+    axes stripped (graceful degradation instead of a compile error)."""
+    for cand in candidates:
+        spec = P(*cand[: len(shape)])
+        if _fits(shape, spec, mesh):
+            return spec
+    cand = candidates[0][: len(shape)]
+    stripped = tuple(
+        e if shape[i] % _axis_size(mesh, e) == 0 else None for i, e in enumerate(cand)
+    )
+    return P(*stripped)
+
+
+def _spec_candidates(path: str, dp, tp) -> list[tuple]:
+    """Ordered candidate rule table (first entry = preferred layout)."""
+    stack = any(f"['{m}']" in path for m in ("cycles", "encoder", "cross"))
+    lead = (None,) if stack else ()
+
+    def c(*alts):
+        return [lead + a for a in alts]
+
+    if path.endswith("['embed']"):
+        return [(tp, dp), (None, dp), (None, None)]
+    if path.endswith("['lm_head']"):
+        return [(dp, tp), (dp, None), (None, None)]
+    if "['moe']" in path:
+        if path.endswith("['router']"):
+            return c((dp, None), (None, None))
+        if path.endswith("['w_gate']") or path.endswith("['w_up']"):
+            # EP first; fall back to TP on the expert FFN dim (grok: E=8 < |tp|)
+            return c((tp, dp, None), (None, dp, tp), (None, None, None))
+        if path.endswith("['w_down']"):
+            return c((tp, None, dp), (None, tp, dp), (None, None, None))
+    if "['attn']" in path or "shared_attn" in path or "['cross']" in path:
+        if path.endswith("['wq']") or path.endswith("['wk']") or path.endswith("['wv']"):
+            return c((dp, tp, None), (dp, None, tp), (dp, None, None), (None,) * 3)
+        if path.endswith("['wo']"):
+            return c((tp, None, dp), (None, tp, dp), (None, None, dp), (None,) * 3)
+        if path.endswith("['w_gate']") or path.endswith("['w_up']") or path.endswith("['w_in']"):
+            return c((dp, tp), (dp, None), (None, None))
+        if path.endswith("['w_down']"):
+            return c((tp, dp), (None, dp), (None, None))
+        return c((None,) * 4)
+    if "['mlp']" in path:
+        if path.endswith("['w_down']"):
+            return c((tp, dp), (None, dp), (None, None))
+        if path.endswith("['w_gate']") or path.endswith("['w_up']") or path.endswith("['w_in']"):
+            return c((dp, tp), (dp, None), (None, None))
+    if "['mamba']" in path:
+        if path.endswith("['w_z']") or path.endswith("['w_x']"):
+            return c((dp, tp), (dp, None), (None, None))
+        if path.endswith("['w_out']"):
+            return c((tp, dp), (None, dp), (None, None))
+        if path.endswith("['w_B']") or path.endswith("['w_C']") or path.endswith("['w_dt']"):
+            return c((dp, None), (None, None))
+        if path.endswith("['conv_w']"):
+            return c((None, tp), (None, None))
+        return c((None,) * 4)
+    return c((None,) * 4)
+
+
+def param_specs(params_abstract: Any, mesh: Mesh, layout: str = "tp_sp") -> Any:
+    if layout == "fsdp":
+        return _fsdp_param_specs(params_abstract, mesh)
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    tp = "model"
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        spec = _choose(leaf.shape, _spec_candidates(pstr, dp, tp), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def _fsdp_param_specs(params_abstract: Any, mesh: Mesh) -> Any:
+    """ZeRO-3: shard the first divisible non-stack dim over ALL mesh axes."""
+    axes = tuple(mesh.axis_names)
+    n_all = 1
+    for a in axes:
+        n_all *= mesh.shape[a]
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        stack = 1 if any(f"['{m}']" in pstr for m in ("cycles", "encoder", "cross")) else 0
+        spec = [None] * leaf.ndim
+        for i in range(stack, leaf.ndim):
+            if leaf.shape[i] % n_all == 0 and leaf.shape[i] >= n_all:
+                spec[i] = axes
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def train_state_specs(params_abstract: Any, mesh: Mesh, layout: str = "tp_sp"):
+    """(params, AdamWState) shardings: moments shard like params, step replicated."""
+    from repro.optim.adamw import AdamWState
+
+    ps = param_specs(params_abstract, mesh, layout)
+    return ps, AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=ps,
+        v=jax.tree.map(lambda s: s, ps),
+    )
+
+
+def batch_spec(mesh: Mesh, layout: str = "tp_sp") -> NamedSharding:
+    if layout == "fsdp":
+        return NamedSharding(mesh, P(tuple(mesh.axis_names), None))
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    return NamedSharding(mesh, P(dp, None))
+
+
+def cache_specs(cache_abstract: Any, cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """Decode-cache shardings.
+
+    Attention caches [n, B, T, Kv, hd]: batch over dp when divisible, else the
+    cache sequence dim over dp (long-context SP decode); kv heads over 'model'
+    (GSPMD pads when Kv < |model|).  Mamba states [n, B, H, ds, hd]: batch over
+    dp when divisible, heads over 'model'.
+    """
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    dp_size = 1
+    for n in dp:
+        dp_size *= mesh.shape[n]
+    batch_ok = shape.global_batch % dp_size == 0 and shape.global_batch >= dp_size
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        if "conv" in pstr:  # [n, B, cw-1, di]
+            cands = [(None, dp if batch_ok else None, None, "model"),
+                     (None, None, None, "model"), (None,) * 4]
+        elif "ssd" in pstr:  # [n, B, H, ds, hd]
+            cands = [(None, dp if batch_ok else None, "model", None, None),
+                     (None, dp if batch_ok else None, None, None, None), (None,) * 5]
+        elif nd == 5:  # attention k/v [n, B, T, Kv, hd]
+            if batch_ok:
+                cands = [(None, dp, None, "model", None),
+                         (None, dp, None, None, "model"),
+                         (None, dp, None, None, None), (None,) * 5]
+            else:
+                cands = [(None, None, dp, "model", None),
+                         (None, None, dp, None, "model"),
+                         (None, None, dp, None, None), (None,) * 5]
+        else:
+            cands = [(None,) * nd]
+        return NamedSharding(mesh, _choose(leaf.shape, cands, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)

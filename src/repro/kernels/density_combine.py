@@ -1,0 +1,78 @@
+"""Fused predicate-row gather + ⊕-combine Pallas kernel (paper §3.2).
+
+The query-time hot loop of NeedleTail is ``⊕_{j=1..γ} S_j[b]`` over all λ blocks.
+A naive implementation gathers γ rows of the ``[rows, λ]`` density tensor to HBM
+and then combines them — 2γ·λ·4 bytes of HBM traffic.  This kernel streams each
+predicate row tile HBM→VMEM exactly once and combines in-register: (γ+1)·λ·4
+bytes, the minimum possible.
+
+Grid: ``(λ_tiles, γ)`` with the predicate axis innermost, so each output tile is
+revisited γ consecutive steps (TPU-legal accumulation).  The row ids are scalar-
+prefetched and drive the input ``index_map`` — the gather costs nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE_TILE = 512  # λ-tile; multiple of the 128-lane VPU width
+
+
+def _kernel(rows_ref, dens_ref, out_ref, *, op: str, gamma: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, 1.0 if op == "and" else 0.0)
+
+    tile = dens_ref[0, :]
+    if op == "and":
+        out_ref[...] *= tile
+    else:
+        out_ref[...] += tile
+
+    if op == "or":
+
+        @pl.when(j == gamma - 1)
+        def _clip():
+            out_ref[...] = jnp.minimum(out_ref[...], 1.0)
+
+
+def density_combine(
+    densities: jax.Array,  # [rows, lam] f32
+    row_ids: jax.Array,  # [gamma] int32
+    op: str = "and",
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the combined per-block density vector ``[lam]``."""
+    rows, lam = densities.shape
+    gamma = row_ids.shape[0]
+    pad = (-lam) % LANE_TILE
+    if pad:
+        densities = jnp.pad(densities, ((0, 0), (0, pad)))
+    lam_p = lam + pad
+    grid = (lam_p // LANE_TILE, gamma)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op, gamma=gamma),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, LANE_TILE), lambda i, j, rows: (rows[j], i)
+                ),
+            ],
+            out_specs=pl.BlockSpec((LANE_TILE,), lambda i, j, rows: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((lam_p,), densities.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+    )(row_ids.astype(jnp.int32), densities)
+    return out[:lam]

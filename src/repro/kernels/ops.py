@@ -1,0 +1,88 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel body
+runs in Python on the same tiles the TPU would see, which is how correctness is
+validated.  On TPU backends they compile natively.  ``PALLAS_INTERPRET`` can
+force interpret mode explicitly.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import density_combine as _dc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_chunk as _ssd
+from repro.kernels import theta_stats as _ts
+from repro.kernels import window_scan as _ws
+
+
+def _interpret() -> bool:
+    env = os.environ.get("PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def density_combine(densities: jax.Array, row_ids: jax.Array, op: str = "and"):
+    return _dc.density_combine(densities, row_ids, op=op, interpret=_interpret())
+
+
+@jax.jit
+def prefix_sum(x: jax.Array) -> jax.Array:
+    return _ws.prefix_sum(x, interpret=_interpret())
+
+
+@jax.jit
+def theta_stats(combined: jax.Array, thetas: jax.Array):
+    return _ts.theta_stats(combined, thetas, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "fanout"))
+def threshold_bisect(
+    combined: jax.Array,
+    k: jax.Array,
+    records_per_block: int,
+    rounds: int = 3,
+    fanout: int = 16,
+) -> jax.Array:
+    """THRESHOLD via θ-bisection (paper §4.1 invariant, kernel-backed).
+
+    Returns the largest θ* such that blocks with density ≥ θ* hold ≥ k expected
+    records (θ* = 0 if even all nonzero blocks cannot).  The caller materializes
+    ``combined >= θ*`` as the selected set; it equals the sort-based THRESHOLD
+    selection up to ties at θ*.
+    """
+    k = jnp.asarray(k, jnp.float32)
+    lo = jnp.float32(0.0)
+    hi = jnp.float32(1.0) + 1e-6
+    for _ in range(rounds):
+        ths = lo + (hi - lo) * (jnp.arange(fanout, dtype=jnp.float32) + 1.0) / fanout
+        _, recsum = theta_stats(combined, ths)
+        ok = recsum * records_per_block >= k  # θ small enough to reach k
+        # largest θ that still reaches k
+        any_ok = jnp.any(ok)
+        idx = jnp.where(any_ok, jnp.argmax(jnp.where(ok, jnp.arange(fanout), -1)), 0)
+        new_lo = jnp.where(any_ok, ths[idx], lo)
+        new_hi = jnp.where(any_ok, jnp.minimum(ths[jnp.minimum(idx + 1, fanout - 1)], hi), ths[0])
+        lo, hi = new_lo, jnp.where(idx == fanout - 1, hi, new_hi)
+    return lo
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: int | None = None, scale: float | None = None,
+):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale, interpret=_interpret()
+    )
+
+
+@jax.jit
+def ssd_scan(u: jax.Array, ldecay: jax.Array, bmat: jax.Array, cmat: jax.Array):
+    return _ssd.ssd_scan(u, ldecay, bmat, cmat, interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def density_combine_ref(densities: jax.Array, row_ids: jax.Array, op: str = "and"):
+    sel = densities[row_ids]
+    if op == "and":
+        return jnp.prod(sel, axis=0)
+    return jnp.minimum(jnp.sum(sel, axis=0), 1.0)
+
+
+def prefix_sum_ref(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x.astype(jnp.float32))
+
+
+def theta_stats_ref(combined: jax.Array, thetas: jax.Array):
+    m = combined[None, :] >= thetas[:, None]
+    counts = jnp.sum(m, axis=1).astype(jnp.float32)
+    recsum = jnp.sum(jnp.where(m, combined[None, :], 0.0), axis=1)
+    return counts, recsum
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, T, D]
+    v: jax.Array,  # [B, Hkv, T, D]
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) * scale
+    t = kk.shape[2]
+    qpos = jnp.arange(s)[:, None] + (t - s)  # right-aligned positions
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(vv.dtype), vv)
+
+
+def ssd_ref(
+    u: jax.Array,  # [B, H, S, dh]   (already dt-scaled inputs: dt*x)
+    ldecay: jax.Array,  # [B, H, S]  log per-step decay: dt * A  (A < 0)
+    bmat: jax.Array,  # [B, H, S, ds]
+    cmat: jax.Array,  # [B, H, S, ds]
+    h0: jax.Array | None = None,  # [B, H, ds, dh]
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence: h_t = a_t h_{t-1} + B_t ⊗ u_t, y_t = C_t h_t."""
+    b, h, s, dh = u.shape
+    ds = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, ds, dh), jnp.float32)
+
+    def step(hprev, xs):
+        ut, at, bt, ct = xs  # [B,H,dh], [B,H], [B,H,ds], [B,H,ds]
+        a = jnp.exp(at)[..., None, None]
+        hnew = a * hprev + bt[..., :, None] * ut[..., None, :]
+        y = jnp.einsum("bhs,bhsd->bhd", ct, hnew)
+        return hnew, y
+
+    xs = (
+        jnp.moveaxis(u, 2, 0),
+        jnp.moveaxis(ldecay, 2, 0),
+        jnp.moveaxis(bmat, 2, 0),
+        jnp.moveaxis(cmat, 2, 0),
+    )
+    hfin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2), hfin  # [B,H,S,dh], [B,H,ds,dh]

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell against
+the production mesh and record memory / cost / collective statistics.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; EXPERIMENTS.md
+tables are generated from them (benchmarks/roofline.py).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_supported
+from repro.distributed.sharding import (
+    batch_spec, cache_specs, make_rules, param_specs, train_state_specs,
+)
+from repro.launch import steps as S
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_train_state, input_specs
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_stats(compiled) -> dict:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes_per_device": int(m.argument_size_in_bytes),
+        "output_bytes_per_device": int(m.output_size_in_bytes),
+        "temp_bytes_per_device": int(m.temp_size_in_bytes),
+        "alias_bytes_per_device": int(m.alias_size_in_bytes),
+        "peak_bytes_per_device": int(
+            m.argument_size_in_bytes + m.output_size_in_bytes
+            + m.temp_size_in_bytes - m.alias_size_in_bytes
+        ),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, remat: bool = True,
+             suffix: str = "", variant_kw: dict | None = None,
+             layout: str = "tp_sp") -> dict:
+    cfg = get_config(arch)
+    if layout == "auto":  # measured layout law (EXPERIMENTS.md §Perf HC-B)
+        layout = "tp_sp" if cfg.moe else "fsdp"
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        result["status"] = why
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = make_rules(mesh, layout)
+    t0 = time.time()
+    variant_kw = variant_kw or {}
+
+    if shape.kind == "train":
+        state = abstract_train_state(cfg)
+        specs = input_specs(cfg, shape)
+        st_specs = train_state_specs(state.params, mesh, layout)
+        state_shardings = S.TrainState(
+            params=st_specs[0], opt=st_specs[1], step=NamedSharding(mesh, P())
+        )
+        bspec = batch_spec(mesh, layout)
+        batch_shardings = {k: bspec if v.ndim >= 2 else NamedSharding(mesh, P())
+                           for k, v in specs.items()}
+        step = S.make_train_step(cfg, rules, remat=remat, **variant_kw)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shardings, batch_shardings),
+            out_shardings=(state_shardings, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state, specs)
+    elif shape.kind == "prefill":
+        from repro.models import abstract_params
+
+        params = abstract_params(cfg)
+        specs = input_specs(cfg, shape)
+        pspecs = param_specs(params, mesh, layout)
+        bspec = batch_spec(mesh, layout)
+        batch_shardings = {k: bspec for k in specs}
+        step = S.make_prefill_step(cfg, rules, max_seq=shape.seq_len, **variant_kw)
+        jitted = jax.jit(step, in_shardings=(pspecs, batch_shardings))
+        lowered = jitted.lower(params, specs)
+    else:  # decode
+        from repro.models import abstract_params
+
+        params = abstract_params(cfg)
+        specs = input_specs(cfg, shape)
+        pspecs = param_specs(params, mesh)
+        cspecs = cache_specs(specs["cache"], cfg, shape, mesh)
+        tok_spec = NamedSharding(mesh, P(rules.dp) if shape.global_batch > 1 else P())
+        step = S.make_decode_step(cfg, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pspecs, cspecs, tok_spec, NamedSharding(mesh, P())),
+            out_shardings=(None, cspecs),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params, specs["cache"], specs["tokens"], specs["pos"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_stats(compiled)
+    print(f"[{arch} | {shape_name} | {mesh_kind}] memory_analysis:", mem)
+    ca = compiled.cost_analysis() or {}
+    cost_raw = {k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals", "utilization")}
+    print(f"[{arch} | {shape_name} | {mesh_kind}] cost_analysis(raw):", cost_raw)
+    hlo = analyze_hlo(compiled.as_text())
+    result.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem,
+        cost_raw=cost_raw,
+        analyzer={
+            "flops_per_device": hlo.flops,
+            "hbm_bytes_per_device": hlo.hbm_bytes,
+            "collective_bytes_per_device": hlo.collective_bytes,
+            "per_collective": dict(hlo.per_collective),
+            "top_collectives": hlo.top_collectives(),
+            "warnings": hlo.warnings,
+        },
+        num_devices=mesh.devices.size,
+        remat=remat,
+        layout=layout,
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--layout", default="tp_sp", choices=["tp_sp", "fsdp", "auto"])
+    ap.add_argument("--remat-policy", default=None, choices=[None, "dots"])
+    ap.add_argument("--suffix", default="", help="artifact filename suffix (perf variants)")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (
+        [(a, s) for a in list_archs() for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}{args.suffix}"
+            path = out_dir / f"{name}.json"
+            if path.exists():
+                print(f"[skip existing] {name}")
+                continue
+            t0 = time.time()
+            try:
+                res = run_cell(arch, shape, mesh_kind,
+                               remat=(args.remat_policy or not args.no_remat),
+                               layout=args.layout)
+            except Exception as e:
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": f"FAIL: {type(e).__name__}: {e}"}
+                failures += 1
+            res["wall_s"] = round(time.time() - t0, 1)
+            path.write_text(json.dumps(res, indent=2))
+            print(f"[done] {name}: {res.get('status')} ({res['wall_s']}s)")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

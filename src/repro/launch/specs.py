@@ -1,0 +1,62 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input — the
+shannon/kernels pattern: weak-type-correct, shardable, no device allocation.
+
+The modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, phi-3-vision gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import decode as D
+from repro.models import lm as M
+from repro.optim.adamw import adamw_init
+
+
+def _stub_inputs(cfg: ArchConfig, batch: int, dtype) -> dict:
+    extra = {}
+    if cfg.family == "encdec":
+        extra["enc_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), dtype
+        )
+    if cfg.family == "vlm":
+        extra["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), dtype
+        )
+    return extra
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    """Model-input ShapeDtypeStructs for one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **_stub_inputs(cfg, b, dtype),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **_stub_inputs(cfg, b, dtype),
+        }
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: D.init_cache(cfg, batch=b, max_seq=s, dtype=dtype)
+        )
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+def abstract_train_state(cfg: ArchConfig, param_dtype=jnp.bfloat16, opt_dtype=jnp.bfloat16):
+    from repro.launch.steps import TrainState
+
+    params = M.abstract_params(cfg, param_dtype)
+    opt = jax.eval_shape(lambda p: adamw_init(p, opt_dtype), params)
+    return TrainState(params=params, opt=opt, step=jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,76 @@
+"""jit-able step functions: train_step / prefill_step / decode_step wrappers.
+
+These are the units the dry-run lowers and the trainers/servers run.  All take
+explicit cfg/rules closures so the jitted signature is pure arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode as D
+from repro.models import lm as M
+from repro.optim import adamw_update, clip_by_global_norm, warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any  # AdamWState
+    step: jax.Array
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    rules=None,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    clip: float = 1.0,
+    impl: str = "xla",
+    remat: bool = True,
+):
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_frames"] = batch["enc_frames"]
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = batch["patch_embeds"]
+
+        def loss(p):
+            return M.loss_fn(
+                p, batch["tokens"], batch["labels"], cfg, rules, impl=impl,
+                remat=remat, **kw,
+            )
+
+        lval, grads = jax.value_and_grad(loss)(state.params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = warmup_cosine(state.opt.step, peak_lr, warmup, total_steps)
+        new_params, new_opt = adamw_update(state.params, grads, state.opt, lr)
+        metrics = {"loss": lval, "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules=None, impl: str = "xla", max_seq=None):
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_frames"] = batch["enc_frames"]
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = batch["patch_embeds"]
+        return D.prefill(params, batch["tokens"], cfg, rules, impl=impl,
+                         max_seq=max_seq, **kw)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, rules=None):
+    def decode_step(params, cache, tokens, pos):
+        return D.decode_step(params, cache, tokens, pos, cfg, rules)
+
+    return decode_step

@@ -1,0 +1,7 @@
+from repro.models.decode import decode_step, init_cache, prefill
+from repro.models.lm import abstract_params, forward, init_params, loss_fn
+
+__all__ = [
+    "abstract_params", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn", "prefill",
+]

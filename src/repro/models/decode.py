@@ -1,0 +1,349 @@
+"""Serving path: KV/state caches, prefill, and single-token decode_step.
+
+Cache layout (pytree, mirrors the layer pattern):
+  'G' global attn : {k, v} of [n, B, T_max, Kv, hd]   (T_max = shape seq_len)
+  'L' SWA attn    : {k, v} of [n, B, W, Kv, hd]       ring buffer, slot = pos % W
+  'A' shared attn : as 'G' (weights shared, caches per occurrence)
+  'M' mamba2      : {conv: [n, B, cw-1, d_inner], ssd: [n, B, nh, ds, hd]}
+plus {'cross': {k, v} [n_dec, B, S_enc, Kv, hd]} for enc-dec.
+
+Ring-buffer SWA keeps the long_500k decode cache at O(window) for local layers —
+the reason gemma3 / danube3 / zamba2 are long-context-eligible (DESIGN.md §6).
+Absolute positions of ring slots are reconstructed as  abs(i) = p − ((p − i) mod W)
+so RoPE and masking stay exact.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.lm import Params, _project_cross_kv, encode, pattern_split
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> Params:
+    pat, n_cycles, rem = pattern_split(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def sub_cache(ch: str, n: int):
+        if ch == "M":
+            sc = cfg.ssm
+            return {
+                "conv": jnp.zeros((n, batch, sc.conv_width - 1, cfg.d_inner), dtype),
+                "ssd": jnp.zeros((n, batch, cfg.n_ssm_heads, sc.d_state, sc.head_dim), jnp.float32),
+            }
+        t = cfg.attn_window if (ch == "L" and cfg.attn_window) else max_seq
+        t = min(t, max_seq)
+        return {
+            "k": jnp.zeros((n, batch, t, kv, hd), dtype),
+            "v": jnp.zeros((n, batch, t, kv, hd), dtype),
+        }
+
+    cache: Params = {}
+    if n_cycles > 0:
+        cache["cycles"] = [sub_cache(ch, n_cycles) for ch in pat]
+    if rem:
+        cache["rest"] = [sub_cache(ch, 1) for ch in rem]
+    if cfg.family == "encdec":
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.enc_seq, kv, hd), dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.enc_seq, kv, hd), dtype),
+        }
+    return cache
+
+
+# ----------------------------------------------------------------------------
+# Single-token decode blocks
+# ----------------------------------------------------------------------------
+
+
+def _attn_decode(
+    x: jax.Array,  # [B, 1, D]
+    p: Params,
+    cache: dict,  # {k, v}: [B, T, Kv, hd]
+    pos: jax.Array,  # [] int32 current position
+    cfg: ArchConfig,
+    windowed: bool,
+    rules,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dhq->bshq", x, p["wk"])
+    v = jnp.einsum("bsd,dhq->bshq", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    posb = jnp.broadcast_to(pos[None], (b, 1))
+    q = L.rope(q, posb, cfg.rope_theta)
+    k = L.rope(k, posb, cfg.rope_theta)
+    t = cache["k"].shape[1]
+    slot = jnp.mod(pos, t) if windowed else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    idx = jnp.arange(t)
+    if windowed:
+        k_pos = pos - jnp.mod(pos - idx, t)  # absolute position in each ring slot
+        k_pos = jnp.where(k_pos >= 0, k_pos, -(10**9))
+    else:
+        k_pos = jnp.where(idx <= pos, idx, -(10**9))
+    k_pos = jnp.broadcast_to(k_pos[None], (b, t))
+    o = L.xla_flash_attention(
+        q, ck, cv, causal=True,
+        window=cache["k"].shape[1] if windowed else None,
+        k_positions=k_pos, q_positions=posb,
+    )
+    out = jnp.einsum("bshq,hqd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def _cross_decode(x, cp, kv_cache_row, cfg, rules):
+    hh = L.apply_norm(x, cp["norm"], cfg.norm)
+    return L.attention(
+        hh, cp["attn"], cfg, causal=False, window=None, rules=rules,
+        kv=(kv_cache_row["k"], kv_cache_row["v"]),
+    )
+
+
+def _mamba_decode(
+    x: jax.Array,  # [B, 1, D]
+    p: Params,
+    cache: dict,  # conv [B, cw-1, di], ssd [B, nh, ds, hd]
+    cfg: ArchConfig,
+) -> tuple[jax.Array, dict]:
+    sc = cfg.ssm
+    b = x.shape[0]
+    di, nh, hd, ds_ = cfg.d_inner, cfg.n_ssm_heads, sc.head_dim, sc.d_state
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])[:, 0]
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"])[:, 0]  # [B, di]
+    bvec = jnp.einsum("bd,dn->bn", x[:, 0], p["w_B"])
+    cvec = jnp.einsum("bd,dn->bn", x[:, 0], p["w_C"])
+    dt = jax.nn.softplus(jnp.einsum("bd,dh->bh", x[:, 0], p["w_dt"]) + p["dt_bias"])
+    # causal conv over ring of last cw-1 inputs + current
+    hist = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)  # [B, cw, di]
+    xc = jnp.einsum("bcd,cd->bd", hist, p["conv_w"])
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:]
+    u = xc.reshape(b, nh, hd) * dt[..., None]
+    a = -jnp.exp(p["a_log"])  # [nh]
+    decay = jnp.exp(dt * a)  # [B, nh]
+    h = cache["ssd"] * decay[..., None, None] + bvec[:, None, :, None] * u[..., None, :]
+    y = jnp.einsum("bn,bhnd->bhd", cvec, h.astype(cvec.dtype))
+    y = y.reshape(b, di) + xc * p["d_skip"]
+    out = jnp.einsum("be,ed->bd", y * jax.nn.silu(z), p["w_out"])
+    return out[:, None, :], {"conv": new_conv, "ssd": h}
+
+
+def _sub_decode(x, p, ch, cache, pos, cfg, rules, shared, cross=None):
+    if ch == "M":
+        h = L.apply_norm(x, p["norm"], cfg.norm)
+        o, new = _mamba_decode(h, p["mamba"], cache, cfg)
+        return x + o, new
+    ap = shared["attn"] if ch == "A" else p["attn"]
+    mp = shared["mlp"] if ch == "A" else None
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    o, new = _attn_decode(h, ap, cache, pos, cfg, windowed=(ch == "L"), rules=rules)
+    x = x + o
+    if cross is not None:
+        x = x + cross(x)
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    if ch == "A":
+        x = x + L.mlp(h, mp, cfg.act, rules)
+    elif cfg.moe:
+        x = x + L.moe(h, p["moe"], cfg, rules)
+    else:
+        x = x + L.mlp(h, p["mlp"], cfg.act, rules)
+    return x, new
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    tokens: jax.Array,  # [B] int32 current token
+    pos: jax.Array,  # [] int32 position being written
+    cfg: ArchConfig,
+    rules=None,
+) -> tuple[jax.Array, Params]:
+    """One decode step for the whole batch. Returns (logits [B, V], new cache)."""
+    pat, n_cycles, rem = pattern_split(cfg)
+    shared = params.get("shared_attn")
+    h = params["embed"][tokens][:, None, :] * (cfg.d_model**0.5)
+    h = L.cs(rules, h, "hidden")
+    new_cache: Params = {}
+    if n_cycles > 0:
+        def body(x, xs):
+            cyc_params, cyc_cache, idx = xs
+            outs = []
+            for i, ch in enumerate(pat):
+                cross = None
+                if cfg.family == "encdec" and ch in ("G", "L"):
+                    row = idx * len(pat) + i
+                    cp = jax.tree.map(lambda t: t[row], params["cross"])
+                    kvrow = jax.tree.map(lambda t: t[row], cache["cross"])
+                    cross = lambda xx, cp=cp, kvrow=kvrow: _cross_decode(xx, cp, kvrow, cfg, rules)
+                x, nc = _sub_decode(x, cyc_params[i], ch, cyc_cache[i], pos, cfg, rules, shared, cross)
+                outs.append(nc)
+            return x, outs
+
+        h, new_cyc = jax.lax.scan(
+            body, h,
+            (params["cycles"], cache["cycles"], jnp.arange(n_cycles, dtype=jnp.int32)),
+        )
+        new_cache["cycles"] = new_cyc
+    for i, ch in enumerate(rem):
+        sub_cache = jax.tree.map(lambda t: t[0], cache["rest"][i])
+        h, nc = _sub_decode(h, params["rest"][i], ch, sub_cache, pos, cfg, rules, shared)
+        new_cache.setdefault("rest", []).append(jax.tree.map(lambda t: t[None], nc))
+    if cfg.family == "encdec":
+        new_cache["cross"] = cache["cross"]
+    h = L.apply_norm(h, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0, : cfg.vocab]
+    return logits, new_cache
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,  # [B, S]
+    cfg: ArchConfig,
+    rules=None,
+    enc_frames: jax.Array | None = None,
+    patch_embeds: jax.Array | None = None,
+    impl: str = "xla",
+    max_seq: int | None = None,  # cache capacity (>= S; default S)
+) -> tuple[jax.Array, Params]:
+    """Full-sequence prefill: returns (last-token logits [B, V], filled cache).
+
+    Runs the training forward (flash attention, scan-over-cycles) while also
+    emitting each attention sublayer's K/V — the scan's ``ys`` collect them into
+    the stacked cache layout for free.  Caches are padded to ``max_seq`` capacity
+    ('G'/'A': full length; 'L': ring of min(window, max_seq)).
+    """
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    pat, n_cycles, rem = pattern_split(cfg)
+    shared = params.get("shared_attn")
+    h = params["embed"][tokens] * (cfg.d_model**0.5)
+    if patch_embeds is not None:
+        npat = patch_embeds.shape[1]
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h[:, npat:]], axis=1)
+    h = L.cs(rules, h, "hidden")
+    cross_kv = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, enc_frames, cfg, rules, impl=impl)
+        cross_kv = _project_cross_kv(params["cross"], enc_out, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def sub_fwd_with_kv(x, p, ch, row):
+        """Like lm._block but returns the (ring-arranged) K/V for the cache."""
+        if ch == "M":
+            hh = L.apply_norm(x, p["norm"], cfg.norm)
+            # run chunked SSD for outputs; final state via one extra scan pass
+            out = L.mamba_block(hh, p["mamba"], cfg, rules)
+            state = _mamba_final_state(hh, p["mamba"], cfg)
+            return x + out, state
+        ap = shared["attn"] if ch == "A" else p["attn"]
+        window = cfg.attn_window if ch == "L" else None
+        hh = L.apply_norm(x, p["norm1"], cfg.norm)
+        k = jnp.einsum("bsd,dhq->bshq", hh, ap["wk"])
+        v = jnp.einsum("bsd,dhq->bshq", hh, ap["wv"])
+        if cfg.qkv_bias:
+            k, v = k + ap["bk"], v + ap["bv"]
+        k = L.rope(k, positions, cfg.rope_theta)
+        x = x + L.attention(hh, ap, cfg, causal=True, window=window, rules=rules, impl=impl)
+        if cross_kv is not None and ch in ("G", "L"):
+            cp = jax.tree.map(lambda t: t[row], params["cross"])
+            kvrow = jax.tree.map(lambda t: t[row], cross_kv)
+            hh2 = L.apply_norm(x, cp["norm"], cfg.norm)
+            x = x + L.attention(hh2, cp["attn"], cfg, causal=False, window=None,
+                                rules=rules, kv=(kvrow["k"], kvrow["v"]), impl=impl)
+        hh = L.apply_norm(x, p["norm2"], cfg.norm)
+        if ch == "A":
+            x = x + L.mlp(hh, shared["mlp"], cfg.act, rules)
+        elif cfg.moe:
+            x = x + L.moe(hh, p["moe"], cfg, rules)
+        else:
+            x = x + L.mlp(hh, p["mlp"], cfg.act, rules)
+        if ch == "L" and cfg.attn_window:
+            w = min(cfg.attn_window, max_seq)
+            if w < s:
+                # ring arrangement: slot(t) = t % w for t in [s-w, s)
+                shift = (s - w) % w
+                k = jnp.roll(k[:, s - w:], shift, axis=1)
+                v = jnp.roll(v[:, s - w:], shift, axis=1)
+            elif w > s:
+                k = jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        elif max_seq > s:  # 'G'/'A': pad to full capacity
+            k = jnp.pad(k, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+        return x, {"k": k, "v": v}
+
+    new_cache: Params = {}
+    if n_cycles > 0:
+        def body(x, xs):
+            cyc_params, idx = xs
+            kvs = []
+            for i, ch in enumerate(pat):
+                row = idx * len(pat) + i if cross_kv is not None else None
+                x, kv = sub_fwd_with_kv(x, cyc_params[i], ch, row)
+                kvs.append(kv)
+            return x, kvs
+
+        h, kv_stack = jax.lax.scan(
+            body, h, (params["cycles"], jnp.arange(n_cycles, dtype=jnp.int32))
+        )
+        new_cache["cycles"] = kv_stack
+    if rem:
+        new_cache["rest"] = []
+        for i, ch in enumerate(rem):
+            row = n_cycles * len(pat) + i if cross_kv is not None else None
+            h, kv = sub_fwd_with_kv(h, params["rest"][i], ch, row)
+            new_cache["rest"].append(jax.tree.map(lambda t: t[None], kv))
+    if cfg.family == "encdec":
+        new_cache["cross"] = {
+            "k": cross_kv["k"],
+            "v": cross_kv["v"],
+        }
+    h = L.apply_norm(h, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head)[:, : cfg.vocab]
+    return logits, new_cache
+
+
+def _mamba_final_state(x, p, cfg):
+    """Final SSD + conv state after a prefill pass.
+
+    Uses the same chunked SSD as the forward pass (MXU matmuls + one state
+    carry per 128-token chunk).  The original implementation re-ran the
+    recurrence token-by-token with ``ssd_ref`` — a 32768-step sequential scan
+    whose state traffic alone put the prefill_32k memory term at ~1e4 s
+    (EXPERIMENTS.md §Perf HC-A); the chunked form is ~256 boundary updates.
+    """
+    sc = cfg.ssm
+    b, s, _ = x.shape
+    nh, hd, ds_ = cfg.n_ssm_heads, sc.head_dim, sc.d_state
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["w_dt"]) + p["dt_bias"])
+    cw = sc.conv_width
+    xp = jnp.pad(xin, ((0, 0), (cw - 1, 0), (0, 0)))
+    xc = jax.nn.silu(sum(xp[:, i : i + s, :] * p["conv_w"][i] for i in range(cw)))
+    u = jnp.moveaxis(xc.reshape(b, s, nh, hd) * dt[..., None], 2, 1)
+    a = -jnp.exp(p["a_log"])
+    ld = jnp.moveaxis(dt * a, 2, 1)
+    bh = jnp.broadcast_to(bmat[:, None], (b, nh, s, ds_))
+    ch_ = jnp.broadcast_to(cmat[:, None], (b, nh, s, ds_))
+    pad = (-s) % sc.chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ld = jnp.pad(ld, ((0, 0), (0, 0), (0, pad)))
+        bh = jnp.pad(bh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ch_ = jnp.pad(ch_, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    _, hfin = L.ssd_chunked(u, ld, bh, ch_, sc.chunk, return_state=True)
+    conv_state = xin[:, s - (cw - 1):, :]
+    return {"conv": conv_state, "ssd": hfin}

@@ -1,0 +1,373 @@
+"""Model layers: norms, RoPE, GQA/SWA attention, SwiGLU/GELU MLP, einsum-MoE
+(EP-shardable), Mamba2 (chunked SSD) — all functional (params are pytrees).
+
+Memory discipline: attention never materializes the full [S, T] score matrix —
+``xla_flash_attention`` scans KV chunks with online softmax (the pure-JAX
+counterpart of ``kernels/flash_attention.py``; the Pallas kernel is selected
+with ``impl='pallas'`` on TPU).  MoE uses the capacity-bounded einsum dispatch,
+decomposed into ``top_k`` top-1 rounds so the dispatch one-hot stays
+O(tokens·E·C₁) with C₁ = tokens/E·cf — the formulation GSPMD shards into
+expert-parallel compute without a materialized all-to-all buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# Sharding rules threaded through the model (None = single device / no mesh)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    dp: tuple[str, ...]  # batch / FSDP axes, e.g. ("pod", "data")
+    tp: str | None  # tensor axis ("model"); None = pure-FSDP layout (ZeRO-3)
+
+    def cs(self, x: jax.Array, *spec) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+    def hidden(self, x: jax.Array) -> jax.Array:
+        """[B, S, D]: batch over dp, sequence over tp (Megatron-SP residuals).
+        Pure-FSDP layout: batch over everything, no sequence sharding."""
+        if self.tp is None:
+            return self.cs(x, self.dp, None, None)
+        return self.cs(x, self.dp, self.tp, None)
+
+    def heads(self, x: jax.Array) -> jax.Array:
+        """[B, S, H, hd]: heads over tp (attention-interior layout)."""
+        if self.tp is None:
+            return self.cs(x, self.dp, None, None, None)
+        return self.cs(x, self.dp, None, self.tp, None)
+
+
+def cs(rules: MeshRules | None, x: jax.Array, kind: str) -> jax.Array:
+    if rules is None:
+        return x
+    return rules.hidden(x) if kind == "hidden" else rules.heads(x)
+
+
+# ----------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def apply_norm(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    return rms_norm(x, p["w"]) if kind == "rms" else layer_norm(x, p["w"], p["b"])
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------------
+
+
+def xla_flash_attention(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, T, Kv, hd]
+    v: jax.Array,  # [B, T, Kv, hd]
+    causal: bool,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    k_positions: jax.Array | None = None,  # [B, T] absolute pos (decode rings)
+    q_positions: jax.Array | None = None,  # [B, S]
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; never materializes [S, T]."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / (hd**0.5)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(s) + (t - s), (b, s))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    qg = q.reshape(b, s, kv, g, hd)
+    nchunks = -(-t // kv_chunk)
+    pad = nchunks * kv_chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)), constant_values=-(10**9))
+    kc = k.reshape(b, nchunks, kv_chunk, kv, hd)
+    vc = v.reshape(b, nchunks, kv_chunk, kv, hd)
+    pc = k_positions.reshape(b, nchunks, kv_chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs  # [B, C, Kv, hd], [B, C, Kv, hd], [B, C]
+        logits = jnp.einsum(
+            "bskgd,bckd->bskgc", qg, kb, preferred_element_type=jnp.float32
+        ) * scale  # [B, S, Kv, g, C]
+        mask = pb[:, None, :] >= 0  # kv padding / unwritten ring slots
+        if causal:
+            mask &= q_positions[:, :, None] >= pb[:, None, :]
+        if window is not None:
+            mask &= (q_positions[:, :, None] - pb[:, None, :]) < window
+        logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        upd = jnp.einsum(
+            "bskgc,bckd->bskgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, s, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, kv, g, hd), jnp.float32)
+    if nchunks == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (kc[:, 0], vc[:, 0], pc[:, 0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+        )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def attention(
+    x: jax.Array,  # [B, S, D]
+    p: Params,
+    cfg,
+    *,
+    causal: bool,
+    window: int | None,
+    rules: MeshRules | None,
+    kv: tuple[jax.Array, jax.Array] | None = None,  # external KV (cross-attn)
+    positions: jax.Array | None = None,
+    impl: str = "xla",
+) -> jax.Array:
+    b, s, d = x.shape
+    h, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if kv is None:
+        k = jnp.einsum("bsd,dhq->bshq", x, p["wk"])
+        v = jnp.einsum("bsd,dhq->bshq", x, p["wv"])
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        pos = positions if positions is not None else jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    else:
+        k, v = kv  # already projected+roped (encoder memory)
+    q, k, v = (cs(rules, t, "heads") for t in (q, k, v))
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        o = ops.flash_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+            causal=causal, window=window,
+        )
+        o = jnp.moveaxis(o, 1, 2)
+    else:
+        o = xla_flash_attention(q, k, v, causal=causal, window=window)
+    o = cs(rules, o, "heads")
+    out = jnp.einsum("bshq,hqd->bsd", o, p["wo"])
+    return cs(rules, out, "hidden")
+
+
+# ----------------------------------------------------------------------------
+# MLP / MoE
+# ----------------------------------------------------------------------------
+
+
+def mlp(x: jax.Array, p: Params, act: str, rules: MeshRules | None) -> jax.Array:
+    if "w_gate" in p:  # SwiGLU
+        gate = activation(jnp.einsum("bsd,df->bsf", x, p["w_gate"]), act)
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        hidden = gate * up
+    else:  # plain 2-matrix MLP (GELU archs)
+        hidden = activation(jnp.einsum("bsd,df->bsf", x, p["w_in"]), act)
+    out = jnp.einsum("bsf,fd->bsd", hidden, p["w_down"])
+    return cs(rules, out, "hidden")
+
+
+def moe(
+    x: jax.Array,  # [B, S, D]
+    p: Params,
+    cfg,
+    rules: MeshRules | None,
+) -> jax.Array:
+    """Capacity-bounded einsum MoE, decomposed into top-1 rounds (see module doc).
+
+    Groups = sequences; per-round capacity C1 = ceil(S / E · cf).  GSPMD shards
+    groups over dp and experts over tp — expert compute is fully local EP.
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    e, k_rounds = mc.num_experts, mc.top_k
+    c1 = max(int(s / e * mc.capacity_factor), 4)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, S, E]
+    topv, topi = jax.lax.top_k(probs, k_rounds)  # [B, S, K]
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    out = jnp.zeros(x.shape, jnp.float32)  # f32 combine; cast once at the end
+    for r in range(k_rounds):
+        onehot_i = jax.nn.one_hot(topi[..., r], e, dtype=jnp.int32)  # [B, S, E]
+        pos = jnp.cumsum(onehot_i, axis=1) - onehot_i  # int32 position in expert
+        keep = ((pos < c1) & (onehot_i > 0)).astype(x.dtype)
+        # dispatch one-hot [B, S, E, C1]
+        disp = keep[..., None] * jax.nn.one_hot(pos, c1, dtype=x.dtype)
+        xe = jnp.einsum("bsec,bsd->becd", disp, x)  # [B, E, C1, D]
+        if rules is not None:
+            xe = rules.cs(xe, rules.dp, rules.tp, None, None)
+        hg = activation(jnp.einsum("becd,edf->becf", xe, p["w_gate"]), cfg.act)
+        hu = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+        ye = jnp.einsum("becf,efd->becd", hg * hu, p["w_down"])
+        w = topv[..., r][..., None] * keep  # [B, S, E]
+        out = out + jnp.einsum("bsec,becd->bsd", w[..., None] * disp, ye)
+    return cs(rules, out.astype(x.dtype), "hidden")
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 (chunked SSD)
+# ----------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    u: jax.Array,  # [B, H, S, dh] (dt-scaled inputs)
+    ldecay: jax.Array,  # [B, H, S]
+    bmat: jax.Array,  # [B, H, S, ds]
+    cmat: jax.Array,  # [B, H, S, ds]
+    chunk: int,
+    return_state: bool = False,
+):
+    """Pure-JAX chunked SSD — same math as kernels/ssd_chunk.py (MXU matmuls +
+    lax.scan state carry), so the dry-run HLO reflects real SSD compute."""
+    b, h, s, dh = u.shape
+    ds_ = bmat.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    rs = lambda t: t.reshape(b, h, nc, chunk, *t.shape[3:])
+    uc, ldc, bc, cc = rs(u), rs(ldecay), rs(bmat), rs(cmat)
+    ca = jnp.cumsum(ldc, axis=-1)  # [B, H, nc, Q]
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    L = jnp.exp(ca[..., :, None] - ca[..., None, :]) * tri
+    scores = jnp.einsum("bhnts,bhnqs->bhntq", cc, bc) * L
+    y_intra = jnp.einsum("bhntq,bhnqd->bhntd", scores, uc)
+    # carried state across chunks
+    wb = jnp.exp(ca[..., -1:] - ca)[..., None] * bc  # [B,H,nc,Q,ds]
+    h_chunk = jnp.einsum("bhnqs,bhnqd->bhnsd", wb, uc)  # state injected per chunk
+    decay = jnp.exp(ca[..., -1])  # [B,H,nc]
+
+    def step(hprev, xs):
+        hc, dc = xs  # [B,H,ds,dh], [B,H]
+        hnew = dc[..., None, None] * hprev + hc
+        return hnew, hprev
+
+    hseq_init = jnp.zeros((b, h, ds_, dh), jnp.float32)
+    hfin, hprevs = jax.lax.scan(
+        step, hseq_init, (jnp.moveaxis(h_chunk, 2, 0), jnp.moveaxis(decay, 2, 0))
+    )  # hprevs[n] = state before chunk n; hfin = state after the last chunk
+    hprevs = jnp.moveaxis(hprevs, 0, 2)  # [B,H,nc,ds,dh]
+    y_inter = jnp.exp(ca)[..., None] * jnp.einsum(
+        "bhnts,bhnsd->bhntd", cc, hprevs
+    )
+    y = (y_intra + y_inter).reshape(b, h, s, dh)
+    if return_state:
+        return y.astype(u.dtype), hfin
+    return y.astype(u.dtype)
+
+
+def mamba_block(
+    x: jax.Array,  # [B, S, D]
+    p: Params,
+    cfg,
+    rules: MeshRules | None,
+    impl: str = "xla",
+) -> jax.Array:
+    sc = cfg.ssm
+    b, s, d = x.shape
+    di, ds_, nh = cfg.d_inner, sc.d_state, cfg.n_ssm_heads
+    hd = sc.head_dim
+    # input projections: x -> (z gate, xin, B, C, dt)
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["w_B"])  # [B,S,ds]
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]) + p["dt_bias"]
+    )  # [B,S,nh]
+    # causal depthwise conv on xin (width cw)
+    cw = sc.conv_width
+    xp = jnp.pad(xin, ((0, 0), (cw - 1, 0), (0, 0)))
+    xc = sum(
+        xp[:, i : i + s, :] * p["conv_w"][i] for i in range(cw)
+    )
+    xc = jax.nn.silu(xc)
+    # heads
+    u = xc.reshape(b, s, nh, hd)
+    a = -jnp.exp(p["a_log"])  # [nh], negative decay rates
+    ld = (dt * a).transpose(0, 2, 1)  # [B, nh, S]
+    uh = jnp.moveaxis(u * dt[..., None], 2, 1)  # [B, nh, S, hd] dt-scaled
+    bh = jnp.broadcast_to(bmat[:, None], (b, nh, s, ds_))
+    ch = jnp.broadcast_to(cmat[:, None], (b, nh, s, ds_))
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        pad = (-s) % sc.chunk
+        if pad:
+            uh = jnp.pad(uh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ld = jnp.pad(ld, ((0, 0), (0, 0), (0, pad)))
+            bh = jnp.pad(bh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ch = jnp.pad(ch, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        y = ops.ssd_scan(uh, ld, bh, ch)[:, :, :s]
+    else:
+        pad = (-s) % sc.chunk
+        if pad:
+            uh = jnp.pad(uh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ld = jnp.pad(ld, ((0, 0), (0, 0), (0, pad)))
+            bh = jnp.pad(bh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ch = jnp.pad(ch, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        y = ssd_chunked(uh, ld, bh, ch, sc.chunk)[:, :, :s]
+    y = jnp.moveaxis(y, 1, 2).reshape(b, s, di)
+    if "d_skip" in p:
+        y = y + xc * p["d_skip"].reshape(1, 1, -1)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z), p["w_out"])
+    return cs(rules, out, "hidden")

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "warmup_cosine",
+]

@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 uniform quantization with per-tensor scale and an error-feedback residual
+(Seide et al. / Karimireddy et al.): the quantization error is carried into the
+next step, so compression is unbiased over time and convergence matches fp32
+to first order.  Wire savings: 4 bytes -> 1 byte per gradient element on the
+data-parallel all-reduce.
+
+Usage at scale: quantize per-shard -> all_to_all/reduce int8 -> dequantize.
+The reference trainer wires it through ``shard_map`` when ``--compress-grads``
+is set (examples/train_lm.py); unit tests prove the error-feedback invariant.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: Any  # pytree of f32 residuals, shaped like grads
+
+
+def compress_init(grads_abstract: Any) -> CompressState:
+    return CompressState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_abstract)
+    )
+
+
+def quantize(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g+err -> (int8 q, scale, new_err) with round-to-nearest."""
+    corrected = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_err = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(
+    grads: Any, state: CompressState
+) -> tuple[Any, CompressState]:
+    """Quantize every gradient leaf; returns ((q, scale) pytree, new state)."""
+    flat, treedef = jax.tree.flatten(grads)
+    err_flat = treedef.flatten_up_to(state.error)
+    qs, errs = [], []
+    for g, e in zip(flat, err_flat):
+        q, s, ne = quantize(g, e)
+        qs.append((q, s))
+        errs.append(ne)
+    return (
+        jax.tree.unflatten(treedef, qs),
+        CompressState(error=jax.tree.unflatten(treedef, errs)),
+    )
+
+
+def decompress_grads(qgrads: Any) -> Any:
+    def is_leaf(x):
+        return isinstance(x, tuple) and len(x) == 2
+
+    return jax.tree.map(
+        lambda qs: dequantize(qs[0], qs[1]), qgrads, is_leaf=is_leaf
+    )

@@ -1,0 +1,123 @@
+"""Wave-batched serving engine over prefill + decode_step.
+
+Requests are drained from the admission queue in waves of ``max_slots``:
+each wave's prompts are left-padded to a common length (BOS padding), prefilled
+as one batch, then decoded in lock-step — one jitted decode_step per tick for
+the whole wave.  Batch rows are independent, so finished rows simply stop
+sampling (their KV writes are self-consistent garbage that cannot leak across
+rows).  This is the static/wave variant of continuous batching: the scheduling
+layer is real (queue, waves, per-request lengths/EOS), while the position
+counter stays scalar — the shape the multi-pod decode dry-run lowers.
+
+The NeedleTail tie-in: :meth:`select_exemplars` retrieves k cached exemplars
+matching request predicates through the any-k engine (few-shot selection
+without scanning the exemplar store).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode as D
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [P] int32
+    max_new_tokens: int = 32
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        max_slots: int = 4,
+        max_seq: int = 256,
+        eos_id: int | None = None,
+        pad_id: int = 0,
+        rules=None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.rules = rules
+        self.queue: deque[Request] = deque()
+        self._rid = itertools.count()
+        self._decode = jax.jit(
+            lambda p, c, t, pos: D.decode_step(p, c, t, pos, cfg, rules)
+        )
+        self._prefill = jax.jit(
+            lambda p, toks: D.prefill(p, toks, cfg, rules, max_seq=max_seq)
+        )
+
+    def submit(self, prompt, max_new_tokens: int = 32) -> Request:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    def _next_wave(self) -> list[Request]:
+        wave = []
+        while self.queue and len(wave) < self.max_slots:
+            wave.append(self.queue.popleft())
+        return wave
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        n = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.full((self.max_slots, plen), self.pad_id, np.int32)
+        for b, r in enumerate(wave):  # left-pad to align last prompt token
+            toks[b, plen - len(r.prompt):] = r.prompt
+        last, cache = self._prefill(self.params, jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(last, axis=-1))
+        for b, r in enumerate(wave):
+            r.out_tokens.append(int(nxt[b]))
+        pos = plen
+        active = set(range(n))
+        while active and pos < self.max_seq - 1:
+            cur = np.full(self.max_slots, self.pad_id, np.int32)
+            for b in active:
+                cur[b] = wave[b].out_tokens[-1]
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(cur), jnp.int32(pos)
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            pos += 1
+            for b in list(active):
+                r = wave[b]
+                tok = int(nxt[b])
+                r.out_tokens.append(tok)
+                if (self.eos_id is not None and tok == self.eos_id) or len(
+                    r.out_tokens
+                ) >= r.max_new_tokens:
+                    r.done = True
+                    active.discard(b)
+        for r in wave:
+            r.done = True
+
+    def run_until_drained(self) -> list[Request]:
+        done = []
+        while self.queue:
+            wave = self._next_wave()
+            self._run_wave(wave)
+            done.extend(wave)
+        return done
+
+    # ------------------------------------------------ NeedleTail integration
+    @staticmethod
+    def select_exemplars(engine, predicates, k: int):
+        """any-k retrieval of k cached exemplars matching request predicates."""
+        return engine.any_k(predicates, k=k, algo="auto")

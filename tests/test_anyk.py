@@ -1,0 +1,151 @@
+"""Any-k algorithms: faithful ports vs TPU-vectorized forms + optimality
+properties (paper §4, Theorems 1-3)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import make_cost_model
+from repro.core.density_map import combine_densities_np
+from repro.core.forward_optimal import forward_optimal_faithful, forward_optimal_scan
+from repro.core.threshold import threshold_faithful, threshold_select
+from repro.core.two_prong import two_prong_faithful, two_prong_select
+
+RPB = 20
+
+
+def _densities(seed, lam=64, rows=4):
+    rng = np.random.default_rng(seed)
+    d = rng.random((rows, lam)).astype(np.float32)
+    d[rng.random((rows, lam)) < 0.4] = 0.0
+    return d
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 7, 50, 400, 10_000]))
+def test_threshold_vectorized_equals_faithful(seed, k):
+    dens = _densities(seed)
+    rows = np.asarray([0, 2], np.int32)
+    comb = combine_densities_np(dens, rows)
+    faithful = threshold_faithful(dens, rows, k, RPB)
+    r = threshold_select(jnp.asarray(comb), float(k), RPB)
+    vect = np.asarray(r.block_ids)[: int(r.num_selected)].tolist()
+    assert set(faithful) == set(vect)
+    # and both orderings are density-descending
+    assert all(comb[a] >= comb[b] - 1e-6 for a, b in zip(vect, vect[1:]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 13, 100, 900]))
+def test_threshold_density_optimality(seed, k):
+    """Theorem 1: selected set = densest blocks with >= k expected records."""
+    dens = _densities(seed)
+    comb = combine_densities_np(dens, np.asarray([1, 3]))
+    r = threshold_select(jnp.asarray(comb), float(k), RPB)
+    n = int(r.num_selected)
+    sel = np.asarray(r.block_ids)[:n]
+    unsel = np.setdiff1d(np.arange(comb.shape[0]), sel)
+    if n:
+        # every selected block at least as dense as every unselected one
+        assert comb[sel].min() >= (comb[unsel].max() if unsel.size else 0.0) - 1e-6
+        # minimality: dropping the least dense selected block goes below k
+        if float(r.expected_records) >= k:
+            assert (comb[sel].sum() - comb[sel].min()) * RPB < k
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 13, 100, 900]))
+def test_two_prong_vectorized_equals_faithful(seed, k):
+    dens = _densities(seed)
+    comb = combine_densities_np(dens, np.asarray([0, 1]))
+    fs, fe = two_prong_faithful(comb, k, RPB)
+    r = two_prong_select(jnp.asarray(comb), float(k), RPB)
+    vs, ve = int(r.start), int(r.end)
+    assert (vs, ve) == (fs, fe)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_two_prong_locality_optimality(seed):
+    """Theorem 2: no shorter window holds >= k expected records (brute force)."""
+    dens = _densities(seed, lam=32)
+    comb = combine_densities_np(dens, np.asarray([0]))
+    k = max(int(comb.sum() * RPB * 0.3), 1)
+    r = two_prong_select(jnp.asarray(comb), float(k), RPB)
+    vs, ve = int(r.start), int(r.end)
+    got = comb[vs:ve].sum() * RPB
+    if got >= k:  # feasible instance
+        best = ve - vs
+        c = np.concatenate([[0.0], np.cumsum(comb)]) * RPB
+        for s in range(32):
+            for e in range(s + 1, 33):
+                if c[e] - c[s] >= k:
+                    assert e - s >= best
+                    break
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_forward_optimal_brute_force(seed):
+    """Theorem 3 on tiny instances: DP cost == exhaustive-search cost."""
+    import itertools
+
+    rng = np.random.default_rng(seed)
+    lam, k = 8, 6
+    cm = dataclasses.replace(make_cost_model("hdd"), max_dist=3)
+    comb = np.where(rng.random(lam) < 0.6, rng.random(lam) * 0.5, 0.0).astype(np.float32)
+    s_blk = np.clip(np.rint(comb * 10), 0, k)
+    sel, cost = forward_optimal_faithful(comb, k, 10, cm)
+    if not np.isfinite(cost):
+        return
+    best = np.inf
+    for r in range(1, lam + 1):
+        for subset in itertools.combinations(range(lam), r):
+            if s_blk[list(subset)].sum() >= k:
+                best = min(best, cm.io_time(list(subset)))
+    assert cost == pytest.approx(best, rel=1e-6)
+    # scan DP agrees with the faithful DP
+    r2 = forward_optimal_scan(jnp.asarray(comb), k, 10, cm)
+    assert float(r2.opt_cost) == pytest.approx(cost, rel=1e-4)
+
+
+def test_engine_returns_only_valid_records():
+    from repro.core.engine import NeedleTailEngine
+    from repro.data.block_store import build_block_store
+    from repro.data.synthetic import make_clustered_table
+
+    t = make_clustered_table(num_records=20_000, num_dims=4, density=0.15, seed=2)
+    store = build_block_store(t, records_per_block=100)
+    eng = NeedleTailEngine(store)
+    preds = [(0, 1), (2, 1)]
+    for algo in ("threshold", "two_prong", "auto"):
+        r = eng.any_k(preds, k=300, algo=algo)
+        dims = np.asarray(store.dims)
+        for b, row in zip(r.record_block, r.record_row):
+            assert dims[b, row, 0] == 1 and dims[b, row, 2] == 1
+        want = min(300, int(t.valid_mask(preds).sum()))
+        assert r.num_records >= want  # engine refills until satisfied
+
+
+def test_engine_refill_on_underdelivery():
+    """Density-estimate overconfidence must trigger re-execution (§4.1)."""
+    from repro.core.engine import NeedleTailEngine
+    from repro.data.block_store import Table, build_block_store
+
+    # adversarial: A0=1 and A1=1 never co-occur in dense blocks, only in a few
+    rng = np.random.default_rng(0)
+    n = 4000
+    a0 = np.zeros(n, np.int32)
+    a1 = np.zeros(n, np.int32)
+    a0[:2000] = 1  # first half
+    a1[1000:3000] = 1  # middle: overlap region 1000-2000 only
+    dims = np.stack([a0, a1], axis=1)
+    t = Table(dims=dims, measures=rng.normal(size=(n, 1)).astype(np.float32),
+              cards=np.asarray([2, 2]))
+    store = build_block_store(t, records_per_block=100)
+    eng = NeedleTailEngine(store)
+    r = eng.any_k([(0, 1), (1, 1)], k=900, algo="threshold")
+    assert r.num_records >= 900

@@ -1,0 +1,72 @@
+"""Baselines: bitmap index, EWAH compression, lossy bitmap, disk scan."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines import (
+    bitmap_scan, build_bitmap_index, build_ewah_index, build_lossy_bitmap,
+    disk_scan, ewah_compress, ewah_decompress, ewah_scan, lossy_bitmap_scan,
+)
+from repro.core.density_map import build_density_maps
+
+
+def _dims(seed, n=2000, cards=(2, 3)):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, c, n) for c in cards], axis=1).astype(np.int32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=0, max_size=200))
+def test_ewah_roundtrip(words):
+    w = np.asarray(words, dtype=np.uint64)
+    comp = ewah_compress(w)
+    out = ewah_decompress(comp, len(w))
+    np.testing.assert_array_equal(out, w)
+
+
+def test_ewah_compresses_runs():
+    w = np.zeros(10_000, np.uint64)
+    w[5000:5004] = 12345
+    comp = ewah_compress(w)
+    assert comp.size < 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 17, 200]))
+def test_bitmap_scan_first_k_matches_numpy(seed, k):
+    dims = _dims(seed)
+    idx = build_bitmap_index(dims, [2, 3])
+    preds = [(0, 1), (1, 2)]
+    recs, blocks = bitmap_scan(idx, preds, k, records_per_block=64)
+    truth = np.nonzero((dims[:, 0] == 1) & (dims[:, 1] == 2))[0][:k]
+    np.testing.assert_array_equal(recs, truth)
+    np.testing.assert_array_equal(blocks, np.unique(truth // 64))
+
+
+def test_ewah_scan_equals_bitmap_scan():
+    dims = _dims(3)
+    idx = build_bitmap_index(dims, [2, 3])
+    eidx = build_ewah_index(idx)
+    r1, b1 = bitmap_scan(idx, [(0, 0)], 50, 64)
+    r2, b2 = ewah_scan(eidx, [(0, 0)], 50, 64)
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(b1, b2)
+
+
+def test_lossy_bitmap_is_superset_of_dense_blocks():
+    dims = _dims(4)
+    dm = build_density_maps(dims, [2, 3], records_per_block=64)
+    lossy = build_lossy_bitmap(np.asarray(dm.densities), dm.vocab.attr_offsets)
+    cand = lossy_bitmap_scan(lossy, [(0, 1), (1, 1)])
+    truth_mask = (dims[:, 0] == 1) & (dims[:, 1] == 1)
+    truth_blocks = np.unique(np.nonzero(truth_mask)[0] // 64)
+    assert set(truth_blocks) <= set(cand.tolist())  # no false negatives
+
+
+def test_disk_scan_reads_prefix_blocks():
+    dims = _dims(5)
+    mask = (dims[:, 0] == 1) & (dims[:, 1] == 0)
+    recs, blocks = disk_scan(mask, 20, records_per_block=64)
+    assert len(recs) == min(20, mask.sum())
+    np.testing.assert_array_equal(blocks, np.arange(blocks[-1] + 1))
+    assert recs[-1] // 64 == blocks[-1]

@@ -1,0 +1,79 @@
+"""DensityMap index: build, combine, estimates (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.density_map import (
+    AND, OR, build_density_maps, combine_densities, combine_densities_np,
+    estimated_valid_records,
+)
+
+
+def _table(n, r, cards, seed):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, c, n) for c in cards], axis=1).astype(np.int32)
+
+
+def test_density_values_exact():
+    dims = _table(1000, 3, [2, 4, 8], 0)
+    idx = build_density_maps(dims, [2, 4, 8], records_per_block=100)
+    lam = idx.num_blocks
+    assert lam == 10
+    dens = np.asarray(idx.densities)
+    for attr, card in enumerate([2, 4, 8]):
+        for v in range(card):
+            row = idx.vocab.row(attr, v)
+            for b in range(lam):
+                blk = dims[b * 100:(b + 1) * 100, attr]
+                assert dens[row, b] == pytest.approx((blk == v).mean())
+
+
+def test_sorted_maps_are_descending():
+    dims = _table(512, 2, [3, 5], 1)
+    idx = build_density_maps(dims, [3, 5], records_per_block=64)
+    sd = np.asarray(idx.sorted_densities)
+    assert np.all(np.diff(sd, axis=1) <= 1e-9)
+    # sorted ids index into the same densities
+    dens = np.asarray(idx.densities)
+    ids = np.asarray(idx.sorted_block_ids)
+    for r in range(dens.shape[0]):
+        assert np.allclose(dens[r, ids[r]], sd[r])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_combine_and_or_match_numpy(seed):
+    dims = _table(400, 3, [2, 3, 4], seed)
+    idx = build_density_maps(dims, [2, 3, 4], records_per_block=50)
+    rows = idx.vocab.rows([(0, 1), (2, 2)])
+    for op in (AND, OR):
+        a = np.asarray(combine_densities(idx.densities, rows, op))
+        b = combine_densities_np(np.asarray(idx.densities), rows, op)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_or_combination_never_exceeds_one():
+    dims = np.ones((100, 2), np.int32)
+    idx = build_density_maps(dims, [2, 2], records_per_block=10)
+    rows = idx.vocab.rows([(0, 1), (1, 1)])
+    comb = np.asarray(combine_densities(idx.densities, rows, OR))
+    assert np.all(comb <= 1.0)
+
+
+def test_estimated_valid_records_exact_for_single_predicate():
+    dims = _table(1000, 2, [2, 2], 3)
+    idx = build_density_maps(dims, [2, 2], records_per_block=100)
+    rows = idx.vocab.rows([(0, 1)])
+    comb = combine_densities(idx.densities, rows, AND)
+    est = float(estimated_valid_records(idx, comb))
+    assert est == pytest.approx((dims[:, 0] == 1).sum())
+
+
+def test_padding_never_matches():
+    dims = _table(95, 1, [2], 4)  # last block padded with 5 records
+    idx = build_density_maps(dims, [2], records_per_block=10)
+    dens = np.asarray(idx.densities)
+    # density of last block computed over records_per_block (padding counts as miss)
+    last = dims[90:, 0]
+    assert dens[idx.vocab.row(0, 1), 9] == pytest.approx((last == 1).sum() / 10)

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(0, 1, shape) * scale).astype(dtype))
+
+
+@pytest.mark.parametrize("rows,lam", [(4, 100), (16, 513), (64, 2048)])
+@pytest.mark.parametrize("gamma", [1, 2, 5])
+@pytest.mark.parametrize("op", ["and", "or"])
+def test_density_combine_sweep(rows, lam, gamma, op):
+    dens = jnp.asarray(RNG.random((rows, lam)).astype(np.float32))
+    rids = jnp.asarray(RNG.integers(0, rows, gamma), jnp.int32)
+    out = ops.density_combine(dens, rids, op=op)
+    expect = ref.density_combine_ref(dens, rids, op=op)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 5000])
+def test_prefix_sum_sweep(n):
+    x = jnp.asarray(RNG.random(n).astype(np.float32))
+    np.testing.assert_allclose(
+        ops.prefix_sum(x), ref.prefix_sum_ref(x), rtol=1e-4, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("lam,T", [(100, 8), (4096, 16), (10_000, 32)])
+def test_theta_stats_sweep(lam, T):
+    comb = jnp.asarray((RNG.random(lam) * (RNG.random(lam) < 0.4)).astype(np.float32))
+    ths = jnp.asarray(np.linspace(0.01, 0.95, T).astype(np.float32))
+    c1, r1 = ops.theta_stats(comb, ths)
+    c2, r2 = ref.theta_stats_ref(comb, ths)
+    np.testing.assert_allclose(c1, c2)
+    np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-3)
+
+
+def test_threshold_bisect_matches_sort_selection():
+    from repro.core.threshold import threshold_select
+
+    comb = jnp.asarray((RNG.random(5000) * (RNG.random(5000) < 0.3)).astype(np.float32))
+    for k in (10.0, 200.0, 3000.0):
+        theta = ops.threshold_bisect(comb, k, 10)
+        n_bisect = int(jnp.sum(comb >= theta))
+        n_sort = int(threshold_select(comb, k, 10).num_selected)
+        assert abs(n_bisect - n_sort) <= max(2, 0.01 * n_sort)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,t,causal,win",
+    [
+        (1, 2, 1, 128, 128, True, None),
+        (2, 4, 4, 100, 100, True, None),   # padding
+        (1, 4, 2, 128, 256, True, None),   # decode-style (q shorter, right-aligned)
+        (1, 2, 1, 200, 200, True, 64),     # sliding window
+        (1, 2, 2, 64, 192, False, None),   # cross-attention
+    ],
+)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, t, causal, win, dtype):
+    q, k, v = _arr((b, hq, s, 128), dtype), _arr((b, hkv, t, 128), dtype), _arr((b, hkv, t, 128), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=win)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-3 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("b,h,s,dh,ds", [(1, 1, 128, 32, 16), (2, 3, 256, 64, 32)])
+def test_ssd_scan_sweep(b, h, s, dh, ds):
+    u = _arr((b, h, s, dh), scale=0.1)
+    ld = -jnp.abs(_arr((b, h, s), scale=0.1))
+    bm, cm = _arr((b, h, s, ds), scale=0.3), _arr((b, h, s, ds), scale=0.3)
+    y = ops.ssd_scan(u, ld, bm, cm)
+    yref, _ = ref.ssd_ref(u, ld, bm, cm)
+    np.testing.assert_allclose(y, yref, atol=2e-3, rtol=1e-2)
+
+
+def test_ssd_chunked_matches_ref_and_returns_state():
+    from repro.models.layers import ssd_chunked
+
+    b, h, s, dh, ds = 1, 2, 256, 32, 16
+    u = _arr((b, h, s, dh), scale=0.1)
+    ld = -jnp.abs(_arr((b, h, s), scale=0.1))
+    bm, cm = _arr((b, h, s, ds), scale=0.3), _arr((b, h, s, ds), scale=0.3)
+    y, hfin = ssd_chunked(u, ld, bm, cm, 128, return_state=True)
+    yref, href = ref.ssd_ref(u, ld, bm, cm)
+    np.testing.assert_allclose(y, yref, atol=2e-3, rtol=1e-2)
+    np.testing.assert_allclose(hfin, href, atol=2e-3, rtol=1e-2)

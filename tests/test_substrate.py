@@ -1,0 +1,206 @@
+"""Substrate: checkpointing (atomicity/keep-k/resume), data pipeline
+(filter correctness, determinism, epoch reset, hedged fetch), optimizer,
+cost model, serving engine."""
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.core.cost_model import fit_cost_curve, make_cost_model, profile_and_fit
+from repro.data.pipeline import (
+    FilteredBatchStream, PipelineState, hedged_fetch, make_token_corpus, parse_filter,
+)
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+from repro.optim.compress import compress_grads, compress_init, decompress_grads
+
+# ---------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.int32)}}
+    for step in (1, 2, 3):
+        mgr.save(step, state, extra={"tag": step})
+    assert latest_step(tmp_path) == 3
+    kept = sorted(p.name for p in tmp_path.iterdir() if p.name.startswith("step_"))
+    assert kept == ["step_2", "step_3"]  # keep-k pruning
+    abstract = jax.eval_shape(lambda: state)
+    restored, step = mgr.restore(abstract)
+    assert step == 3
+    np.testing.assert_array_equal(restored["a"], state["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], state["b"]["c"])
+
+
+def test_checkpoint_partial_save_is_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    state = {"x": jnp.zeros(3)}
+    mgr.save(5, state)
+    # simulate a crash mid-save: uncommitted dir
+    bad = tmp_path / "step_9"
+    bad.mkdir()
+    (bad / "meta.json").write_text("{}")
+    assert latest_step(tmp_path) == 5  # sentinel missing -> ignored
+    CheckpointManager(tmp_path)  # re-init garbage-collects it
+    assert not bad.exists()
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"x": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+# ------------------------------------------------------------------ pipeline
+
+
+def test_filtered_stream_only_matching_records():
+    store, tokens = make_token_corpus(num_seqs=512, seq_len=32, seed=1)
+    preds = parse_filter("domain=code")
+    stream = FilteredBatchStream(store, tokens, preds, batch_size=8, seed=0)
+    dims = np.asarray(store.dims).reshape(-1, store.dims.shape[-1])
+    for _ in range(4):
+        b = next(stream)
+        assert b["tokens"].shape == (8, 31)
+        assert np.all(dims[b["record_ids"], 0] == 1)  # domain == code
+
+
+def test_filtered_stream_restart_exact():
+    store, tokens = make_token_corpus(num_seqs=512, seq_len=32, seed=1)
+    preds = parse_filter("quality=hi")
+    s1 = FilteredBatchStream(store, tokens, preds, batch_size=8, seed=0)
+    ids = [next(s1)["record_ids"] for _ in range(3)]
+    snapshot = PipelineState(
+        consumed=s1.state.consumed.copy(), round=s1.state.round,
+        rng_counter=s1.state.rng_counter,
+    )
+    buffered = list(s1._buffer)
+    after = [next(s1)["record_ids"] for _ in range(2)]
+    # restart from snapshot (as the checkpoint would)
+    s2 = FilteredBatchStream(store, tokens, preds, batch_size=8, seed=0, state=snapshot)
+    s2._buffer = buffered
+    after2 = [next(s2)["record_ids"] for _ in range(2)]
+    for a, b in zip(after, after2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_filtered_stream_epoch_reset():
+    store, tokens = make_token_corpus(num_seqs=128, seq_len=16, seed=2)
+    preds = parse_filter("lang=zh")
+    stream = FilteredBatchStream(store, tokens, preds, batch_size=4, seed=0)
+    n_match = int((np.asarray(store.dims).reshape(-1, 4)[:, 2] == 1).sum())
+    draws = 0
+    for _ in range(max(n_match // 4 * 2, 8)):  # force >1 epoch
+        next(stream)
+        draws += 4
+    assert stream.state.round >= 1  # exclusion set was reset at least once
+
+
+def test_hedged_fetch_bounds_stragglers():
+    store, _ = make_token_corpus(num_seqs=256, seq_len=16, seed=3)
+    blocks = np.arange(8)
+    rng = np.random.default_rng(0)
+
+    def latency(ids, attempt):
+        base = np.full(len(ids), 1.0)
+        if attempt == 0:
+            base[3] = 50.0  # one straggler
+        return base + rng.random(len(ids)) * 0.1
+
+    _, t = hedged_fetch(store, blocks, latency, hedge_quantile=0.8)
+    assert t < 5.0  # straggler replaced by its hedge
+
+
+# ----------------------------------------------------------------- optimizer
+
+
+def test_adamw_descends_quadratic():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw_init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, st = adamw_update(p, g, st, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(p["w"]).max()) < 0.3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, 1e-3, 10, 100)) == 0.0
+    assert float(warmup_cosine(10, 1e-3, 10, 100)) == pytest.approx(1e-3)
+    assert float(warmup_cosine(100, 1e-3, 10, 100)) == pytest.approx(1e-4, rel=0.01)
+
+
+def test_gradient_compression_error_feedback():
+    """Accumulated dequantized grads converge to accumulated true grads."""
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))}
+    st = compress_init(g_true)
+    acc_q = np.zeros(256)
+    steps = 50
+    for _ in range(steps):
+        q, st = compress_grads(g_true, st)
+        acc_q += np.asarray(decompress_grads(q)["w"])
+    rel = np.abs(acc_q / steps - np.asarray(g_true["w"])).max()
+    assert rel < 0.01  # error feedback keeps long-run average unbiased
+
+
+# ----------------------------------------------------------------- cost model
+
+
+def test_fit_cost_curve_recovers_families():
+    x = np.arange(1, 40, dtype=np.float64)
+    name, fn, r2 = fit_cost_curve(x, 3.0 * x + 2.0)
+    assert name == "linear" and r2 > 0.999
+    name, fn, r2 = fit_cost_curve(x, 2.0 * np.log(x) + 1.0)
+    assert name == "logarithmic" and r2 > 0.999
+
+
+def test_profile_and_fit_and_io_time():
+    cm = profile_and_fit(
+        sample_times=lambda d: 1e-3 + d * 1e-4, max_dist=32, far_cost=7e-3,
+        seq_cost=1e-3, first_block_cost=7e-3,
+    )
+    assert cm.io_time([5]) == pytest.approx(7e-3)
+    seq = cm.io_time([1, 2, 3, 4])
+    spread = cm.io_time([1, 100, 200, 300])
+    assert spread > seq  # seeks cost more
+    hdd = make_cost_model("hdd")
+    assert hdd.rand_io(0, 1) < hdd.rand_io(0, 1000)
+
+
+# ------------------------------------------------------------------- serving
+
+
+def test_serve_engine_matches_manual_greedy():
+    from repro.configs import get_config, reduced
+    from repro.models import decode_step, init_params, prefill
+    from repro.serving import ServeEngine
+
+    cfg = reduced(get_config("qwen1.5-4b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(5, dtype=np.int32) + 7
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=32)
+    eng.submit(prompt, max_new_tokens=6)
+    done = eng.run_until_drained()
+    got = done[0].out_tokens
+    # manual greedy loop, batch=1... but the engine pads batch to max_slots;
+    # rows are independent so results must match a batch-1 run
+    last, cache = prefill(params, jnp.asarray(prompt)[None], cfg, max_seq=32)
+    want = [int(jnp.argmax(last[0]))]
+    pos = len(prompt)
+    for _ in range(5):
+        lg, cache = decode_step(params, cache, jnp.asarray([want[-1]], jnp.int32),
+                                jnp.int32(pos), cfg)
+        want.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    assert got == want
