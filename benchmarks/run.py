@@ -17,6 +17,7 @@ SECTIONS = {
     "fig8": ("Fig 8: time vs error (hybrid sampling)", "benchmarks.bench_time_error"),
     "params": ("Sec 7.6: parameter effects", "benchmarks.bench_parameters"),
     "kernels": ("Kernel microbenchmarks", "benchmarks.bench_kernels"),
+    "multiq": ("Batched multi-query vs sequential any-k", "benchmarks.bench_multi_query"),
 }
 
 

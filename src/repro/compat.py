@@ -1,0 +1,90 @@
+"""Version-compat shims for the installed JAX.
+
+The codebase targets the current JAX API surface; this container ships an older
+JAX whose names differ in three places.  Everything version-dependent is
+resolved exactly once, here:
+
+* ``shard_map`` — older JAX exposes it under ``jax.experimental.shard_map``
+  with a ``check_rep`` kwarg instead of ``jax.shard_map(..., check_vma=...)``.
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(axis_types=...)`` — the explicit
+  sharding-mode enum does not exist before it was introduced; meshes are
+  implicitly ``Auto`` there, so the compat path simply drops the argument.
+
+The Pallas ``CompilerParams``/``TPUCompilerParams`` rename is resolved in
+:mod:`repro.kernels` (the only consumer), so importing ``repro`` never pays
+the Pallas import on host-only paths.
+
+:func:`install` additionally backfills the missing public names onto ``jax``
+itself so demo scripts and subprocess test bodies written against the newer API
+run unchanged on the installed JAX.  It only ever *adds* missing attributes —
+on a current JAX it is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+# ------------------------------------------------------------------ shard_map
+if hasattr(jax, "shard_map"):
+    _shard_map_new = jax.shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_new(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )
+
+
+# ------------------------------------------------------------------ make_mesh
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+_raw_make_mesh = jax.make_mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """`jax.make_mesh` that tolerates ``axis_types`` on every JAX version."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return _raw_make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (all axes implicitly Auto)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+_installed = False
+
+
+def install() -> None:
+    """Backfill missing public JAX names (idempotent, additive only)."""
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeShim
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _MAKE_MESH_HAS_AXIS_TYPES:
+        @functools.wraps(_raw_make_mesh)
+        def _make_mesh_compat(axis_shapes, axis_names, *args, **kwargs):
+            kwargs.pop("axis_types", None)
+            return _raw_make_mesh(axis_shapes, axis_names, *args, **kwargs)
+
+        jax.make_mesh = _make_mesh_compat

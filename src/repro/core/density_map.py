@@ -143,3 +143,48 @@ def combine_densities_np(densities: np.ndarray, rows: np.ndarray, op: str = AND)
 def estimated_valid_records(index: DensityMapIndex, combined: jax.Array) -> jax.Array:
     """Estimate L, the total number of valid records, from the combined map."""
     return jnp.sum(combined) * index.records_per_block
+
+
+# ---------------------------------------------------------------- batched form
+# Q concurrent queries combine in one pass over the density tensor.  Queries
+# may have different predicate counts; the row matrix is right-padded with -1
+# (the ⊕-identity: 1.0 under AND, 0.0 under OR), so padded positions are exact
+# no-ops and each query's combined vector is bit-identical to its single-query
+# combine.
+
+PAD_ROW = -1
+
+
+def pack_row_matrix(vocab: PredicateVocab, predicate_lists) -> np.ndarray:
+    """[(attr, value), ...] per query -> ``[Q, γ_max]`` int32 row matrix.
+
+    Rows are resolved through the vocab; queries shorter than γ_max are padded
+    with :data:`PAD_ROW`.
+    """
+    row_lists = [vocab.rows(p) for p in predicate_lists]
+    gmax = max((r.size for r in row_lists), default=1)
+    gmax = max(gmax, 1)
+    out = np.full((len(row_lists), gmax), PAD_ROW, dtype=np.int32)
+    for q, r in enumerate(row_lists):
+        out[q, : r.size] = r
+    return out
+
+
+def combine_densities_batch_np(
+    densities: np.ndarray, row_matrix: np.ndarray, op: str = AND
+) -> np.ndarray:
+    """Batched §3.2 combine: ``[Q, γ_max]`` padded rows -> ``[Q, λ]`` densities."""
+    dens = np.asarray(densities)
+    rm = np.asarray(row_matrix)
+    sel = dens[np.maximum(rm, 0)]  # [Q, gmax, lam]
+    valid = (rm >= 0)[..., None]
+    # identity constants stay f32 so the reduction is bit-identical to the
+    # single-query combine (no silent float64 promotion)
+    if op == AND:
+        return np.prod(np.where(valid, sel, np.float32(1.0)), axis=1)
+    elif op == OR:
+        return np.clip(
+            np.sum(np.where(valid, sel, np.float32(0.0)), axis=1),
+            np.float32(0.0), np.float32(1.0),
+        )
+    raise ValueError(f"unknown op {op!r}")

@@ -5,6 +5,11 @@ The engine returns *all valid records in the fetched blocks* (paper §4.1) and
 re-executes the plan over unexamined blocks when a fetch under-delivers (density
 estimates are approximate).  I/O is charged through a :class:`CostModel`, with the
 §4.1 fetch optimization (ascending block order) applied before costing.
+
+Concurrent workloads go through :meth:`NeedleTailEngine.any_k_batch`, which
+plans a whole wave of queries in one vectorized pass and fetches the
+deduplicated union of their blocks exactly once (see
+:mod:`repro.core.multi_query`).
 """
 from __future__ import annotations
 
@@ -159,6 +164,20 @@ class NeedleTailEngine:
             modeled_io_s=self.cost.io_time(all_blocks),
             plan_rounds=rounds,
         )
+
+    # ------------------------------------------------------------------ batch
+    def any_k_batch(self, queries, algo: str = "auto"):
+        """Evaluate Q concurrent any-k queries with shared-fetch scheduling.
+
+        ``queries`` is a sequence of :class:`~repro.core.multi_query.BatchQuery`
+        or ``(predicates, k[, op])`` tuples.  Per-query results are
+        byte-identical to Q separate :meth:`any_k` calls; the union of planned
+        blocks is deduplicated so each block is fetched exactly once per batch.
+        Returns a :class:`~repro.core.multi_query.BatchQueryResult`.
+        """
+        from repro.core.multi_query import run_batch
+
+        return run_batch(self, queries, algo=algo)
 
     # -------------------------------------------------------------- aggregate
     def aggregate(

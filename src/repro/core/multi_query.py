@@ -1,0 +1,374 @@
+"""Batched multi-query any-k evaluation with shared-fetch scheduling.
+
+The paper serves one LIMIT query at a time; production traffic arrives as waves
+of small-k queries over the same hot blocks (BlinkDB's shared-I/O observation).
+This module evaluates Q concurrent ``(predicates, k)`` requests as one unit:
+
+1. **One combine pass** — all Q combined-density vectors are produced together:
+   legacy pair-predicates pack into a ``[Q, γ_max]`` row matrix and go through
+   the batched ⊕-combine (``combine_densities_batch_np`` on the host engine,
+   the :func:`repro.kernels.density_combine.density_combine_batch` Pallas
+   kernel on device); richer :class:`~repro.core.predicates.Predicate` trees
+   fall back to their own density compiler.
+2. **One vectorized plan** — all Q THRESHOLD / TWO-PRONG selections run in a
+   single vmapped call instead of Q sequential jit dispatches: THRESHOLD
+   shares one density sort per *unique* combined row
+   (``threshold_sort_batch`` + per-query ``threshold_cut``), TWO-PRONG runs
+   ``two_prong_select_batch`` over the unique (row, need) pairs.
+3. **Shared fetch** — the union of all planned blocks is deduplicated and each
+   block is fetched exactly once per batch (including across refill rounds:
+   a block fetched in round 0 for query A is served from the batch cache when
+   query B plans it in round 2).  Fetched records are distributed back to the
+   queries whose plans requested them.
+
+Per-query refill semantics are preserved exactly: each query's plan trajectory
+(combined densities, exclusions, needs, refill rounds) is bit-identical to what
+:meth:`NeedleTailEngine.any_k` would compute for it alone, so per-query results
+are byte-identical to the sequential engine — only the physical I/O schedule
+changes.  This admission → batch plan → shared fetch seam is what the sharding
+and async-serving follow-ons build on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density_map import AND, combine_densities_batch_np, pack_row_matrix
+from repro.core.forward_optimal import forward_optimal_faithful
+from repro.core.predicates import Predicate
+from repro.core.threshold import threshold_cut, threshold_sort_batch
+from repro.core.two_prong import two_prong_select_batch
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.engine import NeedleTailEngine, QueryResult
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchQuery:
+    """One admission-queue entry: a LIMIT-k query over ⊕-combined predicates.
+
+    ``algo`` overrides the batch-level algorithm for this query; ``None``
+    (default) inherits the ``algo`` argument of the ``any_k_batch`` call.
+    """
+
+    predicates: Sequence[tuple[int, int]] | Predicate
+    k: int
+    op: str = AND
+    algo: str | None = None
+
+
+@dataclasses.dataclass
+class BatchQueryResult:
+    """Per-query results plus the batch-level shared-fetch accounting."""
+
+    results: list["QueryResult"]
+    unique_blocks_fetched: np.ndarray  # every block read, exactly once
+    blocks_requested_total: int  # Σ over queries/rounds of planned fetches
+    rounds: int  # waves executed
+    cpu_time_s: float
+    modeled_io_s: float  # one shared pass over unique blocks
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.results)
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Planned block fetches per physical block read (≥ 1; higher = more
+        sharing)."""
+        u = int(self.unique_blocks_fetched.size)
+        return float(self.blocks_requested_total) / u if u else 1.0
+
+
+@dataclasses.dataclass
+class _QueryState:
+    query: BatchQuery
+    need: int
+    got: int = 0
+    rounds: int = 0
+    done: bool = False
+    used_algo: str = ""
+    exclude: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.asarray([], dtype=np.int64)
+    )
+    planned: list[np.ndarray] = dataclasses.field(default_factory=list)
+    rec_blocks: list[np.ndarray] = dataclasses.field(default_factory=list)
+    rec_rows: list[np.ndarray] = dataclasses.field(default_factory=list)
+    meas: list[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n: bounds vmapped-planner recompilations."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _combined_matrix(engine: "NeedleTailEngine", states: list[_QueryState]) -> np.ndarray:
+    """[Qa, λ] combined densities, exclusions applied — one pass per ⊕ group."""
+    lam = engine.store.num_blocks
+    out = np.zeros((len(states), lam), dtype=np.float32)
+    # group pair-predicate queries by op so each group is one batched combine
+    groups: dict[str, list[int]] = {}
+    for i, st in enumerate(states):
+        if isinstance(st.query.predicates, Predicate):
+            out[i] = np.asarray(
+                st.query.predicates.density(engine.store.index), dtype=np.float32
+            )
+        else:
+            groups.setdefault(st.query.op, []).append(i)
+    vocab = engine.store.index.vocab
+    for op, idxs in groups.items():
+        rm = pack_row_matrix(vocab, [states[i].query.predicates for i in idxs])
+        out[idxs] = combine_densities_batch_np(engine._dens_np, rm, op)
+    for i, st in enumerate(states):
+        if st.exclude.size:
+            out[i, st.exclude] = 0.0
+    return out
+
+
+def _plan_wave(
+    engine: "NeedleTailEngine", states: list[_QueryState], algo: str
+) -> list[np.ndarray]:
+    """Vectorized plan for one wave of active queries.
+
+    Returns each query's planned block ids (pre-exclusion-diff), bit-identical
+    to ``engine.plan`` run per query.  Cross-query plan sharing: THRESHOLD
+    plans for any k over one combined row are prefixes of one density-sorted
+    order, so the device work is one vmapped sort over the *unique* rows of
+    the wave (hot workloads repeat a few predicate templates) and each query
+    cuts its own prefix; TWO-PRONG dedups on (row, need) pairs.
+    """
+    combined = _combined_matrix(engine, states)
+    rpb = engine.store.records_per_block
+    needs = np.asarray([float(st.need) for st in states], dtype=np.float32)
+
+    if algo == "forward_optimal":
+        plans = []
+        for st, comb in zip(states, combined):
+            sel, _ = forward_optimal_faithful(comb, st.need, rpb, engine.cost)
+            plans.append(np.asarray(sel, dtype=np.int64))
+            st.used_algo = algo
+        return plans
+
+    qa = len(states)
+    # unique combined rows of the wave (byte-keyed: exclusions already applied)
+    row_key = [c.tobytes() for c in combined]
+    row_of: dict[bytes, int] = {}
+    uniq_rows: list[int] = []
+    for i, key in enumerate(row_key):
+        if key not in row_of:
+            row_of[key] = len(uniq_rows)
+            uniq_rows.append(i)
+    u_idx = np.asarray([row_of[key] for key in row_key])
+
+    def _pad_rows(rows: np.ndarray) -> np.ndarray:
+        # pad to a power-of-two row count so the vmapped planners compile once
+        # per bucket size, not once per unique-set size; padded rows are zeros
+        # and their outputs are never read
+        b = _bucket(rows.shape[0])
+        if b == rows.shape[0]:
+            return rows
+        out = np.zeros((b, rows.shape[1]), dtype=rows.dtype)
+        out[: rows.shape[0]] = rows
+        return out
+
+    def threshold_plans() -> list[np.ndarray]:
+        si, sd, cum = threshold_sort_batch(jnp.asarray(_pad_rows(combined[uniq_rows])))
+        si, sd, cum = np.asarray(si), np.asarray(sd), np.asarray(cum)
+        plans = []
+        for i in range(qa):
+            u = u_idx[i]
+            n = threshold_cut(sd[u], cum[u], needs[i], rpb)
+            plans.append(si[u, :n].astype(np.int64))
+        return plans
+
+    def two_prong_plans() -> list[np.ndarray]:
+        pair_of: dict[tuple[int, float], int] = {}
+        pairs: list[int] = []
+        for i in range(qa):
+            key = (int(u_idx[i]), float(needs[i]))
+            if key not in pair_of:
+                pair_of[key] = len(pairs)
+                pairs.append(i)
+        k_u = np.ones((_bucket(len(pairs)),), dtype=np.float32)
+        k_u[: len(pairs)] = needs[pairs]
+        r = two_prong_select_batch(
+            jnp.asarray(_pad_rows(combined[pairs])), jnp.asarray(k_u), rpb
+        )
+        starts = np.asarray(r.start)
+        ends = np.asarray(r.end)
+        plans = []
+        for i in range(qa):
+            p = pair_of[(int(u_idx[i]), float(needs[i]))]
+            plans.append(np.arange(int(starts[p]), int(ends[p]), dtype=np.int64))
+        return plans
+
+    if algo == "threshold":
+        plans = threshold_plans()
+        for st in states:
+            st.used_algo = algo
+        return plans
+    if algo == "two_prong":
+        plans = two_prong_plans()
+        for st in states:
+            st.used_algo = algo
+        return plans
+    if algo == "auto":
+        # §7.2: plan with both, cost both, take the cheaper — per query
+        pt, p2 = threshold_plans(), two_prong_plans()
+        plans = []
+        for st, bt, b2 in zip(states, pt, p2):
+            ct, c2 = engine.cost.io_time(bt), engine.cost.io_time(b2)
+            if ct <= c2:
+                plans.append(bt)
+                st.used_algo = "threshold"
+            else:
+                plans.append(b2)
+                st.used_algo = "two_prong"
+        return plans
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+class _BlockCache:
+    """Batch-lifetime cache: every block is fetched from the store once."""
+
+    def __init__(self, engine: "NeedleTailEngine"):
+        self.engine = engine
+        self.pos: dict[int, int] = {}
+        self.ids = np.asarray([], dtype=np.int64)
+        self.dims: np.ndarray | None = None
+        self.meas: np.ndarray | None = None
+        self.valid: np.ndarray | None = None
+
+    def ensure(self, block_ids: np.ndarray) -> int:
+        """Fetch whichever of `block_ids` are not cached yet; returns #new."""
+        new = np.asarray(
+            sorted(int(b) for b in block_ids if int(b) not in self.pos),
+            dtype=np.int64,
+        )
+        if new.size == 0:
+            return 0
+        bd, bm, bv = self.engine.store.fetch(new)
+        base = self.ids.size
+        for off, b in enumerate(new):
+            self.pos[int(b)] = base + off
+        self.ids = np.concatenate([self.ids, new])
+        if self.dims is None:
+            self.dims, self.meas, self.valid = bd, bm, bv
+        else:
+            self.dims = np.concatenate([self.dims, bd])
+            self.meas = np.concatenate([self.meas, bm])
+            self.valid = np.concatenate([self.valid, bv])
+        return int(new.size)
+
+    def gather(self, block_ids: np.ndarray):
+        idx = np.asarray([self.pos[int(b)] for b in block_ids], dtype=np.int64)
+        return self.dims[idx], self.meas[idx], self.valid[idx]
+
+
+def run_batch(
+    engine: "NeedleTailEngine",
+    queries: Sequence[BatchQuery | tuple],
+    algo: str = "auto",
+) -> BatchQueryResult:
+    """Evaluate Q any-k queries with shared-fetch scheduling.
+
+    Each query's returned records are byte-identical to
+    ``engine.any_k(q.predicates, q.k, q.op, q.algo or algo)`` — same blocks
+    planned, same refill rounds, same record order — but every physical block
+    is fetched at most once for the whole batch.
+    """
+    from repro.core.engine import QueryResult
+
+    t0 = time.perf_counter()
+    qs = [q if isinstance(q, BatchQuery) else BatchQuery(*q) for q in queries]
+    states = [_QueryState(query=q, need=q.k, done=(q.k <= 0)) for q in qs]
+    cache = _BlockCache(engine)
+    requested_total = 0
+    waves = 0
+
+    while waves < engine.max_refills:
+        active = [st for st in states if not st.done]
+        if not active:
+            break
+        # per-query algo override: plan each algo group in its own wave call
+        by_algo: dict[str, list[_QueryState]] = {}
+        for st in active:
+            by_algo.setdefault(st.query.algo or algo, []).append(st)
+        plan_of: dict[int, np.ndarray] = {}
+        for a, group in by_algo.items():
+            for st, plan in zip(group, _plan_wave(engine, group, a)):
+                plan_of[id(st)] = plan
+        plans = [plan_of[id(st)] for st in active]
+        # per-query §4.1 post-plan steps: drop already-fetched blocks, ascending
+        # fetch order (setdiff1d returns sorted ids)
+        wave_blocks: list[np.ndarray] = []
+        for st, plan in zip(active, plans):
+            blocks = np.setdiff1d(plan, st.exclude)
+            if blocks.size == 0:
+                st.done = True  # plan exhausted: nothing new to read
+            wave_blocks.append(blocks)
+        union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
+        if union.size:
+            cache.ensure(union)
+        progressed = False
+        for st, blocks in zip(active, wave_blocks):
+            if blocks.size == 0:
+                continue
+            progressed = True
+            bd, bm, bv = cache.gather(blocks)
+            mask = np.asarray(engine._mask(bd, st.query.predicates, st.query.op) & bv)
+            bi, ri = np.nonzero(mask)
+            st.rec_blocks.append(blocks[bi])
+            st.rec_rows.append(ri)
+            st.meas.append(np.asarray(bm)[bi, ri])
+            st.planned.append(blocks)
+            requested_total += int(blocks.size)
+            st.got += int(bi.size)
+            st.exclude = np.concatenate([st.exclude, blocks])
+            st.need = st.query.k - st.got
+            st.rounds += 1
+            if st.got >= st.query.k:
+                st.done = True
+        if not progressed:
+            break
+        waves += 1
+
+    cpu = time.perf_counter() - t0
+    results = []
+    for st in states:
+        all_blocks = (
+            np.concatenate(st.planned) if st.planned else np.asarray([], dtype=np.int64)
+        )
+        results.append(
+            QueryResult(
+                record_block=np.concatenate(st.rec_blocks)
+                if st.rec_blocks
+                else np.asarray([], np.int64),
+                record_row=np.concatenate(st.rec_rows)
+                if st.rec_rows
+                else np.asarray([], np.int64),
+                measures=np.concatenate(st.meas)
+                if st.meas
+                else np.zeros((0, 0), np.float32),
+                blocks_fetched=all_blocks,
+                algo=st.used_algo or (st.query.algo or algo),
+                cpu_time_s=cpu,  # wave time is shared; per-query share is not meaningful
+                modeled_io_s=engine.cost.io_time(all_blocks),
+                plan_rounds=st.rounds,
+            )
+        )
+    return BatchQueryResult(
+        results=results,
+        unique_blocks_fetched=cache.ids.copy(),
+        blocks_requested_total=requested_total,
+        rounds=waves,
+        cpu_time_s=cpu,
+        modeled_io_s=engine.cost.io_time(cache.ids),
+    )

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 class ShardedThresholdResult(NamedTuple):
     block_ids: jax.Array  # [C*P] global ids, density-desc; -1 past num_selected
@@ -69,7 +71,8 @@ def _local_threshold_body(
     # candidates with c_s == C, blocks beyond its frontier may exceed the cutoff.
     sel_mask = pos < n_sel
     shard_of = all_ids // lam_local
-    counts = jnp.zeros((jax.lax.axis_size(axis),), jnp.int32).at[
+    num_shards = all_d.shape[0] // candidates  # static: gather is [C*P]
+    counts = jnp.zeros((num_shards,), jnp.int32).at[
         shard_of[g_order]
     ].add(sel_mask.astype(jnp.int32))
     # NOTE: no ~any_hit escape — if the frontier can't reach k we cannot tell
@@ -95,7 +98,7 @@ def sharded_threshold(
         candidates=candidates,
         axis=axis,
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),
@@ -141,7 +144,7 @@ def sharded_two_prong(
         exp = c[jnp.where(any_f, ends[best], all_g.shape[0])] - c[jnp.where(any_f, best, 0)]
         return s, e, exp.astype(jnp.float32)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),
@@ -166,7 +169,7 @@ def sharded_ht_terms(
             jax.lax.psum(jnp.sum(n), axis),
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=(P(), P()),
         check_vma=False,
     )
@@ -228,7 +231,7 @@ def sharded_threshold_bisect(
             lo, hi = new_lo, jnp.where(any_ok, new_hi, ths[0])
         return lo, n_sel, exp
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=(P(axis), P()), out_specs=(P(), P(), P()),
         check_vma=False,
     )

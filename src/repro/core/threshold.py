@@ -118,6 +118,36 @@ def threshold_select(
 
 threshold_select_jit = jax.jit(threshold_select, static_argnums=(2,))
 
+def _threshold_sort(combined: jax.Array):
+    """The k-independent core of :func:`threshold_select`.
+
+    THRESHOLD plans for every k over the same combined row are prefixes of one
+    density-sorted order, so the sort + prefix sums are computed once per
+    distinct row and the per-k cutoff is a cheap host-side comparison.  The
+    three outputs are bit-identical to the intermediates inside
+    :func:`threshold_select` (same ops on the same bytes), which is what lets
+    the multi-query engine share one sort across a whole wave of queries.
+    """
+    sort_idx = jnp.argsort(-combined, stable=True).astype(jnp.int32)
+    sorted_d = combined[sort_idx]
+    return sort_idx, sorted_d, jnp.cumsum(sorted_d)
+
+
+#: [U, λ] unique combined rows -> (sort_idx, sorted_d, cumsum) per row.
+threshold_sort_batch = jax.jit(jax.vmap(_threshold_sort))
+
+
+def threshold_cut(
+    sorted_d: np.ndarray, cum: np.ndarray, k: float, records_per_block: int
+) -> int:
+    """Host-side prefix cutoff over one presorted row: the n_sel of
+    :func:`threshold_select`, computed from :func:`_threshold_sort` outputs."""
+    cum_records = cum * np.float32(records_per_block)
+    reached = cum_records >= np.float32(k)
+    if reached.any():
+        return int(np.argmax(reached)) + 1
+    return int(np.sum(sorted_d > 0.0))
+
 
 def threshold_refill(
     combined: jax.Array,

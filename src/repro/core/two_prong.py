@@ -75,3 +75,9 @@ def two_prong_select(
 
 
 two_prong_select_jit = jax.jit(two_prong_select, static_argnums=(2,))
+
+#: Batched TWO-PRONG: plan Q queries in one vectorized call (vmap of the
+#: scalar planner; each row bit-identical to its single-query plan).
+two_prong_select_batch = jax.jit(
+    jax.vmap(two_prong_select, in_axes=(0, 0, None)), static_argnums=(2,)
+)

@@ -9,6 +9,11 @@ bytes, the minimum possible.
 Grid: ``(λ_tiles, γ)`` with the predicate axis innermost, so each output tile is
 revisited γ consecutive steps (TPU-legal accumulation).  The row ids are scalar-
 prefetched and drive the input ``index_map`` — the gather costs nothing.
+
+:func:`density_combine_batch` is the multi-query form: a ``[Q, γ_max]`` row
+matrix (padded with -1) produces the full ``[Q, λ]`` combined-density matrix in
+one launch — grid ``(Q, λ_tiles, γ_max)``.  Padded positions read row 0 but
+contribute the ⊕-identity, so ragged batches combine exactly.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams
 
 LANE_TILE = 512  # λ-tile; multiple of the 128-lane VPU width
 
@@ -71,8 +78,76 @@ def density_combine(
         ),
         out_shape=jax.ShapeDtypeStruct((lam_p,), densities.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")
         ),
     )(row_ids.astype(jnp.int32), densities)
     return out[:lam]
+
+
+def _batch_kernel(rows_ref, dens_ref, out_ref, *, op: str, gamma: int):
+    q = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, 1.0 if op == "and" else 0.0)
+
+    tile = dens_ref[0, :]
+    # padded row slots (-1) contribute the ⊕-identity; the index_map clamped
+    # their gather to row 0, so mask the loaded tile out here
+    valid = rows_ref[q, j] >= 0
+    if op == "and":
+        out_ref[...] *= jnp.where(valid, tile, 1.0)
+    else:
+        out_ref[...] += jnp.where(valid, tile, 0.0)
+
+    if op == "or":
+
+        @pl.when(j == gamma - 1)
+        def _clip():
+            out_ref[...] = jnp.minimum(out_ref[...], 1.0)
+
+
+def density_combine_batch(
+    densities: jax.Array,  # [rows, lam] f32
+    row_matrix: jax.Array,  # [Q, gamma_max] int32, padded with -1
+    op: str = "and",
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns the combined per-block density matrix ``[Q, lam]``.
+
+    One device pass serves all Q queries: each predicate-row tile streams
+    HBM→VMEM once per referencing query and ⊕-combines in-register into that
+    query's output tile.  The query axis is outermost (parallel-safe); the
+    predicate axis stays innermost so each output tile is revisited γ_max
+    consecutive steps, exactly like the single-query kernel.
+    """
+    rows, lam = densities.shape
+    nq, gamma = row_matrix.shape
+    pad = (-lam) % LANE_TILE
+    if pad:
+        densities = jnp.pad(densities, ((0, 0), (0, pad)))
+    lam_p = lam + pad
+    grid = (nq, lam_p // LANE_TILE, gamma)
+
+    out = pl.pallas_call(
+        functools.partial(_batch_kernel, op=op, gamma=gamma),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, LANE_TILE),
+                    lambda q, i, j, rows: (jnp.maximum(rows[q, j], 0), i),
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, LANE_TILE), lambda q, i, j, rows: (q, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nq, lam_p), densities.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+        ),
+    )(row_matrix.astype(jnp.int32), densities)
+    return out[:, :lam]

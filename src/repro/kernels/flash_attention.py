@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 TILE_Q = 128
 TILE_KV = 128
 NEG_INF = -1e30
@@ -122,7 +124,7 @@ def flash_attention(
             pltpu.VMEM((TILE_Q, d), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
     )(q, k, v)

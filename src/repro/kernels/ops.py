@@ -32,6 +32,16 @@ def density_combine(densities: jax.Array, row_ids: jax.Array, op: str = "and"):
     return _dc.density_combine(densities, row_ids, op=op, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("op",))
+def density_combine_batch(
+    densities: jax.Array, row_matrix: jax.Array, op: str = "and"
+):
+    """Multi-query ⊕-combine: ``[Q, γ_max]`` padded rows -> ``[Q, λ]``."""
+    return _dc.density_combine_batch(
+        densities, row_matrix, op=op, interpret=_interpret()
+    )
+
+
 @jax.jit
 def prefix_sum(x: jax.Array) -> jax.Array:
     return _ws.prefix_sum(x, interpret=_interpret())

@@ -12,6 +12,17 @@ def density_combine_ref(densities: jax.Array, row_ids: jax.Array, op: str = "and
     return jnp.minimum(jnp.sum(sel, axis=0), 1.0)
 
 
+def density_combine_batch_ref(
+    densities: jax.Array, row_matrix: jax.Array, op: str = "and"
+):
+    """[Q, γ_max] padded row matrix (-1 = ⊕-identity) -> [Q, λ]."""
+    sel = densities[jnp.maximum(row_matrix, 0)]  # [Q, gmax, lam]
+    valid = (row_matrix >= 0)[..., None]
+    if op == "and":
+        return jnp.prod(jnp.where(valid, sel, 1.0), axis=1)
+    return jnp.minimum(jnp.sum(jnp.where(valid, sel, 0.0), axis=1), 1.0)
+
+
 def prefix_sum_ref(x: jax.Array) -> jax.Array:
     return jnp.cumsum(x.astype(jnp.float32))
 

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 CHUNK = 128
 
 
@@ -86,7 +88,7 @@ def ssd_scan(
         out_shape=jax.ShapeDtypeStruct((b, h, s, dh), u.dtype),
         scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(u, ldecay, bmat, cmat)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 TILE = 2048
 
 
@@ -68,6 +70,6 @@ def theta_stats(
             jax.ShapeDtypeStruct((T,), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
     )(combined, thetas)
     return counts, recsum

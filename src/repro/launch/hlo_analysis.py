@@ -35,6 +35,19 @@ _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
 _OP_RE = re.compile(r"^([\w\-]+)\(")
 
 
+def _operand_names(args: str) -> list[str]:
+    """Operand-list string -> bare instruction names.
+
+    Handles both printed forms: ``%a, %b`` and ``f32[8,2]{1,0} %a, s32[] %b``
+    (older XLA prints each operand with its type, whose shape may itself
+    contain commas — so naive comma-splitting is wrong there).
+    """
+    pct = re.findall(r"%([\w\.\-]+)", args)
+    if pct:
+        return pct
+    return [a.strip() for a in args.split(",") if a.strip()]
+
+
 def _split_type_op(rest: str) -> tuple[str, str] | None:
     """Split '<type> <opcode>(...' into (type_str, opcode) without backtracking.
 
@@ -166,8 +179,8 @@ class HloModule:
         operands = re.search(r"\bdot\(([^)]*)\)", line)
         if not cm or not operands:
             return 0.0
-        lhs_name = operands.group(1).split(",")[0].strip().lstrip("%")
-        lhs_type = types.get(lhs_name)
+        names = _operand_names(operands.group(1))
+        lhs_type = types.get(names[0]) if names else None
         if lhs_type is None:
             return 0.0
         lhs = _shape_dims(lhs_type)
@@ -206,8 +219,7 @@ class HloModule:
             args_m = re.search(rf"\b{op}\(([^)]*)\)", line)
             operand_bytes = 0
             if args_m:
-                for a in args_m.group(1).split(","):
-                    a = a.strip().lstrip("%")
+                for a in _operand_names(args_m.group(1)):
                     if a in types:
                         operand_bytes += shape_bytes(types[a])
             if op == "while":

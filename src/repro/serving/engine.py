@@ -11,7 +11,11 @@ counter stays scalar — the shape the multi-pod decode dry-run lowers.
 
 The NeedleTail tie-in: :meth:`select_exemplars` retrieves k cached exemplars
 matching request predicates through the any-k engine (few-shot selection
-without scanning the exemplar store).
+without scanning the exemplar store).  Exemplar lookups are admitted through
+their own queue and drained in waves: :meth:`drain_exemplar_requests` sends
+each wave through one batched any-k call (:meth:`NeedleTailEngine.any_k_batch`),
+so concurrent requests share one vectorized plan and one deduplicated block
+fetch instead of Q independent engine passes.
 """
 from __future__ import annotations
 
@@ -37,6 +41,18 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class ExemplarRequest:
+    """Queued few-shot exemplar lookup: k records matching the predicates."""
+
+    rid: int
+    predicates: Any
+    k: int
+    op: str = "and"
+    result: Any = None  # QueryResult once the wave it rode in has run
+    done: bool = False
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -56,6 +72,7 @@ class ServeEngine:
         self.pad_id = pad_id
         self.rules = rules
         self.queue: deque[Request] = deque()
+        self.exemplar_queue: deque[ExemplarRequest] = deque()
         self._rid = itertools.count()
         self._decode = jax.jit(
             lambda p, c, t, pos: D.decode_step(p, c, t, pos, cfg, rules)
@@ -121,3 +138,35 @@ class ServeEngine:
     def select_exemplars(engine, predicates, k: int):
         """any-k retrieval of k cached exemplars matching request predicates."""
         return engine.any_k(predicates, k=k, algo="auto")
+
+    def submit_exemplar_request(self, predicates, k: int, op: str = "and") -> ExemplarRequest:
+        """Admit an exemplar lookup; evaluated on the next drained wave."""
+        req = ExemplarRequest(next(self._rid), predicates, k, op)
+        self.exemplar_queue.append(req)
+        return req
+
+    def drain_exemplar_requests(self, engine) -> list[ExemplarRequest]:
+        """Drain the exemplar queue in waves of ``max_slots``, each wave
+        evaluated through ONE batched any-k call: the wave's plans are
+        vectorized together and its block union is fetched once (shared-fetch
+        scheduling, :mod:`repro.core.multi_query`)."""
+        from repro.core.multi_query import BatchQuery
+
+        done: list[ExemplarRequest] = []
+        while self.exemplar_queue:
+            wave: list[ExemplarRequest] = []
+            while self.exemplar_queue and len(wave) < self.max_slots:
+                wave.append(self.exemplar_queue.popleft())
+            try:
+                batch = engine.any_k_batch(
+                    [BatchQuery(r.predicates, r.k, r.op) for r in wave], algo="auto"
+                )
+            except Exception:
+                # put the wave back so no admitted request is silently lost
+                self.exemplar_queue.extendleft(reversed(wave))
+                raise
+            for req, res in zip(wave, batch.results):
+                req.result = res
+                req.done = True
+            done.extend(wave)
+        return done

@@ -24,6 +24,27 @@ def test_density_combine_sweep(rows, lam, gamma, op):
     np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("rows,lam", [(8, 100), (16, 513), (32, 2048)])
+@pytest.mark.parametrize("nq,gmax", [(1, 1), (4, 3), (9, 5)])
+@pytest.mark.parametrize("op", ["and", "or"])
+def test_density_combine_batch_sweep(rows, lam, nq, gmax, op):
+    dens = jnp.asarray(RNG.random((rows, lam)).astype(np.float32))
+    rm = RNG.integers(0, rows, (nq, gmax)).astype(np.int32)
+    # ragged batch: random right-padding per query (at least one live row)
+    for q in range(nq):
+        g = int(RNG.integers(1, gmax + 1))
+        rm[q, g:] = -1
+    rm = jnp.asarray(rm)
+    out = ops.density_combine_batch(dens, rm, op=op)
+    expect = ref.density_combine_batch_ref(dens, rm, op=op)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+    # each row must equal the single-query kernel on its unpadded rows
+    for q in range(nq):
+        rids = rm[q][rm[q] >= 0]
+        single = ops.density_combine(dens, rids, op=op)
+        np.testing.assert_allclose(out[q], single, rtol=1e-6, atol=1e-7)
+
+
 @pytest.mark.parametrize("n", [1, 100, 1024, 5000])
 def test_prefix_sum_sweep(n):
     x = jnp.asarray(RNG.random(n).astype(np.float32))
@@ -53,6 +74,7 @@ def test_threshold_bisect_matches_sort_selection():
         assert abs(n_bisect - n_sort) <= max(2, 0.01 * n_sort)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "b,hq,hkv,s,t,causal,win",
     [
@@ -74,6 +96,7 @@ def test_flash_attention_sweep(b, hq, hkv, s, t, causal, win, dtype):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,h,s,dh,ds", [(1, 1, 128, 32, 16), (2, 3, 256, 64, 32)])
 def test_ssd_scan_sweep(b, h, s, dh, ds):
     u = _arr((b, h, s, dh), scale=0.1)

@@ -1,0 +1,280 @@
+"""Batched multi-query engine: batched-vs-sequential equivalence, shared-fetch
+dedup correctness, refill behavior when a batch member under-delivers."""
+import numpy as np
+import pytest
+
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery, run_batch
+from repro.core.predicates import And, Eq, In, Range
+from repro.data.block_store import Table, build_block_store
+from repro.data.synthetic import make_clustered_table, make_real_like_table
+
+ALGOS = ("threshold", "two_prong", "auto")
+
+
+def _assert_query_equal(batch_r, seq_r):
+    """Byte-identical per-query results: records, order, plan trajectory."""
+    np.testing.assert_array_equal(batch_r.record_block, seq_r.record_block)
+    np.testing.assert_array_equal(batch_r.record_row, seq_r.record_row)
+    np.testing.assert_array_equal(batch_r.measures, seq_r.measures)
+    np.testing.assert_array_equal(
+        np.sort(batch_r.blocks_fetched), np.sort(seq_r.blocks_fetched)
+    )
+    assert batch_r.plan_rounds == seq_r.plan_rounds
+    assert batch_r.algo == seq_r.algo
+
+
+def _check_batch_equivalence(eng, queries, algo):
+    batch = eng.any_k_batch(queries, algo=algo)
+    for q, br in zip(queries, batch.results):
+        sr = eng.any_k(q.predicates, q.k, op=q.op, algo=algo)
+        _assert_query_equal(br, sr)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    t = make_clustered_table(num_records=20_000, num_dims=4, density=0.15, seed=2)
+    return t, build_block_store(t, records_per_block=100)
+
+
+@pytest.fixture(scope="module")
+def uniform():
+    # uniform (non-clustered) dims: the adversarial layout for TWO-PRONG
+    rng = np.random.default_rng(7)
+    t = Table(
+        dims=rng.integers(0, 3, (15_000, 3)).astype(np.int32),
+        measures=rng.normal(size=(15_000, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3]),
+    )
+    return t, build_block_store(t, records_per_block=64)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_batched_equals_sequential_clustered(clustered, algo):
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+        BatchQuery([(2, 0)], 10),
+        BatchQuery([(0, 1), (1, 1), (2, 1)], 120),
+    ]
+    _check_batch_equivalence(eng, queries, algo)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_batched_equals_sequential_uniform(uniform, algo):
+    _, store = uniform
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery([(0, v)], 40) for v in range(3)
+    ] + [
+        BatchQuery([(1, 0), (2, 2)], 80),
+        BatchQuery([(0, 0), (1, 1)], 500, op="or"),
+    ]
+    _check_batch_equivalence(eng, queries, algo)
+
+
+def test_batched_equals_sequential_skewed():
+    """All density piled at one end: refill trajectories must still match."""
+    rng = np.random.default_rng(3)
+    n = 8_000
+    a0 = np.zeros(n, np.int32)
+    a0[:500] = 1  # heavily skewed: matches live in the first few blocks
+    a1 = rng.integers(0, 2, n).astype(np.int32)
+    t = Table(
+        dims=np.stack([a0, a1], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    eng = NeedleTailEngine(build_block_store(t, records_per_block=50))
+    queries = [
+        BatchQuery([(0, 1)], 400),
+        BatchQuery([(0, 1), (1, 1)], 200),
+        BatchQuery([(1, 0)], 100),
+    ]
+    for algo in ALGOS:
+        _check_batch_equivalence(eng, queries, algo)
+
+
+def test_batched_supports_predicate_objects(clustered):
+    """Predicate trees (CNF/range algebra) ride in the same batch as pairs."""
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery(And((Eq(0, 1), Range(1, 0, 1))), 100),
+        BatchQuery(In(2, (0, 1)), 150),
+        BatchQuery([(3, 1)], 60),
+    ]
+    batch = _check_batch_equivalence(eng, queries, "auto")
+    dims = np.asarray(store.dims)
+    got = queries[0].predicates.mask(dims[batch.results[0].record_block,
+                                          batch.results[0].record_row])
+    assert np.all(got)
+
+
+def test_shared_fetch_dedups_overlapping_queries(clustered):
+    """Q identical/overlapping queries: each block physically read once."""
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    queries = [BatchQuery([(0, 1), (2, 1)], 300) for _ in range(8)]
+    queries += [BatchQuery([(0, 1)], 200), BatchQuery([(2, 1)], 200)]
+    batch = _check_batch_equivalence(eng, queries, "threshold")
+    per_query_total = sum(r.blocks_fetched.size for r in batch.results)
+    assert batch.blocks_requested_total == per_query_total
+    # the 8 clones request identical plans -> heavy dedup
+    assert batch.unique_blocks_fetched.size < per_query_total
+    assert batch.dedup_ratio > 4.0
+    # every block any query needed is present exactly once in the union
+    union = set()
+    for r in batch.results:
+        union.update(int(b) for b in r.blocks_fetched)
+    assert union == set(int(b) for b in batch.unique_blocks_fetched)
+    assert batch.unique_blocks_fetched.size == len(
+        set(batch.unique_blocks_fetched.tolist())
+    )
+    # shared-pass modeled I/O beats the sum of per-query passes
+    assert batch.modeled_io_s < sum(r.modeled_io_s for r in batch.results)
+
+
+def _underdelivery_table():
+    """Estimates 25x overconfident on 30 decoy blocks (A0/A1 alternate rows,
+    never co-occurring), true matches hidden in 10 low-estimate blocks."""
+    rng = np.random.default_rng(0)
+    rpb = 100
+    n = 40 * rpb
+    a0 = np.zeros(n, np.int32)
+    a1 = np.zeros(n, np.int32)
+    for b in range(30):  # decoys: est AND density 0.25, actual 0
+        lo = b * rpb
+        a0[lo : lo + rpb : 2] = 1
+        a1[lo + 1 : lo + rpb : 2] = 1
+    for b in range(30, 40):  # true blocks: est 0.09, actual 30 matches each
+        lo = b * rpb
+        a0[lo : lo + 30] = 1
+        a1[lo : lo + 30] = 1
+    return Table(
+        dims=np.stack([a0, a1], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    ), rpb
+
+
+def test_cross_round_cache_no_refetch():
+    """A block planned by query A in a refill round that query B already
+    pulled in round 1 must be served from the batch cache, not refetched."""
+    t, rpb = _underdelivery_table()
+    eng = NeedleTailEngine(build_block_store(t, records_per_block=rpb))
+    fetched_log: list[np.ndarray] = []
+    orig_fetch = eng.store.fetch
+
+    def logging_fetch(ids):
+        fetched_log.append(np.asarray(ids))
+        return orig_fetch(ids)
+
+    eng.store.fetch = logging_fetch
+    try:
+        queries = [
+            BatchQuery([(0, 1), (1, 1)], 250),  # under-delivers -> refills
+            BatchQuery([(0, 1)], 600),  # pulls the decoy blocks in round 1
+        ]
+        batch = run_batch(eng, queries, algo="threshold")
+    finally:
+        eng.store.fetch = orig_fetch
+    all_fetched = np.concatenate(fetched_log)
+    # exactly-once physical fetch across rounds and queries
+    assert len(all_fetched) == len(np.unique(all_fetched))
+    np.testing.assert_array_equal(
+        np.sort(all_fetched), np.sort(batch.unique_blocks_fetched)
+    )
+    assert batch.results[0].num_records >= 250
+    assert batch.results[0].plan_rounds > 1  # it really did refill
+    # dedup across rounds: A's refill plans overlapped B's round-1 blocks
+    assert batch.blocks_requested_total > batch.unique_blocks_fetched.size
+
+
+@pytest.mark.parametrize("algo", ("threshold", "auto"))
+def test_refill_when_one_batch_member_underdelivers(algo):
+    """Density-estimate overconfidence on one query must trigger its refill
+    without disturbing the other batch members (§4.1 semantics per query)."""
+    t, rpb = _underdelivery_table()
+    eng = NeedleTailEngine(build_block_store(t, records_per_block=rpb))
+    queries = [
+        BatchQuery([(0, 1), (1, 1)], 250),  # adversarial: decoys deliver zero
+        BatchQuery([(0, 1)], 100),  # easy: satisfied in round 1
+        BatchQuery([(1, 1)], 100),
+    ]
+    batch = _check_batch_equivalence(eng, queries, algo)
+    assert batch.results[0].num_records >= 250
+    assert batch.results[0].plan_rounds > batch.results[1].plan_rounds
+    assert batch.results[1].plan_rounds == 1
+    assert batch.results[2].plan_rounds == 1
+
+
+def test_exhausted_query_terminates(clustered):
+    """k beyond the total valid count: the batch member stops when its plans
+    run dry, exactly like the sequential engine."""
+    t, store = clustered
+    eng = NeedleTailEngine(store)
+    total = int(t.valid_mask([(0, 1), (1, 1), (2, 1), (3, 1)]).sum())
+    queries = [
+        BatchQuery([(0, 1), (1, 1), (2, 1), (3, 1)], total + 10_000),
+        BatchQuery([(0, 1)], 20),
+    ]
+    batch = _check_batch_equivalence(eng, queries, "threshold")
+    # every valid record lives in a nonzero-density block, so the refill loop
+    # finds all of them before its plans run dry
+    assert batch.results[0].num_records == total
+    assert batch.results[1].num_records >= 20
+
+
+def test_serving_drains_exemplar_wave_through_one_batch(clustered):
+    """ServeEngine admission queue -> one batched any-k per wave."""
+    from repro.serving.engine import ServeEngine
+
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    serve = ServeEngine.__new__(ServeEngine)  # no LM needed for exemplar path
+    serve.max_slots = 4
+    serve.exemplar_queue = __import__("collections").deque()
+    serve._rid = __import__("itertools").count()
+    reqs = [serve.submit_exemplar_request([(0, 1), (2, 1)], 50) for _ in range(6)]
+    reqs.append(serve.submit_exemplar_request([(1, 1)], 30))
+    done = serve.drain_exemplar_requests(eng)
+    assert len(done) == 7 and all(r.done for r in done)
+    for r in done[:6]:
+        ref = eng.any_k([(0, 1), (2, 1)], 50, algo="auto")
+        _assert_query_equal(r.result, ref)
+    assert done[6].result.num_records >= 30
+
+
+def test_per_query_algo_override(clustered):
+    """BatchQuery.algo pins one query's planner; others inherit the batch's."""
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 300, algo="two_prong"),
+        BatchQuery([(0, 1)], 50),  # inherits the batch-level "threshold"
+        BatchQuery([(1, 1)], 80, algo="auto"),
+    ]
+    batch = eng.any_k_batch(queries, algo="threshold")
+    assert batch.results[0].algo == "two_prong"
+    assert batch.results[1].algo == "threshold"
+    for q, br in zip(queries, batch.results):
+        sr = eng.any_k(q.predicates, q.k, op=q.op, algo=q.algo or "threshold")
+        _assert_query_equal(br, sr)
+
+
+def test_real_like_workload_equivalence():
+    t = make_real_like_table("taxi", num_records=30_000, seed=4)
+    eng = NeedleTailEngine(build_block_store(t, records_per_block=128))
+    rng = np.random.default_rng(11)
+    pool = [[(0, 1)], [(1, 5)], [(0, 1), (2, 3)], [(3, 2)], [(1, 5), (4, 1)]]
+    queries = [
+        BatchQuery(pool[rng.integers(0, len(pool))], int(rng.integers(10, 200)))
+        for _ in range(16)
+    ]
+    for algo in ALGOS:
+        _check_batch_equivalence(eng, queries, algo)
