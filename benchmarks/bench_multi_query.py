@@ -1,19 +1,29 @@
-"""Batched multi-query engine vs Q independent any-k calls.
+"""Batched multi-query engine vs Q independent any-k calls, plus the
+engine-lifetime cache and SLO-admission sweeps.
 
 Workload model (BlinkDB / Threshold-Queries-survey traffic shape): waves of
 small-k LIMIT queries drawn from a shared pool of hot predicates — most of a
-wave re-reads the same dense blocks.  For each Q ∈ {1, 8, 64, 256} we time
+wave re-reads the same dense blocks.  Three sections:
 
-  sequential — Q independent ``engine.any_k`` calls (the seed path), and
-  batched    — one ``engine.any_k_batch`` call (shared combine, one vectorized
-               plan per wave, deduplicated union fetch),
+  batch sweep — for each Q ∈ {1, 8, 64, 256}: Q independent ``engine.any_k``
+      calls (the seed path) vs one ``engine.any_k_batch`` call (shared
+      combine, one vectorized plan per wave, deduplicated union fetch).
+      Per-query results are byte-identical between the two paths (asserted).
+  warm-cache sweep — the Q=64 exemplar wave run cold then repeated on the
+      engine-lifetime block LRU: the repeat must read **0 blocks from the
+      store** (100% LRU hits) and reuse the memoized THRESHOLD plan orders,
+      while staying byte-identical to the cache-less sequential baseline
+      (asserted).
+  admission sweep — a seeded arrival schedule pushed through the SLO
+      admission controller for a grid of (slo, max_wave) policies; reports
+      wave occupancy, waits, and the warm-cache effect across waves.
 
-and report wall-clock speedup, total vs unique blocks fetched, the dedup
-ratio, and the shared-fetch saving under the paper's HDD cost model.  Per-query
-results are byte-identical between the two paths (asserted).
+``--smoke`` runs a reduced workload (<60 s) that still executes all three
+sections and hard-fails on cache-stat regressions — the CI hook.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -50,27 +60,37 @@ def overlapping_queries(num: int, seed: int = 1) -> list[BatchQuery]:
     ]
 
 
-def run(algo: str = "auto") -> list[dict]:
-    t, eng = make_workload()
+def _assert_byte_identical(seq_results, batch) -> None:
+    for s, b in zip(seq_results, batch.results):
+        np.testing.assert_array_equal(s.record_block, b.record_block)
+        np.testing.assert_array_equal(s.record_row, b.record_row)
+        np.testing.assert_array_equal(s.measures, b.measures)
+
+
+def run(store, algo: str = "auto", sweep=Q_SWEEP) -> list[dict]:
+    """Batch sweep: cache-less sequential baseline vs cold-cache batched."""
     rows = []
     # jit warmup outside the timed region: run each sweep workload once so the
     # scalar planners and every vmapped-planner bucket size are compiled
-    # (steady-state serving; compilation is one-time per shape)
-    eng.any_k([(0, 1)], 16, algo=algo)
-    for q in Q_SWEEP:
-        eng.any_k_batch(overlapping_queries(q, seed=100 + q), algo=algo)
-    for q in Q_SWEEP:
+    # (steady-state serving; compilation is one-time per shape).  Fresh engine
+    # per wave: a shared engine's plan memo would shrink the miss-batch bucket
+    # sizes and leave the timed cold-engine path with an uncompiled bucket.
+    NeedleTailEngine(store).any_k([(0, 1)], 16, algo=algo)
+    for q in sweep:
+        NeedleTailEngine(store).any_k_batch(
+            overlapping_queries(q, seed=100 + q), algo=algo
+        )
+    ref = NeedleTailEngine(store, cache_bytes=0)  # the seed fetch path
+    for q in sweep:
         queries = overlapping_queries(q, seed=100 + q)
         t0 = time.perf_counter()
-        seq = [eng.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
+        seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
         t_seq = time.perf_counter() - t0
+        eng = NeedleTailEngine(store)  # cold LRU + cold plan memo
         t0 = time.perf_counter()
         batch = eng.any_k_batch(queries, algo=algo)
         t_batch = time.perf_counter() - t0
-        for s, b in zip(seq, batch.results):  # byte-identical per query
-            np.testing.assert_array_equal(s.record_block, b.record_block)
-            np.testing.assert_array_equal(s.record_row, b.record_row)
-            np.testing.assert_array_equal(s.measures, b.measures)
+        _assert_byte_identical(seq, batch)  # byte-identical per query
         seq_blocks = sum(r.blocks_fetched.size for r in seq)
         seq_io = sum(r.modeled_io_s for r in seq)
         rows.append(dict(
@@ -80,6 +100,7 @@ def run(algo: str = "auto") -> list[dict]:
             speedup=round(t_seq / t_batch, 2),
             blocks_requested=seq_blocks,
             blocks_unique=int(batch.unique_blocks_fetched.size),
+            store_blocks=batch.store_blocks_fetched,
             dedup_ratio=round(batch.dedup_ratio, 2),
             seq_io_ms=round(seq_io * 1e3, 2),
             batch_io_ms=round(batch.modeled_io_s * 1e3, 2),
@@ -88,10 +109,121 @@ def run(algo: str = "auto") -> list[dict]:
     return rows
 
 
-def main():
-    rows = run()
+def warm_cache_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
+    """The Q=`q` exemplar wave, cold then repeated on the engine-lifetime LRU.
+
+    The repeat must read 0 blocks from the store (100% LRU hits) and reuse
+    the memoized plan orders, while every per-query result stays
+    byte-identical to the cache-less sequential baseline.  Raises on any
+    cache-stat regression — this is the CI hook.
+    """
+    queries = overlapping_queries(q, seed=100 + q)
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
+    eng = NeedleTailEngine(store)
+    rows = []
+    for phase in ("cold", "warm", "warm2"):
+        t0 = time.perf_counter()
+        batch = eng.any_k_batch(queries, algo=algo)
+        ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        st = eng.block_cache.stats
+        pc = eng.plan_cache.stats
+        rows.append(dict(
+            phase=phase, Q=q, algo=algo, batch_ms=round(ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            cache_hits=batch.cache_hits,
+            hit_rate=round(st.hit_rate, 3),
+            plan_hits=pc.threshold_hits + pc.two_prong_hits,
+            cached_mb=round(st.bytes_cached / 2**20, 1),
+        ))
+    if rows[1]["store_blocks"] != 0 or rows[2]["store_blocks"] != 0:
+        raise AssertionError(
+            f"warm-cache regression: repeat wave read "
+            f"{rows[1]['store_blocks']}/{rows[2]['store_blocks']} blocks from "
+            "the store (expected 0: 100% LRU hits)"
+        )
+    if rows[2]["plan_hits"] <= rows[1]["plan_hits"]:
+        raise AssertionError("plan-memo regression: warm wave did not reuse plans")
+    return rows
+
+
+class _SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def admission_sweep(
+    store, algo: str = "auto", n_requests: int = 200, seed: int = 9
+) -> list[dict]:
+    """Seeded arrival schedule through the SLO admission controller for a
+    grid of (slo, max_wave) policies: wave occupancy and wait distribution in
+    simulated time, engine/cache effects in real executions."""
+    from collections import deque
+
+    from repro.serving.admission import AdmissionController, AdmissionPolicy
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(0.003, n_requests)
+    times = np.cumsum(gaps)
+    queries = overlapping_queries(n_requests, seed=seed)
+    rows = []
+    for slo_s, max_wave in ((0.001, 8), (0.01, 32), (0.05, 64)):
+        clk = _SimClock()
+        adm = AdmissionController(
+            AdmissionPolicy(slo_s=slo_s, max_wave=max_wave), clock=clk
+        )
+        eng = NeedleTailEngine(store)  # warms across waves within the policy
+        arrivals = deque(zip(times.tolist(), queries))
+        t0 = time.perf_counter()
+        while arrivals or adm.pending:
+            t_arr = arrivals[0][0] if arrivals else float("inf")
+            t_due = adm.next_deadline()
+            t_due = float("inf") if t_due is None else t_due
+            if t_arr <= t_due:
+                clk.t = t_arr
+                adm.submit(arrivals.popleft()[1])
+            else:
+                clk.t = t_due
+            for wave in adm.drain_ready():
+                eng.any_k_batch(wave, algo=algo)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        st, a = eng.block_cache.stats, adm.stats
+        rows.append(dict(
+            slo_ms=slo_s * 1e3, max_wave=max_wave, waves=a.waves,
+            mean_wave=round(a.mean_wave_size, 2),
+            mean_wait_ms=round(a.mean_wait_s * 1e3, 3),
+            max_wait_ms=round(a.max_wait_s * 1e3, 3),
+            slo_violations=a.slo_violations,
+            store_blocks=st.store_blocks_fetched,
+            hit_rate=round(st.hit_rate, 3),
+            wall_ms=round(wall_ms, 1),
+        ))
+        if a.served != n_requests:
+            raise AssertionError(f"admission lost requests: {a.served}/{n_requests}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced <60s run for CI; still executes all three "
+                         "sections and hard-fails on cache-stat regressions")
+    ap.add_argument("--algo", default="auto")
+    args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
+
+    num_records = 100_000 if args.smoke else 400_000
+    sweep = (1, 8, 64) if args.smoke else Q_SWEEP
+    _, eng = make_workload(num_records)
+    store = eng.store
+
+    rows = run(store, algo=args.algo, sweep=sweep)
     emit(rows, ["Q", "algo", "seq_ms", "batch_ms", "speedup", "blocks_requested",
-                "blocks_unique", "dedup_ratio", "seq_io_ms", "batch_io_ms", "rounds"])
+                "blocks_unique", "store_blocks", "dedup_ratio", "seq_io_ms",
+                "batch_io_ms", "rounds"])
     print()
     for r in rows:
         print(f"# Q={r['Q']:<4d} speedup {r['speedup']:.2f}x  "
@@ -100,6 +232,23 @@ def main():
               f"modeled I/O {r['seq_io_ms']:.1f} -> {r['batch_io_ms']:.1f} ms")
     r64 = next(r for r in rows if r["Q"] == 64)
     print(f"# Q=64 wall-clock speedup vs sequential any_k: {r64['speedup']:.2f}x")
+
+    print("\n# --- warm-cache sweep (engine-lifetime LRU + plan memo) ---")
+    wrows = warm_cache_sweep(store, algo=args.algo, q=64)
+    emit(wrows, ["phase", "Q", "algo", "batch_ms", "store_blocks", "cache_hits",
+                 "hit_rate", "plan_hits", "cached_mb"])
+    cold, warm2 = wrows[0], wrows[-1]
+    print(f"# warm repeat: {cold['store_blocks']} -> {warm2['store_blocks']} store "
+          f"blocks, {cold['batch_ms']:.1f} -> {warm2['batch_ms']:.1f} ms "
+          f"({cold['batch_ms'] / max(warm2['batch_ms'], 1e-9):.2f}x)")
+
+    print("\n# --- admission-policy sweep (SLO vs wave occupancy) ---")
+    arows = admission_sweep(store, algo=args.algo,
+                            n_requests=80 if args.smoke else 200)
+    emit(arows, ["slo_ms", "max_wave", "waves", "mean_wave", "mean_wait_ms",
+                 "max_wait_ms", "slo_violations", "store_blocks", "hit_rate",
+                 "wall_ms"])
+    print("# smoke ok: warm-cache repeat read 0 store blocks" if args.smoke else "")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 # The paper's primary contribution: DensityMap index + any-k algorithms +
 # hybrid sampling / unequal-probability estimation, as a composable JAX module.
+from repro.core.block_cache import BlockLRUCache, CacheStats, PlanOrderCache
 from repro.core.cost_model import CostModel, fit_cost_curve, make_cost_model
 from repro.core.density_map import (
     AND,
@@ -20,7 +21,8 @@ from repro.core.threshold import threshold_faithful, threshold_select
 from repro.core.two_prong import two_prong_faithful, two_prong_select
 
 __all__ = [
-    "AND", "OR", "And", "CostModel", "DensityMapIndex", "DistributedAnyK",
+    "AND", "OR", "And", "BlockLRUCache", "CacheStats", "CostModel",
+    "DensityMapIndex", "DistributedAnyK", "PlanOrderCache",
     "Eq", "Estimate", "HybridPlan", "In", "NeedleTailEngine", "Not", "Or",
     "PredicateVocab", "QueryResult", "Range", "from_pairs",
     "build_density_maps", "combine_densities", "combine_densities_np",

@@ -1,0 +1,299 @@
+"""Engine-lifetime block LRU cache + cross-batch plan-order memoization.
+
+The paper's premise is that a LIMIT query should pay for the blocks it
+touches, not the result-set size.  PR 1's batch block cache honored that
+within one ``any_k_batch`` call but died with the batch, so hot blocks were
+re-read from the store on every serving wave.  This module promotes it to an
+**engine-lifetime** cache shared by :meth:`NeedleTailEngine.any_k`,
+:meth:`NeedleTailEngine.any_k_batch`, and the sharded fetch path
+(:meth:`repro.core.sharded.DistributedAnyK.fetch_blocks`).
+
+Two caches live here:
+
+* :class:`BlockLRUCache` — block slabs ``(dims [R,r], measures [R,s],
+  valid [R])`` keyed on block id, byte-budgeted with LRU eviction and
+  hit/miss/eviction/invalidation counters.  ``get_many`` fetches every miss
+  from the store in ONE ``store.fetch`` call (ascending ids, §4.1 fetch
+  order), so the exactly-once-per-batch property of the old batch cache is
+  preserved whenever the byte budget covers the working set.
+* :class:`PlanOrderCache` — per-(combined-row, exclusion) THRESHOLD sorted
+  orders and per-(row, need) TWO-PRONG windows, keyed on the row *bytes*
+  (exclusions are zeroed into the row before keying, so a template's cache
+  entry is automatically distinct per refill round).  Repeated query
+  templates skip the THRESHOLD sort entirely on later waves; entries are
+  byte-identical to a fresh ``threshold_sort_batch`` row because the vmapped
+  sort is computed independently per row.
+
+Invalidation contract
+---------------------
+Cached slabs are copies of immutable store tensors, so entries only go stale
+when the store itself is replaced.  :func:`repro.data.append.append_records`
+rewrites ONLY the trailing partial block and the newly created blocks; it
+reports exactly that dirtied tail id range, and
+:meth:`NeedleTailEngine.append` forwards it to :meth:`BlockLRUCache.invalidate`
+— surgical eviction, not a wholesale flush.  Density rows *can* change for
+every block the append touches, so the plan-order cache (keyed on density
+bytes) needs no explicit invalidation: a changed row produces a different
+key, and unchanged rows remain valid.  Anything that swaps the store outside
+the append path must call :meth:`BlockLRUCache.clear` (that is what
+:meth:`NeedleTailEngine.replace_store` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Iterable
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.data.block_store import BlockStore
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Monotonic counters; ``bytes_cached`` / ``blocks_cached`` are gauges."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    store_fetch_calls: int = 0  # physical store.fetch round-trips
+    store_blocks_fetched: int = 0  # blocks physically read from the store
+    bytes_cached: int = 0
+    blocks_cached: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = round(self.hit_rate, 4)
+        return d
+
+
+class BlockLRUCache:
+    """Byte-budgeted LRU over block slabs, keyed on block id.
+
+    ``capacity_bytes=None`` means unbounded (the serving default: the cache
+    is bounded by the store size).  ``capacity_bytes=0`` disables caching —
+    every ``get_many`` goes straight to the store, which is the cache-less
+    reference behavior the equivalence suite compares against.
+    """
+
+    def __init__(self, capacity_bytes: int | None = None):
+        self.capacity_bytes = capacity_bytes
+        self.stats = CacheStats()
+        # when set (to a list), every id array physically read from the store
+        # is appended — run_batch uses this for exact per-batch I/O accounting
+        self.fetch_log: list | None = None
+        # block id -> (dims [R,r], meas [R,s], valid [R], nbytes)
+        self._slabs: "OrderedDict[int, tuple[np.ndarray, np.ndarray, np.ndarray, int]]" = (
+            OrderedDict()
+        )
+
+    # ------------------------------------------------------------------ admin
+    def __contains__(self, block_id: int) -> bool:
+        return int(block_id) in self._slabs
+
+    def __len__(self) -> int:
+        return len(self._slabs)
+
+    @property
+    def nbytes(self) -> int:
+        return self.stats.bytes_cached
+
+    def clear(self) -> None:
+        self.stats.invalidations += len(self._slabs)
+        self._slabs.clear()
+        self.stats.bytes_cached = 0
+        self.stats.blocks_cached = 0
+
+    def invalidate(self, block_ids: Iterable[int]) -> int:
+        """Evict exactly `block_ids` (the append-dirtied tail); returns #evicted."""
+        n = 0
+        for b in block_ids:
+            entry = self._slabs.pop(int(b), None)
+            if entry is not None:
+                self.stats.bytes_cached -= entry[3]
+                n += 1
+        self.stats.blocks_cached = len(self._slabs)
+        self.stats.invalidations += n
+        return n
+
+    def _evict_to_fit(self, incoming_nbytes: int) -> None:
+        if self.capacity_bytes is None:
+            return
+        while (
+            self._slabs
+            and self.stats.bytes_cached + incoming_nbytes > self.capacity_bytes
+        ):
+            _, (_, _, _, nb) = self._slabs.popitem(last=False)  # LRU end
+            self.stats.bytes_cached -= nb
+            self.stats.evictions += 1
+        self.stats.blocks_cached = len(self._slabs)
+
+    def _insert(self, block_id: int, bd, bm, bv) -> None:
+        # copies, not views: holding a view would pin the whole fetched
+        # [B,R,·] parent array and make eviction free nothing
+        slab = (np.array(bd), np.array(bm), np.array(bv))
+        nb = sum(int(a.nbytes) for a in slab)
+        self._evict_to_fit(nb)
+        self._slabs[int(block_id)] = (*slab, nb)
+        self.stats.bytes_cached += nb
+        self.stats.blocks_cached = len(self._slabs)
+
+    # ------------------------------------------------------------------ fetch
+    def ensure(self, store: "BlockStore", block_ids: np.ndarray) -> int:
+        """Admit every miss among `block_ids` with one ascending-id
+        ``store.fetch`` call, without materializing a gather.  Returns the
+        number of blocks physically read from the store."""
+        if self.capacity_bytes == 0:
+            return 0
+        miss_set = {int(b) for b in np.asarray(block_ids).ravel()} - self._slabs.keys()
+        if not miss_set:
+            return 0
+        miss = np.asarray(sorted(miss_set), dtype=np.int64)
+        self.stats.misses += int(miss.size)  # admissions are logical misses
+        self.stats.store_fetch_calls += 1
+        self.stats.store_blocks_fetched += int(miss.size)
+        if self.fetch_log is not None:
+            self.fetch_log.append(miss)
+        bd, bm, bv = store.fetch(miss)
+        for off, b in enumerate(miss):
+            self._insert(int(b), bd[off], bm[off], bv[off])
+        return int(miss.size)
+
+    def get_many(
+        self, store: "BlockStore", block_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Gather slabs for `block_ids` (order preserved), fetching every miss
+        from the store in one ascending-id ``store.fetch`` call.
+
+        Returns ``(dims [B,R,r], measures [B,R,s], valid [B,R])`` — byte-
+        identical to ``store.fetch(block_ids)``.
+        """
+        ids = np.asarray(block_ids, dtype=np.int64)
+        if ids.size == 0:
+            return store.fetch(ids)
+        if self.capacity_bytes == 0:  # caching disabled: reference path
+            self.stats.misses += int(ids.size)
+            self.stats.store_fetch_calls += 1
+            self.stats.store_blocks_fetched += int(ids.size)
+            if self.fetch_log is not None:
+                self.fetch_log.append(ids.copy())
+            return store.fetch(ids)
+
+        miss_set = {int(b) for b in ids} - self._slabs.keys()
+        hits = sum(1 for b in ids if int(b) not in miss_set)
+        self.stats.hits += int(hits)
+        self.stats.misses += int(ids.size - hits)
+        fetched_off: dict[int, int] = {}
+        mbd = mbm = mbv = None
+        if miss_set:
+            miss = np.asarray(sorted(miss_set), dtype=np.int64)
+            self.stats.store_fetch_calls += 1
+            self.stats.store_blocks_fetched += int(miss.size)
+            if self.fetch_log is not None:
+                self.fetch_log.append(miss)
+            mbd, mbm, mbv = store.fetch(miss)
+            for off, b in enumerate(miss):
+                fetched_off[int(b)] = off
+                self._insert(int(b), mbd[off], mbm[off], mbv[off])
+
+        # gather in request order; a block evicted during this same insert
+        # loop (budget smaller than the request) is served from the still-in-
+        # scope miss batch, never re-read from the store
+        out_d, out_m, out_v = [], [], []
+        for b in ids:
+            entry = self._slabs.get(int(b))
+            if entry is not None:
+                self._slabs.move_to_end(int(b))  # LRU touch
+                out_d.append(entry[0]); out_m.append(entry[1]); out_v.append(entry[2])
+            elif int(b) in fetched_off:
+                off = fetched_off[int(b)]
+                out_d.append(mbd[off]); out_m.append(mbm[off]); out_v.append(mbv[off])
+            else:
+                # a pre-call hit evicted by this call's own inserts (budget
+                # smaller than the request): the one case left needing a re-read
+                one = np.asarray([b], dtype=np.int64)
+                self.stats.store_fetch_calls += 1
+                self.stats.store_blocks_fetched += 1
+                if self.fetch_log is not None:
+                    self.fetch_log.append(one)
+                bd1, bm1, bv1 = store.fetch(one)
+                out_d.append(bd1[0]); out_m.append(bm1[0]); out_v.append(bv1[0])
+        return np.stack(out_d), np.stack(out_m), np.stack(out_v)
+
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    threshold_hits: int = 0
+    threshold_misses: int = 0
+    two_prong_hits: int = 0
+    two_prong_misses: int = 0
+
+
+class PlanOrderCache:
+    """Cross-batch memo of planner intermediates, keyed on combined-row bytes.
+
+    THRESHOLD entries map ``row.tobytes()`` (exclusions already zeroed into
+    the row) to ``(sort_idx, sorted_d, cumsum)``; TWO-PRONG entries map
+    ``(row_bytes, need)`` to ``(start, end)``.  Both planners are computed
+    independently per row inside their vmapped batch kernels, so a cached
+    entry is bit-identical to recomputing it — repeated (template, exclusion)
+    pairs skip the device sort entirely.  ``max_entries`` bounds growth with
+    FIFO-ish LRU eviction (hot serving workloads repeat a few templates).
+    """
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self.stats = PlanCacheStats()
+        self._threshold: "OrderedDict[bytes, tuple[np.ndarray, np.ndarray, np.ndarray]]" = (
+            OrderedDict()
+        )
+        self._two_prong: "OrderedDict[tuple[bytes, float], tuple[int, int]]" = (
+            OrderedDict()
+        )
+
+    def clear(self) -> None:
+        self._threshold.clear()
+        self._two_prong.clear()
+
+    def _touch(self, od: OrderedDict, key) -> None:
+        od.move_to_end(key)
+        while len(od) > self.max_entries:
+            od.popitem(last=False)
+
+    # ---------------------------------------------------------------- lookup
+    def get_threshold(self, row_bytes: bytes):
+        hit = self._threshold.get(row_bytes)
+        if hit is not None:
+            self.stats.threshold_hits += 1
+            self._touch(self._threshold, row_bytes)
+        else:
+            self.stats.threshold_misses += 1
+        return hit
+
+    def put_threshold(self, row_bytes: bytes, sort_idx, sorted_d, cum) -> None:
+        # copies, not views: the inputs are rows of padded [bucket, λ] batch
+        # results, and a view would pin all three parents per cached entry
+        self._threshold[row_bytes] = (
+            np.array(sort_idx), np.array(sorted_d), np.array(cum),
+        )
+        self._touch(self._threshold, row_bytes)
+
+    def get_two_prong(self, row_bytes: bytes, need: float):
+        hit = self._two_prong.get((row_bytes, float(need)))
+        if hit is not None:
+            self.stats.two_prong_hits += 1
+            self._touch(self._two_prong, (row_bytes, float(need)))
+        else:
+            self.stats.two_prong_misses += 1
+        return hit
+
+    def put_two_prong(self, row_bytes: bytes, need: float, start: int, end: int) -> None:
+        self._two_prong[(row_bytes, float(need))] = (int(start), int(end))
+        self._touch(self._two_prong, (row_bytes, float(need)))

@@ -28,7 +28,7 @@ from repro.core.threshold import threshold_select_jit
 from repro.core.two_prong import two_prong_select_jit
 
 if TYPE_CHECKING:  # avoid core <-> data import cycle
-    from repro.data.block_store import BlockStore
+    from repro.data.block_store import BlockStore, Table
 
 Predicates = Sequence[tuple[int, int]]
 
@@ -55,11 +55,48 @@ class NeedleTailEngine:
         store: "BlockStore",
         cost_model: CostModel | None = None,
         max_refills: int = 8,
+        cache_bytes: int | None = None,
+        plan_cache_entries: int = 4096,
     ):
+        from repro.core.block_cache import BlockLRUCache, PlanOrderCache
+
         self.store = store
         self.cost = cost_model or make_cost_model("hdd")
         self.max_refills = max_refills
         self._dens_np = np.asarray(store.index.densities)
+        # engine-lifetime caches (see repro.core.block_cache): block slabs
+        # shared by any_k / any_k_batch / the sharded fetch path, plus the
+        # cross-batch per-(template, exclusion) plan-order memo.
+        # cache_bytes: None = unbounded, 0 = disabled (reference path).
+        self.block_cache = BlockLRUCache(cache_bytes)
+        self.plan_cache = PlanOrderCache(plan_cache_entries)
+        store.register_invalidation_listener(self.block_cache.invalidate)
+
+    # ------------------------------------------------------------------ store
+    def replace_store(self, store: "BlockStore") -> None:
+        """Swap in an unrelated store: full cache flush (no shared lineage)."""
+        self.store.unregister_invalidation_listener(self.block_cache.invalidate)
+        self.store = store
+        self._dens_np = np.asarray(store.index.densities)
+        self.block_cache.clear()
+        self.plan_cache.clear()
+        store.register_invalidation_listener(self.block_cache.invalidate)
+
+    def append(self, new: "Table") -> "BlockStore":
+        """Append rows through :func:`repro.data.append.append_records` and
+        adopt the grown store.  The append path notifies this engine's block
+        cache with exactly the dirtied tail block ids, so hot untouched
+        blocks stay cached across the append (no wholesale flush).  Plan-memo
+        entries are keyed on density bytes, which change for every dirtied
+        row — stale entries can never be hit — so the plan cache needs no
+        explicit invalidation either."""
+        from repro.data.append import append_records
+
+        grown = append_records(self.store, new)  # notifies block_cache
+        self.store.unregister_invalidation_listener(self.block_cache.invalidate)
+        self.store = grown
+        self._dens_np = np.asarray(grown.index.densities)
+        return grown
 
     # ------------------------------------------------------------------ plans
     def combined_density(self, predicates, op: str = AND) -> np.ndarray:
@@ -139,7 +176,7 @@ class NeedleTailEngine:
             if blocks.size == 0:
                 break
             blocks = np.sort(blocks)  # §4.1 fetch optimization
-            bd, bm, bv = self.store.fetch(blocks)
+            bd, bm, bv = self.block_cache.get_many(self.store, blocks)
             mask = np.asarray(self._mask(bd, predicates, op) & bv)
             bi, ri = np.nonzero(mask)
             rec_blocks.append(blocks[bi])
@@ -199,7 +236,7 @@ class NeedleTailEngine:
         rng = np.random.default_rng(seed)
         plan = plan_hybrid(anyk_blocks, combined, k, alpha, rpb, rng)
         blocks = np.sort(plan.blocks)
-        bd, bm, bv = self.store.fetch(blocks)
+        bd, bm, bv = self.block_cache.get_many(self.store, blocks)
         mask = np.asarray(self._mask(bd, predicates, op) & bv)
         vals = np.asarray(bm)[..., measure]
         tau_i = np.sum(np.where(mask, vals, 0.0), axis=1)  # per-block sums

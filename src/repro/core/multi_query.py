@@ -17,9 +17,12 @@ This module evaluates Q concurrent ``(predicates, k)`` requests as one unit:
    ``two_prong_select_batch`` over the unique (row, need) pairs.
 3. **Shared fetch** — the union of all planned blocks is deduplicated and each
    block is fetched exactly once per batch (including across refill rounds:
-   a block fetched in round 0 for query A is served from the batch cache when
-   query B plans it in round 2).  Fetched records are distributed back to the
-   queries whose plans requested them.
+   a block fetched in round 0 for query A is served from the cache when query
+   B plans it in round 2).  Physical I/O goes through the **engine-lifetime**
+   LRU (:mod:`repro.core.block_cache`), so blocks warmed by earlier batches
+   or ``any_k`` calls are not read from the store at all, and repeated
+   (template, exclusion) plan orders are memoized across batches — a repeat
+   wave skips both the THRESHOLD sort and the store reads entirely.
 
 Per-query refill semantics are preserved exactly: each query's plan trajectory
 (combined densities, exclusions, needs, refill rounds) is bit-identical to what
@@ -63,14 +66,25 @@ class BatchQuery:
 
 @dataclasses.dataclass
 class BatchQueryResult:
-    """Per-query results plus the batch-level shared-fetch accounting."""
+    """Per-query results plus the batch-level shared-fetch accounting.
+
+    ``unique_blocks_fetched`` is the deduplicated set of blocks the batch
+    *touched* (logical I/O).  With the engine-lifetime LRU
+    (:mod:`repro.core.block_cache`) the *physical* story can be smaller:
+    ``store_blocks_fetched`` counts blocks actually read from the store this
+    batch (0 on a fully warm cache) and ``cache_hits`` counts gathers served
+    from cache.
+    """
 
     results: list["QueryResult"]
-    unique_blocks_fetched: np.ndarray  # every block read, exactly once
+    unique_blocks_fetched: np.ndarray  # every block touched, exactly once
     blocks_requested_total: int  # Σ over queries/rounds of planned fetches
     rounds: int  # waves executed
     cpu_time_s: float
-    modeled_io_s: float  # one shared pass over unique blocks
+    modeled_io_s: float  # one shared pass over unique touched blocks
+    store_blocks_fetched: int = 0  # physical store reads (cache misses)
+    modeled_store_io_s: float = 0.0  # one pass over only the missed blocks
+    cache_hits: int = 0  # block gathers served from the engine LRU
 
     @property
     def num_queries(self) -> int:
@@ -78,10 +92,24 @@ class BatchQueryResult:
 
     @property
     def dedup_ratio(self) -> float:
-        """Planned block fetches per physical block read (≥ 1; higher = more
-        sharing)."""
+        """Planned block fetches per unique block touched (≥ 1; higher = more
+        sharing).  Guarded: an empty batch (no query planned any block)
+        reports 1.0 — no sharing, but no division by zero."""
         u = int(self.unique_blocks_fetched.size)
-        return float(self.blocks_requested_total) / u if u else 1.0
+        if u == 0 or self.blocks_requested_total == 0:
+            return 1.0
+        return float(self.blocks_requested_total) / u
+
+    @property
+    def store_dedup_ratio(self) -> float:
+        """Planned block fetches per *physical* store read.  On a fully warm
+        cache the store reads 0 blocks; that is reported as ``inf`` (every
+        planned fetch amortized), and an empty batch reports 1.0."""
+        if self.blocks_requested_total == 0:
+            return 1.0
+        if self.store_blocks_fetched == 0:
+            return float("inf")
+        return float(self.blocks_requested_total) / self.store_blocks_fetched
 
 
 @dataclasses.dataclass
@@ -178,36 +206,62 @@ def _plan_wave(
         out[: rows.shape[0]] = rows
         return out
 
+    plan_cache = engine.plan_cache
+
     def threshold_plans() -> list[np.ndarray]:
-        si, sd, cum = threshold_sort_batch(jnp.asarray(_pad_rows(combined[uniq_rows])))
-        si, sd, cum = np.asarray(si), np.asarray(sd), np.asarray(cum)
+        # cross-batch memo: a (template, exclusion) pair is one combined-row
+        # byte string; repeats across waves/batches skip the device sort
+        entries: list = [None] * len(uniq_rows)
+        miss: list[int] = []  # positions in uniq_rows needing a fresh sort
+        for j, i in enumerate(uniq_rows):
+            hit = plan_cache.get_threshold(row_key[i])
+            if hit is not None:
+                entries[j] = hit
+            else:
+                miss.append(j)
+        if miss:
+            rows = combined[[uniq_rows[j] for j in miss]]
+            si, sd, cum = threshold_sort_batch(jnp.asarray(_pad_rows(rows)))
+            si, sd, cum = np.asarray(si), np.asarray(sd), np.asarray(cum)
+            for off, j in enumerate(miss):
+                entries[j] = (si[off], sd[off], cum[off])
+                plan_cache.put_threshold(row_key[uniq_rows[j]], *entries[j])
         plans = []
         for i in range(qa):
-            u = u_idx[i]
-            n = threshold_cut(sd[u], cum[u], needs[i], rpb)
-            plans.append(si[u, :n].astype(np.int64))
+            si_u, sd_u, cum_u = entries[u_idx[i]]
+            n = threshold_cut(sd_u, cum_u, needs[i], rpb)
+            plans.append(si_u[:n].astype(np.int64))
         return plans
 
     def two_prong_plans() -> list[np.ndarray]:
-        pair_of: dict[tuple[int, float], int] = {}
-        pairs: list[int] = []
+        win: dict[tuple[int, float], tuple[int, int]] = {}
+        miss: list[int] = []  # one representative query index per missed pair
+        pending: set[tuple[int, float]] = set()
         for i in range(qa):
             key = (int(u_idx[i]), float(needs[i]))
-            if key not in pair_of:
-                pair_of[key] = len(pairs)
-                pairs.append(i)
-        k_u = np.ones((_bucket(len(pairs)),), dtype=np.float32)
-        k_u[: len(pairs)] = needs[pairs]
-        r = two_prong_select_batch(
-            jnp.asarray(_pad_rows(combined[pairs])), jnp.asarray(k_u), rpb
-        )
-        starts = np.asarray(r.start)
-        ends = np.asarray(r.end)
-        plans = []
-        for i in range(qa):
-            p = pair_of[(int(u_idx[i]), float(needs[i]))]
-            plans.append(np.arange(int(starts[p]), int(ends[p]), dtype=np.int64))
-        return plans
+            if key in win or key in pending:
+                continue
+            hit = plan_cache.get_two_prong(row_key[i], float(needs[i]))
+            if hit is not None:
+                win[key] = hit
+            else:
+                miss.append(i)
+                pending.add(key)
+        if miss:
+            k_u = np.ones((_bucket(len(miss)),), dtype=np.float32)
+            k_u[: len(miss)] = needs[miss]
+            r = two_prong_select_batch(
+                jnp.asarray(_pad_rows(combined[miss])), jnp.asarray(k_u), rpb
+            )
+            starts, ends = np.asarray(r.start), np.asarray(r.end)
+            for off, i in enumerate(miss):
+                key = (int(u_idx[i]), float(needs[i]))
+                win[key] = (int(starts[off]), int(ends[off]))
+                plan_cache.put_two_prong(row_key[i], float(needs[i]), *win[key])
+        return [
+            np.arange(*win[(int(u_idx[i]), float(needs[i]))], dtype=np.int64)
+            for i in range(qa)
+        ]
 
     if algo == "threshold":
         plans = threshold_plans()
@@ -235,43 +289,6 @@ def _plan_wave(
     raise ValueError(f"unknown algo {algo!r}")
 
 
-class _BlockCache:
-    """Batch-lifetime cache: every block is fetched from the store once."""
-
-    def __init__(self, engine: "NeedleTailEngine"):
-        self.engine = engine
-        self.pos: dict[int, int] = {}
-        self.ids = np.asarray([], dtype=np.int64)
-        self.dims: np.ndarray | None = None
-        self.meas: np.ndarray | None = None
-        self.valid: np.ndarray | None = None
-
-    def ensure(self, block_ids: np.ndarray) -> int:
-        """Fetch whichever of `block_ids` are not cached yet; returns #new."""
-        new = np.asarray(
-            sorted(int(b) for b in block_ids if int(b) not in self.pos),
-            dtype=np.int64,
-        )
-        if new.size == 0:
-            return 0
-        bd, bm, bv = self.engine.store.fetch(new)
-        base = self.ids.size
-        for off, b in enumerate(new):
-            self.pos[int(b)] = base + off
-        self.ids = np.concatenate([self.ids, new])
-        if self.dims is None:
-            self.dims, self.meas, self.valid = bd, bm, bv
-        else:
-            self.dims = np.concatenate([self.dims, bd])
-            self.meas = np.concatenate([self.meas, bm])
-            self.valid = np.concatenate([self.valid, bv])
-        return int(new.size)
-
-    def gather(self, block_ids: np.ndarray):
-        idx = np.asarray([self.pos[int(b)] for b in block_ids], dtype=np.int64)
-        return self.dims[idx], self.meas[idx], self.valid[idx]
-
-
 def run_batch(
     engine: "NeedleTailEngine",
     queries: Sequence[BatchQuery | tuple],
@@ -281,64 +298,80 @@ def run_batch(
 
     Each query's returned records are byte-identical to
     ``engine.any_k(q.predicates, q.k, q.op, q.algo or algo)`` — same blocks
-    planned, same refill rounds, same record order — but every physical block
-    is fetched at most once for the whole batch.
+    planned, same refill rounds, same record order.  Physical I/O goes
+    through the engine-lifetime LRU (:attr:`NeedleTailEngine.block_cache`):
+    within the batch every block is read from the store at most once
+    (provided the byte budget covers the working set), and blocks cached by
+    earlier batches or ``any_k`` calls are not read at all.
     """
     from repro.core.engine import QueryResult
 
     t0 = time.perf_counter()
     qs = [q if isinstance(q, BatchQuery) else BatchQuery(*q) for q in queries]
     states = [_QueryState(query=q, need=q.k, done=(q.k <= 0)) for q in qs]
-    cache = _BlockCache(engine)
+    cache = engine.block_cache
+    hits0 = cache.stats.hits
+    store0 = cache.stats.store_blocks_fetched
+    touched: list[int] = []  # batch-touched unique block ids, first-touch order
+    touched_set: set[int] = set()
+    missed: list[np.ndarray] = []  # ids physically read from the store
+    prev_log, cache.fetch_log = cache.fetch_log, missed
     requested_total = 0
     waves = 0
 
-    while waves < engine.max_refills:
-        active = [st for st in states if not st.done]
-        if not active:
-            break
-        # per-query algo override: plan each algo group in its own wave call
-        by_algo: dict[str, list[_QueryState]] = {}
-        for st in active:
-            by_algo.setdefault(st.query.algo or algo, []).append(st)
-        plan_of: dict[int, np.ndarray] = {}
-        for a, group in by_algo.items():
-            for st, plan in zip(group, _plan_wave(engine, group, a)):
-                plan_of[id(st)] = plan
-        plans = [plan_of[id(st)] for st in active]
-        # per-query §4.1 post-plan steps: drop already-fetched blocks, ascending
-        # fetch order (setdiff1d returns sorted ids)
-        wave_blocks: list[np.ndarray] = []
-        for st, plan in zip(active, plans):
-            blocks = np.setdiff1d(plan, st.exclude)
-            if blocks.size == 0:
-                st.done = True  # plan exhausted: nothing new to read
-            wave_blocks.append(blocks)
-        union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
-        if union.size:
-            cache.ensure(union)
-        progressed = False
-        for st, blocks in zip(active, wave_blocks):
-            if blocks.size == 0:
-                continue
-            progressed = True
-            bd, bm, bv = cache.gather(blocks)
-            mask = np.asarray(engine._mask(bd, st.query.predicates, st.query.op) & bv)
-            bi, ri = np.nonzero(mask)
-            st.rec_blocks.append(blocks[bi])
-            st.rec_rows.append(ri)
-            st.meas.append(np.asarray(bm)[bi, ri])
-            st.planned.append(blocks)
-            requested_total += int(blocks.size)
-            st.got += int(bi.size)
-            st.exclude = np.concatenate([st.exclude, blocks])
-            st.need = st.query.k - st.got
-            st.rounds += 1
-            if st.got >= st.query.k:
-                st.done = True
-        if not progressed:
-            break
-        waves += 1
+    try:
+        while waves < engine.max_refills:
+            active = [st for st in states if not st.done]
+            if not active:
+                break
+            # per-query algo override: plan each algo group in its own wave call
+            by_algo: dict[str, list[_QueryState]] = {}
+            for st in active:
+                by_algo.setdefault(st.query.algo or algo, []).append(st)
+            plan_of: dict[int, np.ndarray] = {}
+            for a, group in by_algo.items():
+                for st, plan in zip(group, _plan_wave(engine, group, a)):
+                    plan_of[id(st)] = plan
+            plans = [plan_of[id(st)] for st in active]
+            # per-query §4.1 post-plan steps: drop already-fetched blocks,
+            # ascending fetch order (setdiff1d returns sorted ids)
+            wave_blocks: list[np.ndarray] = []
+            for st, plan in zip(active, plans):
+                blocks = np.setdiff1d(plan, st.exclude)
+                if blocks.size == 0:
+                    st.done = True  # plan exhausted: nothing new to read
+                wave_blocks.append(blocks)
+            union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
+            if union.size:
+                for b in union:
+                    if int(b) not in touched_set:
+                        touched_set.add(int(b))
+                        touched.append(int(b))
+                cache.ensure(engine.store, union)
+            progressed = False
+            for st, blocks in zip(active, wave_blocks):
+                if blocks.size == 0:
+                    continue
+                progressed = True
+                bd, bm, bv = cache.get_many(engine.store, blocks)
+                mask = np.asarray(engine._mask(bd, st.query.predicates, st.query.op) & bv)
+                bi, ri = np.nonzero(mask)
+                st.rec_blocks.append(blocks[bi])
+                st.rec_rows.append(ri)
+                st.meas.append(np.asarray(bm)[bi, ri])
+                st.planned.append(blocks)
+                requested_total += int(blocks.size)
+                st.got += int(bi.size)
+                st.exclude = np.concatenate([st.exclude, blocks])
+                st.need = st.query.k - st.got
+                st.rounds += 1
+                if st.got >= st.query.k:
+                    st.done = True
+            if not progressed:
+                break
+            waves += 1
+    finally:
+        cache.fetch_log = prev_log
 
     cpu = time.perf_counter() - t0
     results = []
@@ -364,11 +397,15 @@ def run_batch(
                 plan_rounds=st.rounds,
             )
         )
+    touched_ids = np.asarray(touched, dtype=np.int64)
     return BatchQueryResult(
         results=results,
-        unique_blocks_fetched=cache.ids.copy(),
+        unique_blocks_fetched=touched_ids,
         blocks_requested_total=requested_total,
         rounds=waves,
         cpu_time_s=cpu,
-        modeled_io_s=engine.cost.io_time(cache.ids),
+        modeled_io_s=engine.cost.io_time(touched_ids),
+        store_blocks_fetched=int(cache.stats.store_blocks_fetched - store0),
+        modeled_store_io_s=sum(engine.cost.io_time(m) for m in missed),
+        cache_hits=int(cache.stats.hits - hits0),
     )

@@ -25,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -247,17 +248,41 @@ class DistributedAnyK:
 
     def __init__(self, mesh: Mesh, axis="data", records_per_block: int = 8192,
                  candidates: int = 16, max_refills: int = 4,
-                 bisect_above: int = 512):
+                 bisect_above: int = 512, block_cache=None):
         self.mesh = mesh
         self.axis = axis
         self.rpb = records_per_block
         self.candidates = candidates
         self.max_refills = max_refills
+        # optional engine-lifetime LRU (repro.core.block_cache.BlockLRUCache);
+        # pass NeedleTailEngine.block_cache to share one cache across the
+        # scalar, batched, and sharded fetch paths
+        self.block_cache = block_cache
         sz = 1
         for a in (axis if isinstance(axis, tuple) else (axis,)):
             sz *= mesh.shape[a]
         self.num_shards = sz
         self.use_bisect = sz > bisect_above
+
+    @staticmethod
+    def plan_block_ids(plan) -> "np.ndarray":
+        """Materialize a sharded plan's block ids on the host (§4.1 ascending
+        fetch order)."""
+        if isinstance(plan, ShardedThresholdResult):
+            ids = np.asarray(plan.block_ids)[: int(plan.num_selected)]
+            return np.sort(ids.astype(np.int64))
+        if isinstance(plan, ShardedTwoProngResult):
+            return np.arange(int(plan.start_block), int(plan.end_block), dtype=np.int64)
+        raise TypeError(f"cannot materialize block ids from {type(plan).__name__}")
+
+    def fetch_plan(self, store, plan):
+        """Fetch a sharded plan's blocks through the shared engine-lifetime
+        LRU when one is attached (``block_cache``), else straight from the
+        store.  Returns ``(block_ids, dims, measures, valid)``."""
+        ids = self.plan_block_ids(plan)
+        if self.block_cache is not None:
+            return (ids, *self.block_cache.get_many(store, ids))
+        return (ids, *store.fetch(ids))
 
     def threshold_plan(self, combined_global: jax.Array, k: float):
         if self.use_bisect:

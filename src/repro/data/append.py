@@ -18,8 +18,25 @@ from repro.core.density_map import DensityMapIndex
 from repro.data.block_store import BlockStore, Table
 
 
+def dirtied_block_ids(store: BlockStore, num_new: int) -> np.ndarray:
+    """Block ids an append of ``num_new`` records rewrites or creates: the
+    trailing partial block plus every newly created block.  This is exactly
+    the id range whose cached slabs / density columns go stale."""
+    rpb = store.records_per_block
+    first_touched = store.num_records // rpb
+    lam_new = -(-(store.num_records + num_new) // rpb)
+    return np.arange(first_touched, lam_new, dtype=np.int64)
+
+
 def append_records(store: BlockStore, new: Table) -> BlockStore:
-    """Returns a new BlockStore with `new` rows appended (same schema)."""
+    """Returns a new BlockStore with `new` rows appended (same schema).
+
+    Invalidation hook: listeners registered on ``store`` (see
+    :meth:`BlockStore.register_invalidation_listener`) are notified with the
+    dirtied tail block ids — only the trailing partial block and the newly
+    created blocks — and are carried over to the returned store, so an
+    engine-lifetime block cache survives the append with surgical eviction.
+    """
     rpb = store.records_per_block
     old_n = store.num_records
     dims_flat = np.concatenate([
@@ -41,10 +58,10 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
     # density columns: reuse untouched prefix, recompute only touched blocks
     idx = store.index
     old_dens = np.asarray(idx.densities)
-    first_touched = old_n // rpb  # trailing partial (or first new) block
+    touched = dirtied_block_ids(store, new.num_records)
+    first_touched = int(touched[0]) if touched.size else lam_new
     dens = np.zeros((idx.vocab.num_rows, lam_new), np.float32)
     dens[:, :first_touched] = old_dens[:, :first_touched]
-    touched = np.arange(first_touched, lam_new)
     off = idx.vocab.attr_offsets
     for b in touched:
         blk = dims_b[b]
@@ -63,7 +80,7 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
         records_per_block=rpb,
         num_records=n,
     )
-    return BlockStore(
+    grown = BlockStore(
         dims=jnp.asarray(dims_b),
         measures=jnp.asarray(meas_b),
         valid_rows=jnp.asarray(valid_b),
@@ -71,3 +88,6 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
         records_per_block=rpb,
         num_records=n,
     )
+    grown._invalidation_listeners = list(store._invalidation_listeners)
+    store.notify_invalidated(touched)
+    return grown

@@ -11,6 +11,7 @@ validity mask; the engine charges I/O for fetched blocks through the cost model.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Sequence
 
 import jax
@@ -57,6 +58,43 @@ class BlockStore:
         self._dims_np = np.asarray(self.dims)
         self._meas_np = np.asarray(self.measures)
         self._valid_np = np.asarray(self.valid_rows)
+        # callbacks fired with the dirtied block ids when the write path
+        # (repro.data.append) rewrites blocks of this store's lineage
+        self._invalidation_listeners: list = []
+
+    # --------------------------------------------------- cache invalidation
+    def register_invalidation_listener(self, callback) -> None:
+        """Register ``callback(block_ids)`` to run when blocks are rewritten.
+
+        The append path (:func:`repro.data.append.append_records`) notifies
+        with exactly the dirtied tail block ids, so an engine-lifetime block
+        cache can evict surgically instead of flushing wholesale.  Listeners
+        are carried over to the successor store the append returns.  Bound
+        methods are held weakly: a store outlives throwaway engines, and a
+        strong ref here would pin every dead engine's whole block cache.
+        """
+        if any(ref() == callback for ref in self._invalidation_listeners):
+            return
+        if hasattr(callback, "__self__"):
+            ref = weakref.WeakMethod(callback)
+        else:  # plain function/lambda: keep strong (nothing big to pin)
+            ref = lambda cb=callback: cb  # noqa: E731
+        self._invalidation_listeners.append(ref)
+
+    def unregister_invalidation_listener(self, callback) -> None:
+        self._invalidation_listeners = [
+            ref for ref in self._invalidation_listeners
+            if ref() is not None and ref() != callback
+        ]
+
+    def notify_invalidated(self, block_ids: np.ndarray) -> None:
+        alive = []
+        for ref in self._invalidation_listeners:
+            cb = ref()
+            if cb is not None:
+                cb(np.asarray(block_ids, dtype=np.int64))
+                alive.append(ref)
+        self._invalidation_listeners = alive
 
     def fetch(self, block_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Gather block slabs: (dims [B,R,r], measures [B,R,s], row_valid [B,R])."""

@@ -1,3 +1,7 @@
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.admission import AdmissionController, AdmissionPolicy, AdmissionStats
+from repro.serving.engine import ExemplarRequest, Request, ServeEngine
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "AdmissionController", "AdmissionPolicy", "AdmissionStats",
+    "ExemplarRequest", "Request", "ServeEngine",
+]

@@ -1,0 +1,208 @@
+"""Async SLO admission for the batched serving path (BlinkDB-style bounded
+response time).
+
+The synchronous wave drain served exemplar requests in fixed waves of
+``max_slots`` with no latency control: a lone request waited until someone
+called drain, and a flood launched under-filled waves back to back.  The
+:class:`AdmissionController` replaces that with an explicit policy:
+
+* requests **accumulate** while the queue is short and every deadline is in
+  the future (larger waves → more shared-fetch dedup and plan-memo reuse);
+* a wave **launches opportunistically** the moment it is full
+  (``max_wave``), or as soon as the *oldest* request's latency SLO
+  (``slo_s``) would otherwise be violated — whichever comes first;
+* waves are FIFO, so no request can starve: the oldest request's deadline
+  bounds the wait of everything behind it.
+
+The controller is clock-injectable (``clock=...``) and performs no I/O and no
+threading itself: callers drive it with :meth:`poll` (launch-ready wave or
+``None``) from whatever loop they own — a ServeEngine tick, an asyncio task,
+or a deterministic simulation (``tests/test_admission.py``).  ``flush``
+drains everything immediately (the synchronous barrier, kept for the
+drain-everything API).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Latency/throughput trade for wave admission.
+
+    ``slo_s`` — max seconds a request may wait in the queue before its wave
+    is forced out.  ``max_wave`` — wave size cap (and the eager-launch
+    threshold: a full wave never waits).  ``min_wave`` — waves smaller than
+    this wait for the SLO deadline even if polled (batching floor; 1 means a
+    deadline launch always happens, whatever the queue depth).
+    """
+
+    slo_s: float = 0.05
+    max_wave: int = 8
+    min_wave: int = 1
+
+    def __post_init__(self):
+        if self.slo_s < 0:
+            raise ValueError("slo_s must be >= 0")
+        if self.max_wave < 1:
+            raise ValueError("max_wave must be >= 1")
+        if not (1 <= self.min_wave <= self.max_wave):
+            raise ValueError("need 1 <= min_wave <= max_wave")
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    submitted: int = 0
+    served: int = 0
+    waves: int = 0
+    full_waves: int = 0  # launched because the wave filled
+    deadline_waves: int = 0  # launched because the oldest SLO came due
+    flush_waves: int = 0  # launched by an explicit flush barrier
+    max_wave_size: int = 0
+    total_wait_s: float = 0.0
+    max_wait_s: float = 0.0
+    slo_violations: int = 0  # waits beyond slo_s (flush/overload artifacts)
+
+    @property
+    def mean_wait_s(self) -> float:
+        return self.total_wait_s / self.served if self.served else 0.0
+
+    @property
+    def mean_wave_size(self) -> float:
+        return self.served / self.waves if self.waves else 0.0
+
+
+class AdmissionController:
+    """FIFO admission queue with SLO-deadline / full-wave launch policy."""
+
+    def __init__(
+        self,
+        policy: AdmissionPolicy | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.policy = policy or AdmissionPolicy()
+        self.clock = clock
+        self.stats = AdmissionStats()
+        self._pending: "deque[tuple[Any, float]]" = deque()  # (request, t_submit)
+        self._last_pop: dict | None = None  # rollback record for requeue_front
+
+    # ----------------------------------------------------------------- state
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def next_deadline(self) -> float | None:
+        """Absolute time the oldest pending request must launch by."""
+        if not self._pending:
+            return None
+        return self._pending[0][1] + self.policy.slo_s
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, request: Any) -> Any:
+        self._pending.append((request, self.clock()))
+        self.stats.submitted += 1
+        return request
+
+    def requeue_front(self, requests) -> None:
+        """Put a failed wave back at the head of the queue (FIFO order
+        preserved) so no admitted request is silently lost.  Wait clocks
+        restart; ``submitted`` is not re-counted, and if `requests` is
+        exactly the wave of the most recent pop, that pop's launch
+        accounting (served/waves/waits) is rolled back so stats reflect only
+        waves that actually ran."""
+        requests = list(requests)
+        lp = self._last_pop
+        if lp is not None and lp["ids"] == [id(r) for r in requests]:
+            s = self.stats
+            s.served -= lp["n"]
+            s.waves -= 1
+            s.total_wait_s -= lp["wait"]
+            s.max_wait_s = lp["prev_max_wait"]
+            s.max_wave_size = lp["prev_max_size"]
+            s.slo_violations -= lp["violations"]
+            setattr(s, lp["reason"], getattr(s, lp["reason"]) - 1)
+            self._last_pop = None
+        now = self.clock()
+        for r in reversed(requests):
+            self._pending.appendleft((r, now))
+
+    # ---------------------------------------------------------------- launch
+    def _pop_wave(self, n: int, now: float, reason: str) -> list[Any]:
+        wave = []
+        wait_sum = 0.0
+        violations = 0
+        prev_max_wait = self.stats.max_wait_s
+        prev_max_size = self.stats.max_wave_size
+        for _ in range(min(n, len(self._pending))):
+            req, t_sub = self._pending.popleft()
+            wait = max(now - t_sub, 0.0)
+            wait_sum += wait
+            self.stats.max_wait_s = max(self.stats.max_wait_s, wait)
+            if wait > self.policy.slo_s + 1e-9:
+                violations += 1
+            wave.append(req)
+        self.stats.total_wait_s += wait_sum
+        self.stats.slo_violations += violations
+        self.stats.served += len(wave)
+        self.stats.waves += 1
+        self.stats.max_wave_size = max(self.stats.max_wave_size, len(wave))
+        setattr(self.stats, reason, getattr(self.stats, reason) + 1)
+        self._last_pop = dict(
+            n=len(wave), ids=[id(r) for r in wave], wait=wait_sum,
+            violations=violations, reason=reason,
+            prev_max_wait=prev_max_wait, prev_max_size=prev_max_size,
+        )
+        return wave
+
+    def poll(self, now: float | None = None) -> list[Any] | None:
+        """The opportunistic-launch decision: a full wave launches
+        immediately; otherwise a wave of everything pending (≤ ``max_wave``)
+        launches iff the oldest deadline has come due and the batching floor
+        ``min_wave`` is met (the floor yields to the deadline only when
+        overridden by ``flush``).  Returns the wave, or ``None`` to keep
+        accumulating."""
+        now = self.clock() if now is None else now
+        p = self.policy
+        if len(self._pending) >= p.max_wave:
+            return self._pop_wave(p.max_wave, now, "full_waves")
+        deadline = self.next_deadline()
+        if (
+            deadline is not None
+            and now >= deadline
+            and len(self._pending) >= p.min_wave
+        ):
+            return self._pop_wave(p.max_wave, now, "deadline_waves")
+        return None
+
+    def drain_ready(self, now: float | None = None) -> list[list[Any]]:
+        """Launch every wave that is ready right now (0+ waves)."""
+        waves = []
+        while True:
+            w = self.poll(now)
+            if not w:
+                return waves
+            waves.append(w)
+
+    def flush_one(self, now: float | None = None) -> list[Any] | None:
+        """Pop ONE wave (≤ ``max_wave``), deadline or not; ``None`` when
+        empty.  Callers that execute waves should prefer this over
+        :meth:`flush` so waves not yet popped survive an execution failure."""
+        if not self._pending:
+            return None
+        now = self.clock() if now is None else now
+        return self._pop_wave(self.policy.max_wave, now, "flush_waves")
+
+    def flush(self, now: float | None = None) -> list[list[Any]]:
+        """Synchronous barrier: launch everything pending in FIFO waves of
+        ``max_wave``, deadlines or not."""
+        now = self.clock() if now is None else now
+        waves = []
+        while self._pending:
+            waves.append(self.flush_one(now))
+        return waves

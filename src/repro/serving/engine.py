@@ -12,15 +12,20 @@ counter stays scalar — the shape the multi-pod decode dry-run lowers.
 The NeedleTail tie-in: :meth:`select_exemplars` retrieves k cached exemplars
 matching request predicates through the any-k engine (few-shot selection
 without scanning the exemplar store).  Exemplar lookups are admitted through
-their own queue and drained in waves: :meth:`drain_exemplar_requests` sends
-each wave through one batched any-k call (:meth:`NeedleTailEngine.any_k_batch`),
-so concurrent requests share one vectorized plan and one deduplicated block
-fetch instead of Q independent engine passes.
+an SLO admission controller (:mod:`repro.serving.admission`): requests
+accumulate under a configurable latency SLO / max-wave-size policy and waves
+launch opportunistically — :meth:`pump_exemplar_requests` runs only the waves
+that are ready (full, or oldest deadline due), :meth:`drain_exemplar_requests`
+is the flush-everything barrier.  Each launched wave goes through ONE batched
+any-k call (:meth:`NeedleTailEngine.any_k_batch`), so concurrent requests
+share one vectorized plan, the engine-lifetime block LRU, and the cross-batch
+plan-order memo instead of Q independent engine passes.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Any
 
@@ -30,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import decode as D
+from repro.serving.admission import AdmissionController, AdmissionPolicy
 
 
 @dataclasses.dataclass
@@ -63,6 +69,8 @@ class ServeEngine:
         eos_id: int | None = None,
         pad_id: int = 0,
         rules=None,
+        exemplar_policy: AdmissionPolicy | None = None,
+        clock=time.monotonic,
     ):
         self.cfg = cfg
         self.params = params
@@ -72,7 +80,10 @@ class ServeEngine:
         self.pad_id = pad_id
         self.rules = rules
         self.queue: deque[Request] = deque()
-        self.exemplar_queue: deque[ExemplarRequest] = deque()
+        self.exemplar_queue: deque[ExemplarRequest] = deque()  # legacy intake
+        self.exemplar_admission = AdmissionController(
+            exemplar_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
+        )
         self._rid = itertools.count()
         self._decode = jax.jit(
             lambda p, c, t, pos: D.decode_step(p, c, t, pos, cfg, rules)
@@ -139,34 +150,69 @@ class ServeEngine:
         """any-k retrieval of k cached exemplars matching request predicates."""
         return engine.any_k(predicates, k=k, algo="auto")
 
+    def _exemplar_admission(self) -> AdmissionController:
+        """The admission controller, created lazily for engines built without
+        ``__init__`` (test shims); anything pushed straight onto the legacy
+        ``exemplar_queue`` deque is migrated into the controller FIFO."""
+        adm = getattr(self, "exemplar_admission", None)
+        if adm is None:
+            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots))
+            self.exemplar_admission = adm
+        q = getattr(self, "exemplar_queue", None)
+        while q:
+            adm.submit(q.popleft())
+        return adm
+
     def submit_exemplar_request(self, predicates, k: int, op: str = "and") -> ExemplarRequest:
-        """Admit an exemplar lookup; evaluated on the next drained wave."""
+        """Admit an exemplar lookup under the SLO policy; it rides in the next
+        wave that launches (full wave, SLO deadline, or drain barrier)."""
         req = ExemplarRequest(next(self._rid), predicates, k, op)
-        self.exemplar_queue.append(req)
+        self._exemplar_admission().submit(req)
         return req
 
-    def drain_exemplar_requests(self, engine) -> list[ExemplarRequest]:
-        """Drain the exemplar queue in waves of ``max_slots``, each wave
-        evaluated through ONE batched any-k call: the wave's plans are
-        vectorized together and its block union is fetched once (shared-fetch
-        scheduling, :mod:`repro.core.multi_query`)."""
+    def _run_exemplar_wave(self, engine, wave: list[ExemplarRequest]) -> None:
         from repro.core.multi_query import BatchQuery
 
+        try:
+            batch = engine.any_k_batch(
+                [BatchQuery(r.predicates, r.k, r.op) for r in wave], algo="auto"
+            )
+        except Exception:
+            # put the wave back so no admitted request is silently lost
+            self._exemplar_admission().requeue_front(wave)
+            raise
+        for req, res in zip(wave, batch.results):
+            req.result = res
+            req.done = True
+
+    def pump_exemplar_requests(self, engine, now: float | None = None) -> list[ExemplarRequest]:
+        """Opportunistic admission tick: launch every wave that is ready
+        under the SLO policy (full wave or oldest-deadline due) and evaluate
+        each through one batched any-k call.  Under-filled waves whose SLO
+        still has slack keep accumulating — call again later (or use
+        ``exemplar_admission.next_deadline()`` to schedule the next tick).
+        Returns the requests completed by this tick."""
+        adm = self._exemplar_admission()
         done: list[ExemplarRequest] = []
-        while self.exemplar_queue:
-            wave: list[ExemplarRequest] = []
-            while self.exemplar_queue and len(wave) < self.max_slots:
-                wave.append(self.exemplar_queue.popleft())
-            try:
-                batch = engine.any_k_batch(
-                    [BatchQuery(r.predicates, r.k, r.op) for r in wave], algo="auto"
-                )
-            except Exception:
-                # put the wave back so no admitted request is silently lost
-                self.exemplar_queue.extendleft(reversed(wave))
-                raise
-            for req, res in zip(wave, batch.results):
-                req.result = res
-                req.done = True
+        while True:
+            # one wave at a time: if a wave's engine call fails, the waves
+            # not yet popped stay safely queued in the controller
+            wave = adm.poll(now)
+            if not wave:
+                return done
+            self._run_exemplar_wave(engine, wave)
             done.extend(wave)
-        return done
+
+    def drain_exemplar_requests(self, engine) -> list[ExemplarRequest]:
+        """Flush barrier: launch everything pending, deadlines or not, in
+        FIFO waves of the policy's ``max_wave``, each wave evaluated through
+        ONE batched any-k call (shared-fetch scheduling + engine-lifetime
+        block LRU, :mod:`repro.core.multi_query`)."""
+        adm = self._exemplar_admission()
+        done: list[ExemplarRequest] = []
+        while True:
+            wave = adm.flush_one()  # one wave at a time: see pump
+            if not wave:
+                return done
+            self._run_exemplar_wave(engine, wave)
+            done.extend(wave)

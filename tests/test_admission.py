@@ -1,0 +1,219 @@
+"""Async SLO admission: deterministic request-arrival simulations.
+
+Verifies the controller's three invariants under seeded schedules:
+SLO deadlines are honored (a wave launches no later than the oldest
+request's deadline when polled on time), waves never exceed ``max_wave``,
+and every submitted request is eventually served exactly once — no
+starvation under continuous load.  The ServeEngine integration tests drive
+real batched any-k waves through a fake clock.
+"""
+import itertools
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.engine import NeedleTailEngine
+from repro.data.block_store import build_block_store
+from repro.data.synthetic import make_clustered_table
+from repro.serving.admission import AdmissionController, AdmissionPolicy
+from repro.serving.engine import ServeEngine
+
+pytestmark = pytest.mark.serving
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def test_full_wave_launches_immediately():
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=10.0, max_wave=4), clock=clk)
+    for i in range(4):
+        adm.submit(i)
+    wave = adm.poll()
+    assert wave == [0, 1, 2, 3]
+    assert adm.stats.full_waves == 1 and adm.stats.deadline_waves == 0
+    assert adm.stats.max_wait_s == 0.0 and adm.stats.slo_violations == 0
+    assert adm.pending == 0
+
+
+def test_underfilled_wave_accumulates_until_slo_deadline():
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=0.5, max_wave=8), clock=clk)
+    adm.submit("a")
+    clk.advance(0.2)
+    adm.submit("b")
+    assert adm.poll() is None  # SLO slack left: keep accumulating
+    clk.advance(0.25)
+    assert adm.poll() is None  # 0.45 < 0.5: still accumulating
+    clk.advance(0.05)
+    wave = adm.poll()  # oldest hits its deadline exactly at t=0.5
+    assert wave == ["a", "b"]
+    assert adm.stats.deadline_waves == 1
+    assert adm.stats.slo_violations == 0
+    assert adm.stats.max_wait_s <= 0.5 + 1e-9
+
+
+def test_waves_never_exceed_max_size():
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=1.0, max_wave=4), clock=clk)
+    for i in range(11):
+        adm.submit(i)
+    waves = adm.drain_ready()
+    assert [len(w) for w in waves] == [4, 4]  # 3 leftover under deadline
+    assert adm.pending == 3
+    clk.advance(2.0)
+    waves += adm.drain_ready()
+    assert [len(w) for w in waves] == [4, 4, 3]
+    assert list(itertools.chain(*waves)) == list(range(11))  # FIFO, no loss
+    assert adm.stats.max_wave_size == 4
+
+
+def test_min_wave_floor_defers_to_deadline_only_when_met():
+    clk = FakeClock()
+    adm = AdmissionController(
+        AdmissionPolicy(slo_s=0.1, max_wave=8, min_wave=2), clock=clk
+    )
+    adm.submit("x")
+    clk.advance(0.5)  # deadline long past, but floor of 2 not met
+    assert adm.poll() is None
+    adm.submit("y")
+    assert adm.poll() == ["x", "y"]
+    # flush ignores the floor
+    adm.submit("z")
+    assert adm.flush() == [["z"]]
+
+
+def test_requeue_front_preserves_fifo():
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=1.0, max_wave=3), clock=clk)
+    for i in range(5):
+        adm.submit(i)
+    wave = adm.poll()
+    assert wave == [0, 1, 2]
+    adm.requeue_front(wave)  # the wave's engine call failed
+    clk.advance(2.0)
+    assert adm.flush() == [[0, 1, 2], [3, 4]]
+
+
+def test_no_starvation_under_continuous_seeded_load():
+    """Event-driven sim: Poisson-ish arrivals forever outpacing max_wave.
+    Every request must be served, in order, within its SLO."""
+    rng = np.random.default_rng(7)
+    clk = FakeClock()
+    policy = AdmissionPolicy(slo_s=0.05, max_wave=4)
+    adm = AdmissionController(policy, clock=clk)
+    served: list[int] = []
+    # burst phase (arrivals outpace max_wave: full-wave launches) followed by
+    # a sparse tail (inter-arrival ≈ 2×SLO: deadline launches)
+    gaps = np.concatenate(
+        [rng.exponential(0.004, 400), rng.exponential(0.1, 40)]
+    )
+    arrivals = deque((float(t), i) for i, t in enumerate(np.cumsum(gaps)))
+    n_total = len(arrivals)
+    while arrivals or adm.pending:
+        # next event: an arrival or the oldest pending request's deadline
+        t_arr = arrivals[0][0] if arrivals else float("inf")
+        t_due = adm.next_deadline()
+        t_due = float("inf") if t_due is None else t_due
+        if t_arr <= t_due:
+            clk.t = t_arr
+            adm.submit(arrivals.popleft()[1])
+        else:
+            clk.t = t_due
+        for wave in adm.drain_ready():
+            assert len(wave) <= policy.max_wave
+            served.extend(wave)
+    assert served == list(range(n_total))  # everyone served, FIFO, exactly once
+    assert adm.stats.slo_violations == 0  # polled at deadlines: SLO always met
+    assert adm.stats.max_wait_s <= policy.slo_s + 1e-9
+    assert adm.stats.full_waves > 0 and adm.stats.deadline_waves > 0
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine integration: real batched any-k waves under a fake clock.
+# ---------------------------------------------------------------------------
+def _serve_shim(policy: AdmissionPolicy, clk: FakeClock) -> ServeEngine:
+    serve = ServeEngine.__new__(ServeEngine)  # no LM needed for exemplar path
+    serve.max_slots = policy.max_wave
+    serve.exemplar_queue = deque()
+    serve.exemplar_admission = AdmissionController(policy, clock=clk)
+    serve._rid = itertools.count()
+    return serve
+
+
+@pytest.fixture(scope="module")
+def anyk_engine():
+    t = make_clustered_table(num_records=12_000, num_dims=4, density=0.15, seed=5)
+    return NeedleTailEngine(build_block_store(t, records_per_block=64))
+
+
+def test_pump_launches_only_ready_waves(anyk_engine):
+    clk = FakeClock()
+    serve = _serve_shim(AdmissionPolicy(slo_s=0.1, max_wave=4), clk)
+    reqs = [serve.submit_exemplar_request([(0, 1)], 30) for _ in range(6)]
+    done = serve.pump_exemplar_requests(anyk_engine)
+    assert [r.rid for r in done] == [r.rid for r in reqs[:4]]  # one full wave
+    assert not reqs[4].done and not reqs[5].done  # SLO slack: accumulating
+    clk.advance(0.2)  # oldest leftover passes its deadline
+    done2 = serve.pump_exemplar_requests(anyk_engine)
+    assert [r.rid for r in done2] == [r.rid for r in reqs[4:]]
+    ref = anyk_engine.any_k([(0, 1)], 30, algo="auto")
+    for r in reqs:
+        assert r.done
+        np.testing.assert_array_equal(r.result.record_block, ref.record_block)
+        np.testing.assert_array_equal(r.result.record_row, ref.record_row)
+        np.testing.assert_array_equal(r.result.measures, ref.measures)
+
+
+def test_drain_is_a_flush_barrier(anyk_engine):
+    clk = FakeClock()
+    serve = _serve_shim(AdmissionPolicy(slo_s=100.0, max_wave=4), clk)
+    reqs = [serve.submit_exemplar_request([(1, 1)], 20) for _ in range(7)]
+    assert serve.pump_exemplar_requests(anyk_engine) and serve.exemplar_admission.pending == 3
+    done = serve.drain_exemplar_requests(anyk_engine)  # ignores the far SLO
+    assert len(done) == 3 and all(r.done for r in reqs)
+    assert serve.exemplar_admission.stats.max_wave_size <= 4
+
+
+def test_failed_wave_is_requeued_not_lost(anyk_engine):
+    """A failing wave is requeued AND the waves behind it are never popped —
+    7 pending across 3 waves must all survive the failure, in order, and the
+    failed launch must not pollute the served/wave stats."""
+    clk = FakeClock()
+    serve = _serve_shim(AdmissionPolicy(slo_s=0.0, max_wave=3), clk)
+
+    class Boom:
+        def any_k_batch(self, queries, algo="auto"):
+            raise RuntimeError("engine down")
+
+    reqs = [serve.submit_exemplar_request([(0, 1)], 10) for _ in range(7)]
+    with pytest.raises(RuntimeError):
+        serve.drain_exemplar_requests(Boom())
+    adm = serve.exemplar_admission
+    assert adm.pending == 7  # nothing silently lost, trailing waves included
+    assert adm.stats.served == 0 and adm.stats.waves == 0  # rollback applied
+    done = serve.drain_exemplar_requests(anyk_engine)
+    assert [r.rid for r in done] == [r.rid for r in reqs] and all(r.done for r in reqs)
+    assert adm.stats.served == 7 and adm.stats.waves == 3
+
+
+def test_legacy_queue_intake_migrates_into_controller(anyk_engine):
+    """Requests pushed straight onto the legacy exemplar_queue deque (the
+    pre-admission API) are admitted on the next drain."""
+    from repro.serving.engine import ExemplarRequest
+
+    clk = FakeClock()
+    serve = _serve_shim(AdmissionPolicy(slo_s=0.01, max_wave=2), clk)
+    serve.exemplar_queue.append(ExemplarRequest(99, [(0, 1)], 15))
+    done = serve.drain_exemplar_requests(anyk_engine)
+    assert len(done) == 1 and done[0].rid == 99 and done[0].result.num_records >= 15

@@ -1,0 +1,319 @@
+"""Engine-lifetime block LRU: property-based equivalence across cache states.
+
+The contract under test: ``any_k`` / ``any_k_batch`` results are *byte-
+identical* whether the engine's block cache is cold, warm, byte-budget-
+constrained (forced evictions), disabled, or freshly invalidated by an
+append — only the physical I/O schedule may differ.  Data layouts cover the
+paper's regimes (clustered / uniform / skewed) and AND/OR predicate sets.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.block_cache import BlockLRUCache
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.data.block_store import Table, build_block_store
+from repro.data.synthetic import make_clustered_table
+
+pytestmark = pytest.mark.serving
+
+RPB = 64
+
+
+def _make_table(kind: str, seed: int, n: int = 6_000) -> Table:
+    rng = np.random.default_rng(seed)
+    if kind == "clustered":
+        return make_clustered_table(num_records=n, num_dims=4, density=0.15,
+                                    seed=seed, mean_cluster=48)
+    if kind == "uniform":
+        return Table(
+            dims=rng.integers(0, 3, (n, 4)).astype(np.int32),
+            measures=rng.normal(size=(n, 2)).astype(np.float32),
+            cards=np.asarray([3, 3, 3, 3]),
+        )
+    if kind == "skewed":
+        # all density piled at one end: the refill-heavy layout
+        dims = np.zeros((n, 4), np.int32)
+        dims[: n // 10, 0] = 1
+        dims[:, 1] = rng.integers(0, 2, n)
+        dims[:, 2] = (np.arange(n) // RPB) % 3
+        dims[:, 3] = rng.integers(0, 3, n)
+        return Table(
+            dims=dims,
+            measures=rng.normal(size=(n, 2)).astype(np.float32),
+            cards=np.asarray([2, 2, 3, 3]),
+        )
+    raise ValueError(kind)
+
+
+_STORES: dict = {}
+
+
+def _store(kind: str, seed: int):
+    key = (kind, seed)
+    if key not in _STORES:
+        _STORES[key] = build_block_store(_make_table(kind, seed), RPB)
+    return _STORES[key]
+
+
+def _block_nbytes(store) -> int:
+    s = store
+    per = s.records_per_block
+    return per * (s.dims.shape[-1] * 4 + s.measures.shape[-1] * 4 + 1)
+
+
+# (predicates, k, op) pools mixing AND and OR over the 4 attrs; values stay
+# in {0, 1} so every layout's cards admit them
+QUERY_POOL = [
+    ([(0, 1)], 40, "and"),
+    ([(0, 1), (1, 1)], 120, "and"),
+    ([(1, 1), (2, 1)], 60, "or"),
+    ([(2, 0)], 25, "and"),
+    ([(0, 1), (2, 1), (3, 1)], 200, "and"),
+    ([(3, 1), (1, 0)], 90, "or"),
+    ([(1, 0)], 500, "and"),
+]
+
+
+def _queries(spec) -> list[BatchQuery]:
+    return [BatchQuery(p, k, op) for (p, k, op) in spec]
+
+
+def _assert_result_equal(a, b):
+    np.testing.assert_array_equal(a.record_block, b.record_block)
+    np.testing.assert_array_equal(a.record_row, b.record_row)
+    np.testing.assert_array_equal(a.measures, b.measures)
+    np.testing.assert_array_equal(a.blocks_fetched, b.blocks_fetched)
+    assert a.plan_rounds == b.plan_rounds
+    assert a.algo == b.algo
+
+
+def _assert_batch_equal(a, b):
+    assert len(a.results) == len(b.results)
+    for ra, rb in zip(a.results, b.results):
+        _assert_result_equal(ra, rb)
+
+
+# ---------------------------------------------------------------------------
+# Property: cold == warm == budget-constrained == cache-disabled, per query
+# and per batch, across layouts / predicate ops / algorithms.
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from(("clustered", "uniform", "skewed")),
+    st.integers(0, 2),
+    st.sampled_from(("threshold", "two_prong", "auto")),
+    st.lists(st.sampled_from(QUERY_POOL), min_size=1, max_size=5),
+)
+def test_equivalence_across_cache_states(kind, seed, algo, spec):
+    store = _store(kind, seed)
+    queries = _queries(spec)
+
+    ref_eng = NeedleTailEngine(store, cache_bytes=0)  # cache disabled
+    ref_batch = ref_eng.any_k_batch(queries, algo=algo)
+    ref_seq = [
+        ref_eng.any_k(q.predicates, q.k, op=q.op, algo=algo) for q in queries
+    ]
+
+    # cold, unbounded cache
+    eng = NeedleTailEngine(store)
+    cold = eng.any_k_batch(queries, algo=algo)
+    _assert_batch_equal(cold, ref_batch)
+    for q, r in zip(queries, ref_seq):
+        _assert_result_equal(eng.any_k(q.predicates, q.k, op=q.op, algo=algo), r)
+
+    # warm repeat: byte-identical results, zero physical store reads
+    warm = eng.any_k_batch(queries, algo=algo)
+    _assert_batch_equal(warm, ref_batch)
+    assert warm.store_blocks_fetched == 0
+    assert warm.cache_hits > 0
+    assert warm.store_dedup_ratio == float("inf")
+
+    # byte-budget-constrained: room for only ~3 blocks -> forced evictions
+    tiny = NeedleTailEngine(store, cache_bytes=3 * _block_nbytes(store))
+    constrained = tiny.any_k_batch(queries, algo=algo)
+    _assert_batch_equal(constrained, ref_batch)
+    again = tiny.any_k_batch(queries, algo=algo)
+    _assert_batch_equal(again, ref_batch)
+    if cold.unique_blocks_fetched.size > 3:
+        assert tiny.block_cache.stats.evictions > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: append-driven invalidation evicts ONLY the dirtied tail; queries
+# on the grown store match a from-scratch engine byte for byte.
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    st.sampled_from(("clustered", "uniform", "skewed")),
+    st.integers(0, 2),
+    st.integers(1, 400),
+    st.lists(st.sampled_from(QUERY_POOL), min_size=1, max_size=4),
+)
+def test_append_invalidation_equivalence(kind, seed, n_extra, spec):
+    base = _make_table(kind, seed)
+    extra_full = _make_table(kind, seed + 100)
+    extra = Table(
+        dims=extra_full.dims[:n_extra],
+        measures=extra_full.measures[:n_extra],
+        cards=base.cards,
+    )
+    store = build_block_store(base, RPB)
+    eng = NeedleTailEngine(store)
+    queries = _queries(spec)
+    eng.any_k_batch(queries, algo="auto")  # warm the cache
+
+    first_touched = store.num_records // RPB
+    cached_before = {b for b in range(store.num_blocks) if b in eng.block_cache}
+    clean_before = {b for b in cached_before if b < first_touched}
+
+    grown = eng.append(extra)
+    # surgical invalidation: every dirtied tail block is gone ...
+    for b in range(first_touched, grown.num_blocks):
+        assert b not in eng.block_cache
+    # ... and every clean cached block survived the append
+    for b in clean_before:
+        assert b in eng.block_cache
+
+    ref = NeedleTailEngine(grown, cache_bytes=0)
+    for algo in ("threshold", "auto"):
+        _assert_batch_equal(
+            eng.any_k_batch(queries, algo=algo),
+            ref.any_k_batch(queries, algo=algo),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Unit coverage for the LRU mechanics themselves.
+# ---------------------------------------------------------------------------
+def test_lru_evicts_least_recently_used():
+    store = _store("uniform", 0)
+    nb = _block_nbytes(store)
+    cache = BlockLRUCache(capacity_bytes=3 * nb)
+    cache.get_many(store, np.asarray([0, 1, 2]))
+    cache.get_many(store, np.asarray([0]))  # touch 0 -> 1 is now LRU
+    cache.get_many(store, np.asarray([3]))  # evicts 1
+    assert 1 not in cache and all(b in cache for b in (0, 2, 3))
+    assert cache.stats.evictions == 1
+    assert cache.stats.bytes_cached == 3 * nb
+    assert len(cache) == 3
+
+
+def test_byte_budget_never_exceeded():
+    store = _store("uniform", 0)
+    nb = _block_nbytes(store)
+    cache = BlockLRUCache(capacity_bytes=4 * nb)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        ids = rng.choice(store.num_blocks, size=rng.integers(1, 6), replace=False)
+        bd, bm, bv = cache.get_many(store, np.sort(ids))
+        ref = store.fetch(np.sort(ids))
+        np.testing.assert_array_equal(bd, ref[0])
+        np.testing.assert_array_equal(bm, ref[1])
+        np.testing.assert_array_equal(bv, ref[2])
+        assert cache.stats.bytes_cached <= 4 * nb
+    assert cache.stats.evictions > 0
+
+
+def test_oversized_request_reads_each_block_once():
+    """A request larger than the whole byte budget must not thrash: every
+    miss is read once from the store and served from the in-scope miss batch
+    even after its slab was evicted to fit later blocks."""
+    store = _store("uniform", 0)
+    nb = _block_nbytes(store)
+    cache = BlockLRUCache(capacity_bytes=2 * nb)
+    ids = np.arange(6)
+    bd, bm, bv = cache.get_many(store, ids)
+    ref = store.fetch(ids)
+    np.testing.assert_array_equal(bd, ref[0])
+    np.testing.assert_array_equal(bm, ref[1])
+    np.testing.assert_array_equal(bv, ref[2])
+    assert cache.stats.store_blocks_fetched == 6  # exactly once each
+    assert cache.stats.store_fetch_calls == 1
+
+
+def test_invalidate_evicts_exactly_the_given_ids():
+    store = _store("uniform", 1)
+    cache = BlockLRUCache()
+    cache.get_many(store, np.arange(8))
+    n = cache.invalidate([2, 3, 99])  # 99 not cached: no-op
+    assert n == 2
+    assert 2 not in cache and 3 not in cache
+    assert all(b in cache for b in (0, 1, 4, 5, 6, 7))
+    assert cache.stats.invalidations == 2
+
+
+def test_plan_order_memo_hits_across_batches():
+    """Second batch of the same (template, exclusion) pairs must reuse the
+    memoized THRESHOLD sorted orders instead of re-sorting."""
+    store = _store("clustered", 1)
+    eng = NeedleTailEngine(store)
+    queries = _queries(QUERY_POOL[:4])
+    ref = NeedleTailEngine(store, cache_bytes=0).any_k_batch(queries, algo="threshold")
+    _assert_batch_equal(eng.any_k_batch(queries, algo="threshold"), ref)
+    h0 = eng.plan_cache.stats.threshold_hits
+    _assert_batch_equal(eng.any_k_batch(queries, algo="threshold"), ref)
+    assert eng.plan_cache.stats.threshold_hits > h0
+    assert eng.plan_cache.stats.threshold_misses > 0  # the cold batch
+
+
+def test_sharded_fetch_path_shares_engine_cache():
+    """DistributedAnyK.fetch_plan rides the same engine-lifetime LRU: a block
+    warmed by the sharded path is a hit for any_k, and vice versa."""
+    import jax
+
+    from repro.core.sharded import DistributedAnyK
+
+    store = _store("clustered", 2)
+    eng = NeedleTailEngine(store)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistributedAnyK(
+        mesh, records_per_block=RPB, candidates=store.num_blocks,
+        block_cache=eng.block_cache,
+    )
+    comb = eng.combined_density([(0, 1)])
+    plan = dist.threshold_plan(np.asarray(comb, np.float32), 64.0)
+    ids, bd, bm, bv = dist.fetch_plan(store, plan)
+    ref = store.fetch(ids)
+    np.testing.assert_array_equal(bd, ref[0])
+    np.testing.assert_array_equal(bm, ref[1])
+    np.testing.assert_array_equal(bv, ref[2])
+    assert ids.size > 0 and all(int(b) in eng.block_cache for b in ids)
+    # the scalar engine path now hits the blocks the sharded fetch warmed
+    misses0 = eng.block_cache.stats.store_blocks_fetched
+    r = eng.any_k([(0, 1)], 64, algo="threshold")
+    new_blocks = {int(b) for b in r.blocks_fetched} - {int(b) for b in ids}
+    assert (
+        eng.block_cache.stats.store_blocks_fetched - misses0 == len(new_blocks)
+    )
+
+
+def test_dead_engines_do_not_pin_their_caches():
+    """Invalidation listeners are weak: a store shared by many throwaway
+    engines must not keep every dead engine's block cache alive."""
+    import gc
+    import weakref
+
+    store = build_block_store(_make_table("uniform", 3), RPB)
+    eng = NeedleTailEngine(store)
+    eng.any_k([(0, 1)], 20, algo="threshold")
+    cache_ref = weakref.ref(eng.block_cache)
+    for _ in range(5):
+        NeedleTailEngine(store)  # throwaway registrations
+    del eng
+    gc.collect()
+    assert cache_ref() is None  # the store did not pin the dead engine's cache
+    store.notify_invalidated(np.asarray([0]))  # dead listeners prune silently
+    assert len(store._invalidation_listeners) == 0
+
+
+def test_cache_stats_snapshot_roundtrip():
+    store = _store("uniform", 2)
+    eng = NeedleTailEngine(store)
+    eng.any_k([(0, 1)], 30, algo="threshold")
+    snap = eng.block_cache.stats.snapshot()
+    assert snap["misses"] > 0 and snap["store_fetch_calls"] > 0
+    assert 0.0 <= snap["hit_rate"] <= 1.0
+    assert snap["bytes_cached"] == eng.block_cache.nbytes

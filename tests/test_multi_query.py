@@ -267,6 +267,47 @@ def test_per_query_algo_override(clustered):
         _assert_query_equal(br, sr)
 
 
+def test_dedup_ratio_guards_zero_fetched_blocks(clustered):
+    """Regression: empty batches (k<=0 everywhere, or no queries at all) must
+    report dedup ratios of 1.0, not raise ZeroDivisionError."""
+    from repro.core.multi_query import BatchQueryResult
+
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    batch = eng.any_k_batch([BatchQuery([(0, 1)], 0), BatchQuery([(1, 1)], -3)])
+    assert batch.unique_blocks_fetched.size == 0
+    assert batch.dedup_ratio == 1.0
+    assert batch.store_dedup_ratio == 1.0
+    empty = eng.any_k_batch([])
+    assert empty.dedup_ratio == 1.0 and empty.num_queries == 0
+    # the warm-cache extreme: planned fetches but zero physical store reads
+    warm = BatchQueryResult(
+        results=[], unique_blocks_fetched=np.arange(4), blocks_requested_total=9,
+        rounds=1, cpu_time_s=0.0, modeled_io_s=0.0, store_blocks_fetched=0,
+    )
+    assert warm.store_dedup_ratio == float("inf")
+    assert warm.dedup_ratio == 2.25
+
+
+def test_warm_cache_batch_repeat_reads_zero_blocks(clustered):
+    """Engine-lifetime LRU: repeating a wave on a warm cache is served
+    entirely from cache (0 store reads) and stays byte-identical."""
+    _, store = clustered
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+    ]
+    cold = eng.any_k_batch(queries, algo="auto")
+    assert cold.store_blocks_fetched == cold.unique_blocks_fetched.size
+    warm = eng.any_k_batch(queries, algo="auto")
+    assert warm.store_blocks_fetched == 0
+    assert warm.modeled_store_io_s == 0.0
+    for c, w in zip(cold.results, warm.results):
+        _assert_query_equal(w, c)
+
+
 def test_real_like_workload_equivalence():
     t = make_real_like_table("taxi", num_records=30_000, seed=4)
     eng = NeedleTailEngine(build_block_store(t, records_per_block=128))
