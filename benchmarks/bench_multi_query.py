@@ -1,14 +1,15 @@
 """Batched multi-query engine vs Q independent any-k calls, plus the
-engine-lifetime cache and SLO-admission sweeps.
+engine-lifetime cache, SLO-admission, and sharded-planning sweeps.
 
 Workload model (BlinkDB / Threshold-Queries-survey traffic shape): waves of
 small-k LIMIT queries drawn from a shared pool of hot predicates — most of a
-wave re-reads the same dense blocks.  Three sections:
+wave re-reads the same dense blocks.  Sections:
 
   batch sweep — for each Q ∈ {1, 8, 64, 256}: Q independent ``engine.any_k``
       calls (the seed path) vs one ``engine.any_k_batch`` call (shared
-      combine, one vectorized plan per wave, deduplicated union fetch).
-      Per-query results are byte-identical between the two paths (asserted).
+      combine, one vectorized plan per wave, deduplicated union fetch,
+      engine-lifetime block LRU).  Per-query results are byte-identical
+      between the two paths (asserted).
   warm-cache sweep — the Q=64 exemplar wave run cold then repeated on the
       engine-lifetime block LRU: the repeat must read **0 blocks from the
       store** (100% LRU hits) and reuse the memoized THRESHOLD plan orders,
@@ -17,14 +18,33 @@ wave re-reads the same dense blocks.  Three sections:
   admission sweep — a seeded arrival schedule pushed through the SLO
       admission controller for a grid of (slo, max_wave) policies; reports
       wave occupancy, waits, and the warm-cache effect across waves.
+  sharded sweep (``--sharded``) — the Q=64 wave planned through the sharded
+      batched path (``engine.attach_mesh``: one ``shard_map`` collective per
+      plan wave, :mod:`repro.core.sharded`) over a host mesh, cold then warm.
+      Asserts byte-identity to the cache-less sequential baseline AND that
+      the warm sharded wave reads **0 blocks from the store** — the sharded
+      CI guard.
 
-``--smoke`` runs a reduced workload (<60 s) that still executes all three
-sections and hard-fails on cache-stat regressions — the CI hook.
+``--smoke`` runs a reduced workload (<60 s) that still executes every
+selected section and hard-fails on cache-stat regressions — the CI hook.
+``--sharded`` (standalone entry point only) forces an 8-way host-device mesh
+by setting ``XLA_FLAGS`` before JAX loads; under the ``benchmarks.run``
+driver JAX is already initialized, so the sweep then runs on however many
+devices exist (1-device meshes are valid — the collective degenerates).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --sharded wants >1 host device; the flag must be set before jax imports
+if "--sharded" in sys.argv and "jax" not in sys.modules and \
+        "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
 
 import numpy as np
 
@@ -148,6 +168,53 @@ def warm_cache_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
     return rows
 
 
+def sharded_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
+    """The Q=`q` wave planned mesh-natively: one shard_map collective per
+    plan wave (``repro.core.sharded``), fetches through the engine LRU.
+
+    Cold then repeated warm: every phase must stay byte-identical to the
+    cache-less sequential baseline, and the warm waves must read 0 blocks
+    from the store (the engine-lifetime LRU covers the whole working set).
+    Raises on any regression — this is the sharded CI hook.
+    """
+    import jax
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    queries = overlapping_queries(q, seed=100 + q)
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
+    eng = NeedleTailEngine(store)
+    eng.attach_mesh(mesh)
+    rows = []
+    for phase in ("cold", "warm", "warm2"):
+        t0 = time.perf_counter()
+        batch = eng.any_k_batch(queries, algo=algo)
+        ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        st = eng.block_cache.stats
+        pc = eng.plan_cache.stats
+        rows.append(dict(
+            phase=phase, Q=q, algo=algo, shards=n_dev, batch_ms=round(ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            cache_hits=batch.cache_hits,
+            hit_rate=round(st.hit_rate, 3),
+            plan_hits=pc.sharded_threshold_hits + pc.two_prong_hits,
+            cached_mb=round(st.bytes_cached / 2**20, 1),
+        ))
+    if rows[1]["store_blocks"] != 0 or rows[2]["store_blocks"] != 0:
+        raise AssertionError(
+            f"sharded warm-cache regression: repeat wave read "
+            f"{rows[1]['store_blocks']}/{rows[2]['store_blocks']} blocks from "
+            "the store (expected 0: 100% LRU hits)"
+        )
+    if rows[2]["plan_hits"] <= rows[1]["plan_hits"]:
+        raise AssertionError(
+            "sharded plan-memo regression: warm wave did not reuse plans"
+        )
+    return rows
+
+
 class _SimClock:
     def __init__(self):
         self.t = 0.0
@@ -210,8 +277,13 @@ def admission_sweep(
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced <60s run for CI; still executes all three "
-                         "sections and hard-fails on cache-stat regressions")
+                    help="reduced <60s run for CI; still executes every "
+                         "selected section and hard-fails on cache-stat "
+                         "regressions")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the sharded-planning sweep (attach_mesh: "
+                         "one shard_map collective per plan wave) and assert "
+                         "the warm sharded Q=64 wave reads 0 store blocks")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
 
@@ -248,6 +320,16 @@ def main(argv=None):
     emit(arows, ["slo_ms", "max_wave", "waves", "mean_wave", "mean_wait_ms",
                  "max_wait_ms", "slo_violations", "store_blocks", "hit_rate",
                  "wall_ms"])
+
+    if args.sharded:
+        print("\n# --- sharded-planning sweep (one collective per plan wave) ---")
+        srows = sharded_sweep(store, algo=args.algo, q=64)
+        emit(srows, ["phase", "Q", "algo", "shards", "batch_ms", "store_blocks",
+                     "cache_hits", "hit_rate", "plan_hits", "cached_mb"])
+        print(f"# sharded warm repeat on {srows[0]['shards']} shards: "
+              f"{srows[0]['store_blocks']} -> {srows[-1]['store_blocks']} store "
+              "blocks (asserted 0)")
+
     print("# smoke ok: warm-cache repeat read 0 store blocks" if args.smoke else "")
 
 

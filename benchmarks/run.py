@@ -18,6 +18,7 @@ SECTIONS = {
     "params": ("Sec 7.6: parameter effects", "benchmarks.bench_parameters"),
     "kernels": ("Kernel microbenchmarks", "benchmarks.bench_kernels"),
     "multiq": ("Batched multi-query vs sequential any-k", "benchmarks.bench_multi_query"),
+    "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 
 

@@ -6,7 +6,8 @@ within one ``any_k_batch`` call but died with the batch, so hot blocks were
 re-read from the store on every serving wave.  This module promotes it to an
 **engine-lifetime** cache shared by :meth:`NeedleTailEngine.any_k`,
 :meth:`NeedleTailEngine.any_k_batch`, and the sharded fetch path
-(:meth:`repro.core.sharded.DistributedAnyK.fetch_blocks`).
+(:meth:`repro.core.sharded.DistributedAnyK.fetch_plan` and the sharded
+batched planner behind :meth:`repro.core.sharded.DistributedAnyK.any_k_batch`).
 
 Two caches live here:
 
@@ -22,7 +23,10 @@ Two caches live here:
   entry is automatically distinct per refill round).  Repeated query
   templates skip the THRESHOLD sort entirely on later waves; entries are
   byte-identical to a fresh ``threshold_sort_batch`` row because the vmapped
-  sort is computed independently per row.
+  sort is computed independently per row.  The sharded planner memoizes its
+  materialized THRESHOLD id sets per (row, need) in a third map (it never
+  computes the full sorted order), while its TWO-PRONG windows are
+  bit-identical to the host planner's and SHARE the host window memo.
 
 Invalidation contract
 ---------------------
@@ -77,10 +81,26 @@ class CacheStats:
 class BlockLRUCache:
     """Byte-budgeted LRU over block slabs, keyed on block id.
 
-    ``capacity_bytes=None`` means unbounded (the serving default: the cache
-    is bounded by the store size).  ``capacity_bytes=0`` disables caching —
-    every ``get_many`` goes straight to the store, which is the cache-less
-    reference behavior the equivalence suite compares against.
+    Parameters
+    ----------
+    capacity_bytes : int | None
+        ``None`` — unbounded (the serving default: the cache is bounded by
+        the store size).  ``0`` — caching disabled: every ``get_many`` goes
+        straight to the store, which is the cache-less reference behavior the
+        equivalence suite compares against.  Any other value — LRU eviction
+        keeps ``bytes_cached + incoming ≤ capacity_bytes``.
+
+    Notes
+    -----
+    **Byte-identity guarantee**: for any sequence of ``get_many`` /
+    ``ensure`` / ``invalidate`` calls and any byte budget, ``get_many(store,
+    ids)`` returns slabs byte-identical to ``store.fetch(ids)`` — caching
+    changes the physical I/O schedule, never the data.  Cached slabs are
+    *copies* of immutable store tensors (holding views would pin the parent
+    fetch arrays), and append-path invalidation evicts exactly the dirtied
+    tail ids (see the module docstring's invalidation contract).  The
+    property-based suite in ``tests/test_block_cache.py`` locks this down
+    across cold/warm/evicting/invalidated cache states.
     """
 
     def __init__(self, capacity_bytes: int | None = None):
@@ -230,10 +250,23 @@ class BlockLRUCache:
 
 @dataclasses.dataclass
 class PlanCacheStats:
+    """Hit/miss counters per memo kind (monotonic).
+
+    ``threshold_*`` count the host sorted-order memo, ``two_prong_*`` the
+    (row, need) window memo (shared by host and sharded planners),
+    ``sharded_threshold_*`` the sharded planner's materialized-id memo.
+    """
+
     threshold_hits: int = 0
     threshold_misses: int = 0
     two_prong_hits: int = 0
     two_prong_misses: int = 0
+    sharded_threshold_hits: int = 0
+    sharded_threshold_misses: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.threshold_hits + self.two_prong_hits + self.sharded_threshold_hits
 
 
 class PlanOrderCache:
@@ -241,11 +274,18 @@ class PlanOrderCache:
 
     THRESHOLD entries map ``row.tobytes()`` (exclusions already zeroed into
     the row) to ``(sort_idx, sorted_d, cumsum)``; TWO-PRONG entries map
-    ``(row_bytes, need)`` to ``(start, end)``.  Both planners are computed
-    independently per row inside their vmapped batch kernels, so a cached
-    entry is bit-identical to recomputing it — repeated (template, exclusion)
-    pairs skip the device sort entirely.  ``max_entries`` bounds growth with
+    ``(row_bytes, need)`` to ``(start, end)``; sharded THRESHOLD entries map
+    ``(row_bytes, need)`` to the materialized ascending block-id array.  All
+    planners compute each row independently inside their vmapped batch
+    kernels / collectives, so a cached entry is bit-identical to recomputing
+    it — repeated (template, exclusion) pairs skip the device sort (or the
+    wave collective) entirely.  ``max_entries`` bounds growth per memo with
     FIFO-ish LRU eviction (hot serving workloads repeat a few templates).
+
+    Parameters
+    ----------
+    max_entries : int
+        Per-memo entry cap; the oldest-touched entry is evicted beyond it.
     """
 
     def __init__(self, max_entries: int = 4096):
@@ -257,10 +297,14 @@ class PlanOrderCache:
         self._two_prong: "OrderedDict[tuple[bytes, float], tuple[int, int]]" = (
             OrderedDict()
         )
+        self._sharded_threshold: "OrderedDict[tuple[bytes, float], np.ndarray]" = (
+            OrderedDict()
+        )
 
     def clear(self) -> None:
         self._threshold.clear()
         self._two_prong.clear()
+        self._sharded_threshold.clear()
 
     def _touch(self, od: OrderedDict, key) -> None:
         od.move_to_end(key)
@@ -297,3 +341,24 @@ class PlanOrderCache:
     def put_two_prong(self, row_bytes: bytes, need: float, start: int, end: int) -> None:
         self._two_prong[(row_bytes, float(need))] = (int(start), int(end))
         self._touch(self._two_prong, (row_bytes, float(need)))
+
+    def get_sharded_threshold(self, row_bytes: bytes, need: float):
+        """Memoized sharded-THRESHOLD ids for ``(row, need)``, or ``None``.
+
+        Unlike :meth:`get_threshold` this stores the *materialized* ascending
+        block-id array (the wave collective returns the selected prefix, not
+        the full sorted order), so entries are per-(row, need), like windows.
+        """
+        hit = self._sharded_threshold.get((row_bytes, float(need)))
+        if hit is not None:
+            self.stats.sharded_threshold_hits += 1
+            self._touch(self._sharded_threshold, (row_bytes, float(need)))
+        else:
+            self.stats.sharded_threshold_misses += 1
+        return hit
+
+    def put_sharded_threshold(self, row_bytes: bytes, need: float, ids) -> None:
+        self._sharded_threshold[(row_bytes, float(need))] = np.asarray(
+            ids, dtype=np.int64
+        )
+        self._touch(self._sharded_threshold, (row_bytes, float(need)))

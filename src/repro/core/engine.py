@@ -9,7 +9,11 @@ estimates are approximate).  I/O is charged through a :class:`CostModel`, with t
 Concurrent workloads go through :meth:`NeedleTailEngine.any_k_batch`, which
 plans a whole wave of queries in one vectorized pass and fetches the
 deduplicated union of their blocks exactly once (see
-:mod:`repro.core.multi_query`).
+:mod:`repro.core.multi_query`).  With a device mesh attached
+(:meth:`NeedleTailEngine.attach_mesh`), each wave's plan runs as ONE
+``shard_map`` collective over the λ-sharded density maps instead of on host
+mirrors (see :mod:`repro.core.sharded`) — byte-identical results, mesh-native
+schedule.
 """
 from __future__ import annotations
 
@@ -71,6 +75,9 @@ class NeedleTailEngine:
         self.block_cache = BlockLRUCache(cache_bytes)
         self.plan_cache = PlanOrderCache(plan_cache_entries)
         store.register_invalidation_listener(self.block_cache.invalidate)
+        # set by attach_mesh: a repro.core.sharded.DistributedAnyK that plans
+        # any_k_batch waves with one shard_map collective per refill round
+        self.distributed = None
 
     # ------------------------------------------------------------------ store
     def replace_store(self, store: "BlockStore") -> None:
@@ -81,6 +88,9 @@ class NeedleTailEngine:
         self.block_cache.clear()
         self.plan_cache.clear()
         store.register_invalidation_listener(self.block_cache.invalidate)
+        # an attached sharded planner captured the old store's geometry
+        if getattr(self, "distributed", None) is not None:
+            self.distributed.rpb = store.records_per_block
 
     def append(self, new: "Table") -> "BlockStore":
         """Append rows through :func:`repro.data.append.append_records` and
@@ -202,19 +212,50 @@ class NeedleTailEngine:
             plan_rounds=rounds,
         )
 
+    # ------------------------------------------------------------------- mesh
+    def attach_mesh(self, mesh, axis: str = "data", **kwargs):
+        """Make :meth:`any_k_batch` plan mesh-natively (sharded batched
+        planning).  Builds a :class:`repro.core.sharded.DistributedAnyK` over
+        `mesh` sharing this engine's block LRU, so sharded fetches hit the
+        same cache as the host paths.  Extra ``kwargs`` (``candidates``,
+        ``two_prong_group``, ...) forward to ``DistributedAnyK``.  Returns the
+        wrapper (also stored as ``self.distributed``)."""
+        from repro.core.sharded import DistributedAnyK
+
+        self.distributed = DistributedAnyK(
+            mesh,
+            axis=axis,
+            records_per_block=self.store.records_per_block,
+            block_cache=self.block_cache,
+            **kwargs,
+        )
+        return self.distributed
+
+    def detach_mesh(self) -> None:
+        """Back to host-mirror planning (the batched path keeps working)."""
+        self.distributed = None
+
     # ------------------------------------------------------------------ batch
-    def any_k_batch(self, queries, algo: str = "auto"):
+    def any_k_batch(self, queries, algo: str = "auto", sharded: bool | None = None):
         """Evaluate Q concurrent any-k queries with shared-fetch scheduling.
 
         ``queries`` is a sequence of :class:`~repro.core.multi_query.BatchQuery`
         or ``(predicates, k[, op])`` tuples.  Per-query results are
         byte-identical to Q separate :meth:`any_k` calls; the union of planned
         blocks is deduplicated so each block is fetched exactly once per batch.
+
+        ``sharded`` — ``None`` (default) plans mesh-natively iff a mesh is
+        attached (:meth:`attach_mesh`); ``True`` requires one; ``False``
+        forces the host-mirror plan path even with a mesh attached.
         Returns a :class:`~repro.core.multi_query.BatchQueryResult`.
         """
         from repro.core.multi_query import run_batch
 
-        return run_batch(self, queries, algo=algo)
+        # getattr: tolerate engines built without __init__ (test shims)
+        planner = getattr(self, "distributed", None) if sharded is None or sharded else None
+        if sharded and planner is None:
+            raise ValueError("sharded=True but no mesh attached; call attach_mesh")
+        return run_batch(self, queries, algo=algo, planner=planner)
 
     # -------------------------------------------------------------- aggregate
     def aggregate(

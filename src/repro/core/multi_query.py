@@ -14,7 +14,13 @@ This module evaluates Q concurrent ``(predicates, k)`` requests as one unit:
    single vmapped call instead of Q sequential jit dispatches: THRESHOLD
    shares one density sort per *unique* combined row
    (``threshold_sort_batch`` + per-query ``threshold_cut``), TWO-PRONG runs
-   ``two_prong_select_batch`` over the unique (row, need) pairs.
+   ``two_prong_select_batch`` over the unique (row, need) pairs.  When a mesh
+   is attached (``run_batch(..., planner=DistributedAnyK)``, or
+   :meth:`NeedleTailEngine.attach_mesh`), the plan wave instead runs as ONE
+   ``shard_map`` collective over the λ-sharded density maps
+   (:func:`repro.core.sharded.sharded_threshold_batch` /
+   :func:`repro.core.sharded.sharded_two_prong_batch`) — same plans, computed
+   SPMD instead of on host mirrors.
 3. **Shared fetch** — the union of all planned blocks is deduplicated and each
    block is fetched exactly once per batch (including across refill rounds:
    a block fetched in round 0 for query A is served from the cache when query
@@ -161,7 +167,8 @@ def _combined_matrix(engine: "NeedleTailEngine", states: list[_QueryState]) -> n
 
 
 def _plan_wave(
-    engine: "NeedleTailEngine", states: list[_QueryState], algo: str
+    engine: "NeedleTailEngine", states: list[_QueryState], algo: str,
+    planner=None,
 ) -> list[np.ndarray]:
     """Vectorized plan for one wave of active queries.
 
@@ -171,6 +178,15 @@ def _plan_wave(
     order, so the device work is one vmapped sort over the *unique* rows of
     the wave (hot workloads repeat a few predicate templates) and each query
     cuts its own prefix; TWO-PRONG dedups on (row, need) pairs.
+
+    With a ``planner`` (:class:`repro.core.sharded.DistributedAnyK`), the
+    THRESHOLD and TWO-PRONG selections run as one ``shard_map`` collective
+    for the whole wave instead of host-mirror sorts; plans are identical as
+    block-id sets (the engine's ascending §4.1 fetch sort erases the order
+    difference), TWO-PRONG windows are bit-identical (group=1), and the
+    ``auto`` cost comparison is order-insensitive — so downstream results
+    stay byte-identical.  ``forward_optimal`` is inherently sequential
+    (greedy over the cost DP) and always plans on the host.
     """
     combined = _combined_matrix(engine, states)
     rpb = engine.store.records_per_block
@@ -233,35 +249,78 @@ def _plan_wave(
             plans.append(si_u[:n].astype(np.int64))
         return plans
 
-    def two_prong_plans() -> list[np.ndarray]:
-        win: dict[tuple[int, float], tuple[int, int]] = {}
-        miss: list[int] = []  # one representative query index per missed pair
+    def _plan_unique_pairs(get, plan_misses, put) -> list:
+        """Shared (unique-row, need) dedup for the per-pair planners: serve
+        memo hits via ``get(i)``, batch-plan every missed pair ONCE via
+        ``plan_misses(miss_indices)`` (one representative query index per
+        pair), memoize via ``put(i, value)``; returns per-query values."""
+        val: dict[tuple[int, float], object] = {}
+        miss: list[int] = []
         pending: set[tuple[int, float]] = set()
         for i in range(qa):
             key = (int(u_idx[i]), float(needs[i]))
-            if key in win or key in pending:
+            if key in val or key in pending:
                 continue
-            hit = plan_cache.get_two_prong(row_key[i], float(needs[i]))
+            hit = get(i)
             if hit is not None:
-                win[key] = hit
+                val[key] = hit
             else:
                 miss.append(i)
                 pending.add(key)
         if miss:
+            for i, v in zip(miss, plan_misses(miss)):
+                val[(int(u_idx[i]), float(needs[i]))] = v
+                put(i, v)
+        return [val[(int(u_idx[i]), float(needs[i]))] for i in range(qa)]
+
+    def two_prong_plans() -> list[np.ndarray]:
+        def plan_misses(miss: list[int]) -> list[tuple[int, int]]:
             k_u = np.ones((_bucket(len(miss)),), dtype=np.float32)
             k_u[: len(miss)] = needs[miss]
             r = two_prong_select_batch(
                 jnp.asarray(_pad_rows(combined[miss])), jnp.asarray(k_u), rpb
             )
             starts, ends = np.asarray(r.start), np.asarray(r.end)
-            for off, i in enumerate(miss):
-                key = (int(u_idx[i]), float(needs[i]))
-                win[key] = (int(starts[off]), int(ends[off]))
-                plan_cache.put_two_prong(row_key[i], float(needs[i]), *win[key])
-        return [
-            np.arange(*win[(int(u_idx[i]), float(needs[i]))], dtype=np.int64)
-            for i in range(qa)
-        ]
+            return [(int(starts[o]), int(ends[o])) for o in range(len(miss))]
+
+        wins = _plan_unique_pairs(
+            lambda i: plan_cache.get_two_prong(row_key[i], float(needs[i])),
+            plan_misses,
+            lambda i, w: plan_cache.put_two_prong(row_key[i], float(needs[i]), *w),
+        )
+        return [np.arange(*w, dtype=np.int64) for w in wins]
+
+    def threshold_plans_sharded() -> list[np.ndarray]:
+        # one shard_map collective plans every missed (row, need) pair; the
+        # memo stores materialized id sets (the sharded planner returns the
+        # selected prefix, not the full sorted order the host memo keeps)
+        return _plan_unique_pairs(
+            lambda i: plan_cache.get_sharded_threshold(row_key[i], float(needs[i])),
+            lambda miss: planner.threshold_plan_wave(combined[miss], needs[miss]),
+            lambda i, ids: plan_cache.put_sharded_threshold(
+                row_key[i], float(needs[i]), ids
+            ),
+        )
+
+    def two_prong_plans_sharded() -> list[np.ndarray]:
+        # group=1 windows are bit-identical to the host planner's, so the
+        # (row, need) -> (start, end) memo is SHARED with the host path: a
+        # wave planned on host warms the sharded replan and vice versa.
+        # group>1 windows are group-aligned (up to G wider per side) —
+        # memoizing them would poison the exact host memo, so they bypass it.
+        exact = getattr(planner, "two_prong_group", 1) == 1
+        wins = _plan_unique_pairs(
+            (lambda i: plan_cache.get_two_prong(row_key[i], float(needs[i])))
+            if exact else (lambda i: None),
+            lambda miss: planner.two_prong_plan_wave(combined[miss], needs[miss]),
+            (lambda i, w: plan_cache.put_two_prong(row_key[i], float(needs[i]), *w))
+            if exact else (lambda i, w: None),
+        )
+        return [np.arange(int(s), int(e), dtype=np.int64) for s, e in wins]
+
+    if planner is not None:
+        threshold_plans = threshold_plans_sharded
+        two_prong_plans = two_prong_plans_sharded
 
     if algo == "threshold":
         plans = threshold_plans()
@@ -293,6 +352,7 @@ def run_batch(
     engine: "NeedleTailEngine",
     queries: Sequence[BatchQuery | tuple],
     algo: str = "auto",
+    planner=None,
 ) -> BatchQueryResult:
     """Evaluate Q any-k queries with shared-fetch scheduling.
 
@@ -303,6 +363,14 @@ def run_batch(
     within the batch every block is read from the store at most once
     (provided the byte budget covers the working set), and blocks cached by
     earlier batches or ``any_k`` calls are not read at all.
+
+    ``planner`` (a :class:`repro.core.sharded.DistributedAnyK`) swaps the
+    host-mirror plan step for sharded batched planning: each refill round's
+    plan wave is ONE ``shard_map`` collective over the mesh, and the
+    byte-identity guarantee above is preserved (the sharded planners are
+    exact).  Most callers go through
+    :meth:`NeedleTailEngine.any_k_batch` / :meth:`DistributedAnyK.any_k_batch`
+    rather than passing ``planner`` directly.
     """
     from repro.core.engine import QueryResult
 
@@ -330,7 +398,7 @@ def run_batch(
                 by_algo.setdefault(st.query.algo or algo, []).append(st)
             plan_of: dict[int, np.ndarray] = {}
             for a, group in by_algo.items():
-                for st, plan in zip(group, _plan_wave(engine, group, a)):
+                for st, plan in zip(group, _plan_wave(engine, group, a, planner)):
                     plan_of[id(st)] = plan
             plans = [plan_of[id(st)] for st in active]
             # per-query §4.1 post-plan steps: drop already-fetched blocks,

@@ -12,14 +12,36 @@ are computed SPMD with `shard_map`:
 * :func:`sharded_two_prong` — hierarchical distributed TWO-PRONG: per-group
   (G-block) sums are all-gathered, the global minimal *group-aligned* window is
   computed identically on every shard.  The returned window is within G blocks of
-  the true optimum per side; G trades collective bytes for window slack.
+  the true optimum per side; G trades collective bytes for window slack (G=1 is
+  exact and bit-identical to :func:`repro.core.two_prong.two_prong_select`).
 * :func:`sharded_ht_terms` — psum-reduction of per-shard Horvitz-Thompson terms.
 
-Collective footprint per query: one all-gather of `C·P·(4+4)` bytes (THRESHOLD) or
-`(λ/G)·4` bytes (TWO-PRONG) — this is the term the §Perf hillclimb drives down.
+**Batched wave planning** (the serving path): a wave of Q concurrent queries
+used to pay one collective *per query*.  The ``*_batch`` forms vmap the
+per-shard bodies over the query axis, so ONE ``shard_map`` collective plans the
+entire ``[Q, λ]`` wave:
+
+* :func:`sharded_threshold_batch` — vmapped frontier gather: one all-gather of
+  ``Q·C·P·8`` bytes replaces Q gathers.
+* :func:`sharded_two_prong_batch` — vmapped window search (G=1 default: exact).
+* :func:`sharded_threshold_bisect_batch` — batched θ-bisection: per-shard
+  masked ``[Q, T]`` statistics (jnp, or the
+  :func:`repro.kernels.theta_stats.theta_stats_batch` Pallas kernel) merged by
+  one psum of ``Q·2·T`` floats per round.
+
+:class:`DistributedAnyK` wraps the SPMD planners for production use: wave-level
+geometric candidate refill, per-query plan extraction, fetches routed through
+the engine-lifetime block LRU, and :meth:`DistributedAnyK.any_k_batch` — the
+mesh-native form of :meth:`repro.core.engine.NeedleTailEngine.any_k_batch`,
+byte-identical per query to the host-mirror path.
+
+Collective footprint per *wave*: one all-gather of ``Q·C·P·(4+4)`` bytes
+(THRESHOLD) or ``Q·(λ/G)·4`` bytes (TWO-PRONG) — this is the term the §Perf
+hillclimb drives down.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -91,7 +113,29 @@ def sharded_threshold(
     axis: str = "data",
     candidates: int = 64,
 ) -> ShardedThresholdResult:
-    """Exact distributed THRESHOLD (one round; check `.sufficient`)."""
+    """Exact distributed THRESHOLD for one query (one round).
+
+    Parameters
+    ----------
+    combined_global : jax.Array
+        ``[λ]`` ⊕-combined densities, sharded ``P(axis)`` over the mesh.
+    k : float
+        Requested number of valid records.
+    records_per_block : int
+        Block capacity R (densities are fractions of R).
+    mesh : jax.sharding.Mesh
+        Mesh whose ``axis`` dimension shards λ into contiguous block ranges.
+    candidates : int
+        Per-shard frontier size C; the wire cost is ``C·P·8`` bytes.
+
+    Returns
+    -------
+    ShardedThresholdResult
+        ``block_ids[:num_selected]`` is the global density-sorted prefix,
+        identical to :func:`repro.core.threshold.threshold_select` whenever
+        ``sufficient`` is True; otherwise re-plan with 2C (geometric backoff,
+        see :meth:`DistributedAnyK.threshold_plan`).
+    """
     kv = jnp.asarray(k, jnp.float32)
     body = partial(
         _local_threshold_body,
@@ -116,6 +160,31 @@ class ShardedTwoProngResult(NamedTuple):
     expected_records: jax.Array  # [] f32
 
 
+def _local_two_prong_body(
+    local: jax.Array,  # [lam_local]
+    k: jax.Array,
+    records_per_block: int,
+    group: int,
+    axis: str | tuple[str, ...],
+):
+    lam_local = local.shape[0]
+    g = lam_local // group
+    gsums = jnp.sum(local.reshape(g, group), axis=1) * records_per_block
+    all_g = jax.lax.all_gather(gsums, axis, tiled=True)  # [G_total]
+    c = jnp.concatenate([jnp.zeros((1,), all_g.dtype), jnp.cumsum(all_g)])
+    targets = c[:-1] + k
+    ends = jnp.searchsorted(c, targets, side="left").astype(jnp.int32)
+    starts = jnp.arange(all_g.shape[0], dtype=jnp.int32)
+    feasible = ends <= all_g.shape[0]
+    lengths = jnp.where(feasible, ends - starts, jnp.iinfo(jnp.int32).max)
+    best = jnp.argmin(lengths).astype(jnp.int32)
+    any_f = jnp.any(feasible)
+    s = jnp.where(any_f, best, 0) * group
+    e = jnp.where(any_f, ends[best], all_g.shape[0]) * group
+    exp = c[jnp.where(any_f, ends[best], all_g.shape[0])] - c[jnp.where(any_f, best, 0)]
+    return s, e, exp.astype(jnp.float32)
+
+
 def sharded_two_prong(
     combined_global: jax.Array,
     k: float,
@@ -124,27 +193,31 @@ def sharded_two_prong(
     axis: str = "data",
     group: int = 64,
 ) -> ShardedTwoProngResult:
-    """Hierarchical distributed TWO-PRONG at G-block granularity."""
+    """Hierarchical distributed TWO-PRONG for one query.
+
+    Parameters
+    ----------
+    combined_global : jax.Array
+        ``[λ]`` ⊕-combined densities, sharded ``P(axis)``.
+    group : int
+        Aggregation granularity G: per-G-block sums are all-gathered
+        (``(λ/G)·4`` bytes) and the minimal *group-aligned* window is computed.
+        The window is within G blocks of the true optimum per side; ``group=1``
+        is exact — bit-identical to
+        :func:`repro.core.two_prong.two_prong_select`.
+
+    Returns
+    -------
+    ShardedTwoProngResult
+        ``[start_block, end_block)`` window and its expected record mass.
+    """
     kv = jnp.asarray(k, jnp.float32)
-
-    def body(local: jax.Array, k: jax.Array):
-        lam_local = local.shape[0]
-        g = lam_local // group
-        gsums = jnp.sum(local.reshape(g, group), axis=1) * records_per_block
-        all_g = jax.lax.all_gather(gsums, axis, tiled=True)  # [G_total]
-        c = jnp.concatenate([jnp.zeros((1,), all_g.dtype), jnp.cumsum(all_g)])
-        targets = c[:-1] + k
-        ends = jnp.searchsorted(c, targets, side="left").astype(jnp.int32)
-        starts = jnp.arange(all_g.shape[0], dtype=jnp.int32)
-        feasible = ends <= all_g.shape[0]
-        lengths = jnp.where(feasible, ends - starts, jnp.iinfo(jnp.int32).max)
-        best = jnp.argmin(lengths).astype(jnp.int32)
-        any_f = jnp.any(feasible)
-        s = jnp.where(any_f, best, 0) * group
-        e = jnp.where(any_f, ends[best], all_g.shape[0]) * group
-        exp = c[jnp.where(any_f, ends[best], all_g.shape[0])] - c[jnp.where(any_f, best, 0)]
-        return s, e, exp.astype(jnp.float32)
-
+    body = partial(
+        _local_two_prong_body,
+        records_per_block=records_per_block,
+        group=group,
+        axis=axis,
+    )
     fn = shard_map(
         body,
         mesh=mesh,
@@ -240,15 +313,272 @@ def sharded_threshold_bisect(
     return ShardedBisectResult(theta=theta, num_selected=n_sel, expected_records=exp)
 
 
+# ---------------------------------------------------------------------------
+# Batched wave planning: one collective plans Q queries.
+#
+# The per-shard bodies above are pure functions of (local densities, k), so
+# vmapping them over a leading query axis inside one shard_map turns the
+# per-query collectives into single batched collectives (all_gather/psum have
+# batching rules).  The jitted planner callables are memoized per
+# (mesh, axis, static config) so a serving loop compiles once per wave-bucket
+# shape, not once per wave.
+# ---------------------------------------------------------------------------
+
+
+class ShardedThresholdWave(NamedTuple):
+    block_ids: jax.Array  # [Q, C*P] global ids, density-desc; -1 past n_sel
+    num_selected: jax.Array  # [Q] int32
+    expected_records: jax.Array  # [Q] f32
+    sufficient: jax.Array  # [Q] bool — per query exactness flag
+
+
+class ShardedTwoProngWave(NamedTuple):
+    start_block: jax.Array  # [Q] int32 (group-aligned)
+    end_block: jax.Array  # [Q] int32 exclusive
+    expected_records: jax.Array  # [Q] f32
+
+
+class ShardedBisectWave(NamedTuple):
+    theta: jax.Array  # [Q] f32
+    num_selected: jax.Array  # [Q] int32
+    expected_records: jax.Array  # [Q] f32
+
+
+@functools.lru_cache(maxsize=128)
+def _threshold_wave_fn(mesh: Mesh, axis, records_per_block: int, candidates: int):
+    body = partial(
+        _local_threshold_body,
+        records_per_block=records_per_block,
+        candidates=candidates,
+        axis=axis,
+    )
+    fn = shard_map(
+        jax.vmap(body, in_axes=(0, 0)),
+        mesh=mesh,
+        in_specs=(P(None, axis), P()),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_threshold_batch(
+    combined_wave: jax.Array,  # [Q, lam] sharded P(None, axis)
+    ks: jax.Array,  # [Q] f32
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str = "data",
+    candidates: int = 64,
+) -> ShardedThresholdWave:
+    """Distributed THRESHOLD for a whole wave in ONE collective.
+
+    The per-shard frontier gather of :func:`sharded_threshold` is vmapped over
+    the query axis: each shard sorts its local slab once per query (batched
+    argsort), contributes a ``[Q, C]`` frontier, and a single all-gather of
+    ``Q·C·P·8`` bytes lets every shard compute all Q cutoffs.
+
+    Parameters
+    ----------
+    combined_wave : jax.Array
+        ``[Q, λ]`` combined densities, λ sharded ``P(None, axis)``.
+    ks : jax.Array
+        ``[Q]`` per-query record targets.
+    candidates : int
+        Per-shard frontier size C (must be ≤ λ/P).
+
+    Returns
+    -------
+    ShardedThresholdWave
+        Row q is exactly ``sharded_threshold(combined_wave[q], ks[q], ...)``:
+        the vmap changes the schedule, not the arithmetic.
+    """
+    fn = _threshold_wave_fn(mesh, axis, records_per_block, candidates)
+    ids, n_sel, exp, ok = fn(combined_wave, jnp.asarray(ks, jnp.float32))
+    return ShardedThresholdWave(ids, n_sel, exp, ok)
+
+
+@functools.lru_cache(maxsize=128)
+def _two_prong_wave_fn(mesh: Mesh, axis, records_per_block: int, group: int):
+    body = partial(
+        _local_two_prong_body,
+        records_per_block=records_per_block,
+        group=group,
+        axis=axis,
+    )
+    fn = shard_map(
+        jax.vmap(body, in_axes=(0, 0)),
+        mesh=mesh,
+        in_specs=(P(None, axis), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_two_prong_batch(
+    combined_wave: jax.Array,  # [Q, lam] sharded P(None, axis)
+    ks: jax.Array,  # [Q] f32
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str = "data",
+    group: int = 1,
+) -> ShardedTwoProngWave:
+    """Distributed TWO-PRONG for a whole wave in ONE collective.
+
+    One all-gather of ``Q·(λ/G)·4`` bytes serves all Q window searches.  The
+    default ``group=1`` is exact: each returned window is bit-identical to
+    :func:`repro.core.two_prong.two_prong_select` on the same row, which is
+    what lets :meth:`DistributedAnyK.any_k_batch` stay byte-identical to the
+    host engine.  ``group>1`` trades wire bytes for ≤G-per-side window slack,
+    exactly as in :func:`sharded_two_prong`.
+    """
+    fn = _two_prong_wave_fn(mesh, axis, records_per_block, group)
+    s, e, exp = fn(combined_wave, jnp.asarray(ks, jnp.float32))
+    return ShardedTwoProngWave(s, e, exp)
+
+
+@functools.lru_cache(maxsize=128)
+def _bisect_wave_fn(
+    mesh: Mesh,
+    axis,
+    records_per_block: int,
+    rounds: int,
+    fanout: int,
+    use_kernel: bool,
+    interpret: bool,
+):
+    def body(local: jax.Array, ks: jax.Array):  # [Q, lam_local], [Q]
+        if use_kernel:
+            from repro.kernels.theta_stats import theta_stats_batch
+
+        nq = local.shape[0]
+        lo = jnp.zeros((nq,), jnp.float32)
+        hi = jnp.full((nq,), 1.0 + 1e-6, jnp.float32)
+        n_sel = jnp.zeros((nq,), jnp.int32)
+        exp = jnp.zeros((nq,), jnp.float32)
+        steps = (jnp.arange(fanout, dtype=jnp.float32) + 1.0) / fanout
+        pos = jnp.arange(fanout, dtype=jnp.int32)
+
+        def take(a, idx):  # [Q, T], [Q] -> [Q]
+            return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+        for _ in range(rounds):
+            ths = lo[:, None] + (hi - lo)[:, None] * steps[None, :]  # [Q, T]
+            if use_kernel:
+                counts, recsum = theta_stats_batch(local, ths, interpret=interpret)
+            else:
+                m = local[:, None, :] >= ths[:, :, None]  # [Q, T, lam_local]
+                counts = jnp.sum(m, axis=2).astype(jnp.float32)
+                recsum = jnp.sum(jnp.where(m, local[:, None, :], 0.0), axis=2)
+            counts = jax.lax.psum(counts, axis)
+            recsum = jax.lax.psum(recsum, axis)
+            ok = recsum * records_per_block >= ks[:, None]
+            any_ok = jnp.any(ok, axis=1)
+            idx = jnp.where(
+                any_ok, jnp.argmax(jnp.where(ok, pos[None, :], -1), axis=1), 0
+            ).astype(jnp.int32)
+            n_sel = jnp.where(any_ok, take(counts, idx), n_sel).astype(jnp.int32)
+            exp = jnp.where(any_ok, take(recsum, idx) * records_per_block, exp)
+            th_at = take(ths, idx)
+            th_next = take(ths, jnp.minimum(idx + 1, fanout - 1))
+            new_lo = jnp.where(any_ok, th_at, lo)
+            new_hi = jnp.where(any_ok & (idx < fanout - 1), th_next, hi)
+            lo, hi = new_lo, jnp.where(any_ok, new_hi, ths[:, 0])
+        return lo, n_sel, exp
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, axis), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_threshold_bisect_batch(
+    combined_wave: jax.Array,  # [Q, lam] sharded P(None, axis)
+    ks: jax.Array,  # [Q] f32
+    records_per_block: int,
+    mesh: Mesh,
+    axis: str | tuple[str, ...] = "data",
+    rounds: int = 3,
+    fanout: int = 16,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> ShardedBisectWave:
+    """Batched distributed θ-bisection: the whole wave per psum round.
+
+    The θ-refinement of :func:`sharded_threshold_bisect` runs for all Q
+    queries at once: every round each shard computes masked ``[Q, fanout]``
+    (count, Σdensity) statistics over its local blocks — with plain jnp
+    reductions, or the :func:`repro.kernels.theta_stats.theta_stats_batch`
+    Pallas kernel when ``use_kernel`` is set (TPU; ``interpret=True`` runs the
+    kernel in interpret mode for host tests) — and ONE psum of
+    ``Q·2·fanout`` floats merges the fleet.  Wire bytes per wave:
+    ``rounds·Q·2·fanout·4`` B, versus ``rounds·2·fanout·4`` B *per query*
+    for the scalar form.
+
+    Returns
+    -------
+    ShardedBisectWave
+        Per-query ``theta`` / ``num_selected`` / ``expected_records``; a
+        statistics planner (no materialized ids) — use the gather planner when
+        block ids are needed.
+    """
+    fn = _bisect_wave_fn(
+        mesh, axis, records_per_block, rounds, fanout, use_kernel, interpret
+    )
+    theta, n_sel, exp = fn(combined_wave, jnp.asarray(ks, jnp.float32))
+    return ShardedBisectWave(theta=theta, num_selected=n_sel, expected_records=exp)
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 class DistributedAnyK:
-    """Production wrapper over the SPMD planners: geometric candidate refill on
-    an insufficient THRESHOLD frontier, planner selection by shard count
-    (sort-gather below ``bisect_above`` shards, θ-bisection beyond — the wire
-    crossover measured in EXPERIMENTS.md §Perf HC-C iter 4)."""
+    """Production wrapper over the SPMD planners.
+
+    Handles geometric candidate refill on an insufficient THRESHOLD frontier,
+    planner selection by shard count (sort-gather below ``bisect_above``
+    shards, θ-bisection beyond — the wire crossover measured in EXPERIMENTS.md
+    §Perf HC-C iter 4), wave-level batched planning, and fetches routed
+    through the engine-lifetime block LRU.
+
+    Parameters
+    ----------
+    mesh : jax.sharding.Mesh
+        Mesh whose ``axis`` dimension shards the λ block range.
+    axis : str | tuple[str, ...]
+        Mesh axis (or axes) the density maps are sharded over.
+    records_per_block : int
+        Block capacity R of the store being planned for.
+    candidates : int
+        Initial per-shard THRESHOLD frontier size C (doubled on refill).
+    max_refills : int
+        Scalar-path cap on frontier refills (the wave path instead grows C
+        until every query is provably exact or C reaches λ/P, which is
+        always exact).
+    bisect_above : int
+        Shard count beyond which the scalar path switches from the
+        sort-gather planner to θ-bisection.
+    block_cache : repro.core.block_cache.BlockLRUCache | None
+        Engine-lifetime LRU shared with the host paths; pass
+        ``NeedleTailEngine.block_cache`` (or use
+        :meth:`repro.core.engine.NeedleTailEngine.attach_mesh`, which wires
+        it for you) so scalar, batched, and sharded fetches share one cache.
+    two_prong_group : int
+        G for the wave TWO-PRONG; the default 1 is exact (byte-identity).
+    """
 
     def __init__(self, mesh: Mesh, axis="data", records_per_block: int = 8192,
                  candidates: int = 16, max_refills: int = 4,
-                 bisect_above: int = 512, block_cache=None):
+                 bisect_above: int = 512, block_cache=None,
+                 two_prong_group: int = 1):
         self.mesh = mesh
         self.axis = axis
         self.rpb = records_per_block
@@ -258,11 +588,26 @@ class DistributedAnyK:
         # pass NeedleTailEngine.block_cache to share one cache across the
         # scalar, batched, and sharded fetch paths
         self.block_cache = block_cache
+        self.two_prong_group = two_prong_group
         sz = 1
         for a in (axis if isinstance(axis, tuple) else (axis,)):
             sz *= mesh.shape[a]
         self.num_shards = sz
         self.use_bisect = sz > bisect_above
+
+    # ------------------------------------------------------------- wave shard
+    def _device_wave(self, combined: np.ndarray) -> tuple[jax.Array, int]:
+        """Pad λ to a shard multiple (zero density: never planned) and place
+        the ``[Q, λ']`` wave with ``P(None, axis)``.  Returns (array, λ)."""
+        combined = np.ascontiguousarray(np.asarray(combined, dtype=np.float32))
+        qa, lam = combined.shape
+        pad = (-lam) % self.num_shards
+        if pad:
+            combined = np.pad(combined, ((0, 0), (0, pad)))
+        sharded = jax.device_put(
+            jnp.asarray(combined), NamedSharding(self.mesh, P(None, self.axis))
+        )
+        return sharded, lam
 
     @staticmethod
     def plan_block_ids(plan) -> "np.ndarray":
@@ -278,13 +623,34 @@ class DistributedAnyK:
     def fetch_plan(self, store, plan):
         """Fetch a sharded plan's blocks through the shared engine-lifetime
         LRU when one is attached (``block_cache``), else straight from the
-        store.  Returns ``(block_ids, dims, measures, valid)``."""
+        store.
+
+        Parameters
+        ----------
+        store : repro.data.block_store.BlockStore
+            The store the plan refers to.
+        plan : ShardedThresholdResult | ShardedTwoProngResult
+            A scalar sharded plan (wave plans hand out per-query id arrays
+            directly; see :meth:`threshold_plan_wave`).
+
+        Returns
+        -------
+        tuple
+            ``(block_ids, dims, measures, valid)`` — slabs byte-identical to
+            ``store.fetch(block_ids)`` (the LRU's byte-identity guarantee).
+        """
         ids = self.plan_block_ids(plan)
         if self.block_cache is not None:
             return (ids, *self.block_cache.get_many(store, ids))
         return (ids, *store.fetch(ids))
 
     def threshold_plan(self, combined_global: jax.Array, k: float):
+        """Scalar THRESHOLD plan with geometric frontier refill.
+
+        Uses θ-bisection beyond ``bisect_above`` shards (statistics only),
+        the sort-gather planner otherwise; on an insufficient frontier the
+        candidate count doubles, up to ``max_refills`` times.
+        """
         if self.use_bisect:
             return sharded_threshold_bisect(
                 combined_global, k, self.rpb, self.mesh, self.axis
@@ -300,7 +666,132 @@ class DistributedAnyK:
         return r
 
     def two_prong_plan(self, combined_global: jax.Array, k: float, group: int = 64):
+        """Scalar TWO-PRONG plan at G-block granularity (see
+        :func:`sharded_two_prong`)."""
         return sharded_two_prong(
             combined_global, k, self.rpb, self.mesh, self.axis, group=group
         )
 
+    # ----------------------------------------------------------- wave planning
+    def threshold_plan_wave(
+        self, combined: np.ndarray, needs: np.ndarray
+    ) -> list[np.ndarray]:
+        """THRESHOLD-plan a whole wave with one collective per refill round.
+
+        Parameters
+        ----------
+        combined : numpy.ndarray
+            ``[Q, λ]`` combined densities (host mirror; exclusions already
+            zeroed in).
+        needs : numpy.ndarray
+            ``[Q]`` per-query record targets.
+
+        Returns
+        -------
+        list[numpy.ndarray]
+            Per-query ascending block-id arrays, each byte-identical (as a
+            set, and therefore after the engine's ascending §4.1 fetch sort)
+            to the host planner's selection.  Exactness is guaranteed: the
+            frontier doubles until every query's ``sufficient`` flag is set,
+            and a frontier of λ/P (the full local sort) is exact by
+            construction.
+        """
+        combined = np.ascontiguousarray(np.asarray(combined, dtype=np.float32))
+        needs = np.asarray(needs, dtype=np.float32)
+        qa = combined.shape[0]
+        qb = _next_pow2(max(qa, 1))
+        comb_pad = np.zeros((qb, combined.shape[1]), np.float32)
+        comb_pad[:qa] = combined
+        k_pad = np.ones((qb,), np.float32)
+        k_pad[:qa] = needs
+        wave, lam = self._device_wave(comb_pad)
+        lam_local = wave.shape[1] // self.num_shards
+        c = min(self.candidates, lam_local)
+        while True:
+            r = sharded_threshold_batch(
+                wave, k_pad, self.rpb, self.mesh, self.axis, candidates=c
+            )
+            # a full local sort (C == λ/P) is exact even when the flag is
+            # pessimistic (a shard whose entire range is selected saturates it)
+            if c == lam_local or bool(np.asarray(r.sufficient)[:qa].all()):
+                break
+            c = min(c * 2, lam_local)
+        ids = np.asarray(r.block_ids)
+        n_sel = np.asarray(r.num_selected)
+        return [
+            np.sort(ids[q, : int(n_sel[q])].astype(np.int64)) for q in range(qa)
+        ]
+
+    def two_prong_plan_wave(
+        self, combined: np.ndarray, needs: np.ndarray
+    ) -> list[tuple[int, int]]:
+        """TWO-PRONG-plan a whole wave with one collective.
+
+        Returns per-query ``(start, end)`` windows (end clamped to the true λ:
+        the λ-padding blocks added for shard divisibility carry zero density
+        and the host reference never selects past λ).  With the default
+        ``two_prong_group=1`` each window is bit-identical to
+        :func:`repro.core.two_prong.two_prong_select` on the same row.
+        """
+        combined = np.ascontiguousarray(np.asarray(combined, dtype=np.float32))
+        needs = np.asarray(needs, dtype=np.float32)
+        qa = combined.shape[0]
+        qb = _next_pow2(max(qa, 1))
+        comb_pad = np.zeros((qb, combined.shape[1]), np.float32)
+        comb_pad[:qa] = combined
+        k_pad = np.ones((qb,), np.float32)
+        k_pad[:qa] = needs
+        wave, lam = self._device_wave(comb_pad)
+        r = sharded_two_prong_batch(
+            wave, k_pad, self.rpb, self.mesh, self.axis,
+            group=self.two_prong_group,
+        )
+        starts = np.asarray(r.start_block)
+        ends = np.asarray(r.end_block)
+        return [
+            (int(starts[q]), min(int(ends[q]), lam)) for q in range(qa)
+        ]
+
+    def bisect_stats_wave(
+        self, combined: np.ndarray, needs: np.ndarray, **kw
+    ) -> ShardedBisectWave:
+        """Batched θ-bisection statistics for a wave (no materialized ids);
+        forwards ``rounds`` / ``fanout`` / ``use_kernel`` / ``interpret`` to
+        :func:`sharded_threshold_bisect_batch`."""
+        combined = np.ascontiguousarray(np.asarray(combined, dtype=np.float32))
+        needs = np.asarray(needs, dtype=np.float32)
+        wave, _ = self._device_wave(combined)
+        return sharded_threshold_bisect_batch(
+            wave, needs, self.rpb, self.mesh, self.axis, **kw
+        )
+
+    def any_k_batch(self, engine, queries, algo: str = "auto"):
+        """Evaluate Q any-k queries with sharded batched planning.
+
+        The mesh-native form of
+        :meth:`repro.core.engine.NeedleTailEngine.any_k_batch`: each refill
+        round's plan wave runs as ONE ``shard_map`` collective
+        (:func:`sharded_threshold_batch` / :func:`sharded_two_prong_batch`)
+        instead of Q host-mirror planner calls, and the resulting deduplicated
+        fetches go through the engine-lifetime block LRU.  Per-query results
+        are byte-identical to the host path (and therefore to Q sequential
+        ``engine.any_k`` calls).
+
+        Parameters
+        ----------
+        engine : repro.core.engine.NeedleTailEngine
+            The engine owning the store, cost model, and caches.
+        queries : Sequence[BatchQuery | tuple]
+            As accepted by :func:`repro.core.multi_query.run_batch`.
+        algo : str
+            ``"threshold"`` / ``"two_prong"`` / ``"auto"`` run sharded;
+            ``"forward_optimal"`` is inherently sequential and falls back to
+            the host planner.
+
+        Returns
+        -------
+        repro.core.multi_query.BatchQueryResult
+        """
+        from repro.core.multi_query import run_batch
+
+        return run_batch(engine, queries, algo=algo, planner=self)

@@ -14,6 +14,14 @@ prefetched and drive the input ``index_map`` — the gather costs nothing.
 matrix (padded with -1) produces the full ``[Q, λ]`` combined-density matrix in
 one launch — grid ``(Q, λ_tiles, γ_max)``.  Padded positions read row 0 but
 contribute the ⊕-identity, so ragged batches combine exactly.
+
+:func:`density_combine_batch_sharded` is the mesh-native wave form: the
+``[rows, λ]`` density tensor stays sharded over the mesh ``data`` axis (each
+shard owns a contiguous λ/P block range, see :mod:`repro.core.sharded`) and
+every shard combines its local slab for ALL Q queries at once — no collective
+at all, because ⊕ is elementwise over λ.  The result is the ``[Q, λ]``
+combined matrix already laid out ``P(None, axis)``, exactly the operand shape
+the batched sharded planners consume.
 """
 from __future__ import annotations
 
@@ -151,3 +159,74 @@ def density_combine_batch(
         ),
     )(row_matrix.astype(jnp.int32), densities)
     return out[:, :lam]
+
+
+def _combine_local(dens_local: jax.Array, row_matrix: jax.Array, op: str) -> jax.Array:
+    """Shard-local reference combine: left-fold over γ_max, bit-identical to
+    :func:`repro.core.density_map.combine_densities_batch_np` on the slab
+    (both reduce the tiny γ axis as a sequential left fold in f32)."""
+    gamma = row_matrix.shape[1]
+    sel = dens_local[jnp.maximum(row_matrix, 0)]  # [Q, γ_max, λ_local]
+    valid = (row_matrix >= 0)[..., None]
+    ident = jnp.float32(1.0 if op == "and" else 0.0)
+    acc = jnp.full((sel.shape[0], sel.shape[2]), ident)  # [Q, λ_local]
+    for j in range(gamma):
+        term = jnp.where(valid[:, j], sel[:, j], ident)
+        acc = acc * term if op == "and" else acc + term
+    if op == "or":
+        acc = jnp.minimum(acc, jnp.float32(1.0))
+    return acc
+
+
+def density_combine_batch_sharded(
+    densities: jax.Array,  # [rows, lam] f32, λ sharded over `axis`
+    row_matrix: jax.Array,  # [Q, gamma_max] int32, padded with -1
+    mesh,
+    op: str = "and",
+    axis: str = "data",
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Wave combine on a λ-sharded density tensor: ``[Q, λ]`` out, sharded.
+
+    Parameters
+    ----------
+    densities : jax.Array
+        ``[rows, λ]`` density tensor placed with ``P(None, axis)`` (see
+        :func:`repro.core.sharded.shard_density_maps`).
+    row_matrix : jax.Array
+        ``[Q, γ_max]`` predicate row ids, right-padded with ``-1``
+        (:func:`repro.core.density_map.pack_row_matrix`).
+    mesh : jax.sharding.Mesh
+        Mesh whose ``axis`` dimension shards λ.
+    op : str
+        ``"and"`` (product) or ``"or"`` (clipped sum), paper §3.2.
+    use_kernel : bool
+        Route each shard's local combine through the
+        :func:`density_combine_batch` Pallas kernel (TPU; pair with
+        ``interpret=True`` elsewhere).  Default is the jnp left fold, which is
+        bit-identical to the host combine on every backend.
+
+    Returns
+    -------
+    jax.Array
+        ``[Q, λ]`` combined matrix, sharded ``P(None, axis)`` — each query row
+        bit-identical to its single-query §3.2 combine.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def body(dens_local: jax.Array, rm: jax.Array) -> jax.Array:
+        if use_kernel:
+            return density_combine_batch(dens_local, rm, op, interpret=interpret)
+        return _combine_local(dens_local, rm, op)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, axis), P()),
+        out_specs=P(None, axis),
+        check_vma=False,
+    )
+    return fn(densities, row_matrix.astype(jnp.int32))

@@ -52,6 +52,12 @@ def theta_stats(combined: jax.Array, thetas: jax.Array):
     return _ts.theta_stats(combined, thetas, interpret=_interpret())
 
 
+@jax.jit
+def theta_stats_batch(combined: jax.Array, thetas: jax.Array):
+    """Wave θ-stats: ``[Q, λ]`` rows × ``[Q, T]`` thresholds -> ``[Q, T]``×2."""
+    return _ts.theta_stats_batch(combined, thetas, interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("rounds", "fanout"))
 def threshold_bisect(
     combined: jax.Array,

@@ -34,6 +34,14 @@ def theta_stats_ref(combined: jax.Array, thetas: jax.Array):
     return counts, recsum
 
 
+def theta_stats_batch_ref(combined: jax.Array, thetas: jax.Array):
+    """[Q, λ] rows × [Q, T] per-query thresholds -> ([Q, T], [Q, T])."""
+    m = combined[:, None, :] >= thetas[:, :, None]
+    counts = jnp.sum(m, axis=2).astype(jnp.float32)
+    recsum = jnp.sum(jnp.where(m, combined[:, None, :], 0.0), axis=2)
+    return counts, recsum
+
+
 def attention_ref(
     q: jax.Array,  # [B, Hq, S, D]
     k: jax.Array,  # [B, Hkv, T, D]

@@ -14,8 +14,16 @@ The wrapper refines θ over a few rounds until the smallest θ with
 sort and no materialized candidate list, versus O(λ log λ) for the sort-based
 form.  This is the kernel the §Perf hillclimb of the paper-technique cell tunes.
 
-Grid: ``(λ_tiles,)``, outputs accumulated across steps (both outputs are [T]-
-blocks revisited every step).
+:func:`theta_stats_batch` is the wave form: ``[Q, λ]`` combined rows × per-query
+``[Q, T]`` candidate thresholds produce both ``[Q, T]`` statistics in one launch
+— the shard-local reduction step of the batched distributed θ-bisection
+(:func:`repro.core.sharded.sharded_threshold_bisect_batch`), where one psum of
+``Q·2·T`` floats then merges all shards for the whole wave.
+
+Grid: ``(λ_tiles,)`` scalar / ``(Q, λ_tiles)`` batched, outputs accumulated
+across λ steps (the ``[T]`` / ``[1, T]`` output blocks are revisited every step;
+the query axis is outermost and parallel-safe, mirroring
+:func:`repro.kernels.density_combine.density_combine_batch`).
 """
 from __future__ import annotations
 
@@ -71,5 +79,74 @@ def theta_stats(
         ],
         interpret=interpret,
         compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+    )(combined, thetas)
+    return counts, recsum
+
+
+def _batch_kernel(x_ref, thetas_ref, counts_ref, recsum_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        recsum_ref[...] = jnp.zeros_like(recsum_ref)
+
+    x = x_ref[0, :]  # [TILE] this query's λ-tile
+    th = thetas_ref[0, :]  # [T] this query's candidate thresholds
+    m = x[None, :] >= th[:, None]  # [T, TILE]
+    counts_ref[...] += jnp.sum(m, axis=1).astype(jnp.float32)[None, :]
+    recsum_ref[...] += jnp.sum(jnp.where(m, x[None, :], 0.0), axis=1)[None, :]
+
+
+def theta_stats_batch(
+    combined: jax.Array,  # [Q, lam] f32 one combined-density row per query
+    thetas: jax.Array,  # [Q, T] f32 per-query candidate thresholds
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched masked θ-statistics: ``[Q, T]`` counts and density sums.
+
+    Parameters
+    ----------
+    combined : jax.Array
+        ``[Q, λ]`` float32 ⊕-combined density rows, one per wave query.
+    thetas : jax.Array
+        ``[Q, T]`` float32 candidate thresholds (T a multiple of 8); each
+        query bisects its own θ bracket, so rows are independent.
+    interpret : bool
+        Run the Pallas kernel in interpret mode (CPU tests).
+
+    Returns
+    -------
+    (counts, recsum) : tuple[jax.Array, jax.Array]
+        ``[Q, T]`` each: ``counts[q, t] = #{b : combined[q, b] >= thetas[q, t]}``
+        and ``recsum[q, t] = Σ_{b : combined[q, b] >= thetas[q, t]} combined[q, b]``
+        — row q bit-identical to ``theta_stats(combined[q], thetas[q])``.
+    """
+    nq, lam = combined.shape
+    _, T = thetas.shape
+    pad = (-lam) % TILE
+    if pad:
+        combined = jnp.pad(
+            combined, ((0, 0), (0, pad)), constant_values=-1.0
+        )  # never >= θ>0
+    counts, recsum = pl.pallas_call(
+        _batch_kernel,
+        grid=(nq, combined.shape[1] // TILE),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda q, i: (q, i)),
+            pl.BlockSpec((1, T), lambda q, i: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T), lambda q, i: (q, 0)),
+            pl.BlockSpec((1, T), lambda q, i: (q, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, T), jnp.float32),
+            jax.ShapeDtypeStruct((nq, T), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
     )(combined, thetas)
     return counts, recsum

@@ -76,7 +76,31 @@ class AdmissionStats:
 
 
 class AdmissionController:
-    """FIFO admission queue with SLO-deadline / full-wave launch policy."""
+    """FIFO admission queue with SLO-deadline / full-wave launch policy.
+
+    Parameters
+    ----------
+    policy : AdmissionPolicy | None
+        Launch policy; defaults to ``AdmissionPolicy()``.
+    clock : Callable[[], float]
+        Monotonic time source.  Injectable so simulations and tests drive
+        admission in virtual time (``tests/test_admission.py``).
+
+    Notes
+    -----
+    Invariants the serving path relies on:
+
+    * **FIFO, no starvation** — waves pop oldest-first, so the oldest
+      request's deadline bounds the wait of everything behind it.
+    * **One wave in flight per pop** — :meth:`poll` / :meth:`flush_one`
+      hand out exactly ONE wave; the caller executes it before polling
+      again.  Waves not yet popped stay safely queued, which is what lets
+      :meth:`requeue_front` restore a failed wave without losing later
+      requests (see ``ServeEngine.pump_exemplar_requests``).
+    * **No I/O, no threads** — the controller only mutates its queue and
+      stats; callers own the loop (a ServeEngine tick, asyncio task, or a
+      deterministic simulation).
+    """
 
     def __init__(
         self,
@@ -98,13 +122,27 @@ class AdmissionController:
         return len(self._pending)
 
     def next_deadline(self) -> float | None:
-        """Absolute time the oldest pending request must launch by."""
+        """Absolute time the oldest pending request must launch by.
+
+        Returns
+        -------
+        float | None
+            ``t_submit(oldest) + policy.slo_s``, or ``None`` when the queue
+            is empty.  Callers use it to schedule the next :meth:`poll` tick.
+        """
         if not self._pending:
             return None
         return self._pending[0][1] + self.policy.slo_s
 
     # ---------------------------------------------------------------- intake
     def submit(self, request: Any) -> Any:
+        """Enqueue `request` (opaque to the controller) stamped at ``clock()``.
+
+        Returns
+        -------
+        Any
+            The same request, for call-chaining convenience.
+        """
         self._pending.append((request, self.clock()))
         self.stats.submitted += 1
         return request
@@ -161,12 +199,25 @@ class AdmissionController:
         return wave
 
     def poll(self, now: float | None = None) -> list[Any] | None:
-        """The opportunistic-launch decision: a full wave launches
-        immediately; otherwise a wave of everything pending (≤ ``max_wave``)
-        launches iff the oldest deadline has come due and the batching floor
-        ``min_wave`` is met (the floor yields to the deadline only when
-        overridden by ``flush``).  Returns the wave, or ``None`` to keep
-        accumulating."""
+        """The opportunistic-launch decision (one wave per call).
+
+        A full wave launches immediately; otherwise a wave of everything
+        pending (≤ ``max_wave``) launches iff the oldest deadline has come
+        due and the batching floor ``min_wave`` is met (the floor yields to
+        the deadline only when overridden by ``flush``).
+
+        Parameters
+        ----------
+        now : float | None
+            Decision time; defaults to ``clock()`` (pass explicitly in
+            simulations).
+
+        Returns
+        -------
+        list | None
+            The launched wave (execute it before polling again — the
+            one-wave-in-flight rule), or ``None`` to keep accumulating.
+        """
         now = self.clock() if now is None else now
         p = self.policy
         if len(self._pending) >= p.max_wave:

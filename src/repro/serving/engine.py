@@ -19,7 +19,11 @@ that are ready (full, or oldest deadline due), :meth:`drain_exemplar_requests`
 is the flush-everything barrier.  Each launched wave goes through ONE batched
 any-k call (:meth:`NeedleTailEngine.any_k_batch`), so concurrent requests
 share one vectorized plan, the engine-lifetime block LRU, and the cross-batch
-plan-order memo instead of Q independent engine passes.
+plan-order memo instead of Q independent engine passes.  When a device mesh is
+configured (``exemplar_mesh=...``, or the any-k engine already has one
+attached), each wave's plan additionally runs as ONE ``shard_map`` collective
+over the λ-sharded density maps (:mod:`repro.core.sharded`) — the whole wave
+is planned by a single collective instead of per-shard host mirrors.
 """
 from __future__ import annotations
 
@@ -71,6 +75,7 @@ class ServeEngine:
         rules=None,
         exemplar_policy: AdmissionPolicy | None = None,
         clock=time.monotonic,
+        exemplar_mesh=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -79,6 +84,10 @@ class ServeEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.rules = rules
+        # when set, exemplar waves plan through the sharded batched path:
+        # the any-k engine gets this mesh attached on first wave (one
+        # shard_map collective per plan wave, repro.core.sharded)
+        self.exemplar_mesh = exemplar_mesh
         self.queue: deque[Request] = deque()
         self.exemplar_queue: deque[ExemplarRequest] = deque()  # legacy intake
         self.exemplar_admission = AdmissionController(
@@ -173,6 +182,11 @@ class ServeEngine:
     def _run_exemplar_wave(self, engine, wave: list[ExemplarRequest]) -> None:
         from repro.core.multi_query import BatchQuery
 
+        # mesh-configured serving: attach once, then every wave's plan runs
+        # as one shard_map collective (engine.any_k_batch auto-routes)
+        mesh = getattr(self, "exemplar_mesh", None)
+        if mesh is not None and getattr(engine, "distributed", None) is None:
+            engine.attach_mesh(mesh)
         try:
             batch = engine.any_k_batch(
                 [BatchQuery(r.predicates, r.k, r.op) for r in wave], algo="auto"

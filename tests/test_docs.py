@@ -1,0 +1,17 @@
+"""Tier-1 wrapper for the docs guard (tools/docs_check.py): doctests every
+fenced example in README.md / docs/*.md and fails on broken cross-references
+into the source tree — a doc pointing at a renamed module, attribute, or file
+breaks the build, not just the reader."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_examples_and_cross_references():
+    sys.path.insert(0, str(REPO))
+    try:
+        from tools.docs_check import main
+        main()  # raises AssertionError listing every broken example/reference
+    finally:
+        sys.path.remove(str(REPO))

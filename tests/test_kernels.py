@@ -63,6 +63,27 @@ def test_theta_stats_sweep(lam, T):
     np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-3)
 
 
+@pytest.mark.parametrize("nq,lam,T", [(1, 100, 8), (4, 4096, 16), (9, 1000, 16)])
+def test_theta_stats_batch_sweep(nq, lam, T):
+    comb = jnp.asarray(
+        (RNG.random((nq, lam)) * (RNG.random((nq, lam)) < 0.4)).astype(np.float32)
+    )
+    ths = jnp.asarray(
+        np.stack([np.linspace(0.01 * (q + 1), 0.95, T) for q in range(nq)]).astype(
+            np.float32
+        )
+    )
+    cb, rb = ops.theta_stats_batch(comb, ths)
+    ce, re_ = ref.theta_stats_batch_ref(comb, ths)
+    np.testing.assert_allclose(cb, ce)
+    np.testing.assert_allclose(rb, re_, rtol=1e-5, atol=1e-3)
+    # each row must equal the single-query kernel bit-for-bit in counts
+    for q in range(nq):
+        c1, r1 = ops.theta_stats(comb[q], ths[q])
+        np.testing.assert_array_equal(np.asarray(cb)[q], np.asarray(c1))
+        np.testing.assert_allclose(np.asarray(rb)[q], np.asarray(r1), rtol=1e-6)
+
+
 def test_threshold_bisect_matches_sort_selection():
     from repro.core.threshold import threshold_select
 

@@ -1,0 +1,271 @@
+"""Sharded batched planning: one shard_map collective plans a whole wave.
+
+Byte-identity of `DistributedAnyK.any_k_batch` against the host-mirror batch
+path (and therefore against sequential `any_k`) on clustered / uniform /
+skewed layouts with AND and OR templates, plus the edge cases: a Q=1 wave, a
+wave whose size does not divide the shard count, queries hitting disjoint
+shards, and a cache-warm sharded replan (0 store reads).  Multi-device cases
+run in a subprocess so the main pytest process keeps exactly 1 CPU device
+(same harness as tests/test_distributed.py).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.data.block_store import Table, build_block_store
+
+def _same(h, s):
+    return (np.array_equal(h.record_block, s.record_block)
+            and np.array_equal(h.record_row, s.record_row)
+            and np.array_equal(h.measures, s.measures)
+            and np.array_equal(np.sort(h.blocks_fetched), np.sort(s.blocks_fetched))
+            and h.plan_rounds == s.plan_rounds and h.algo == s.algo)
+
+def _compare(store, queries, mesh, algos=("threshold", "two_prong", "auto")):
+    out = {}
+    for algo in algos:
+        host = NeedleTailEngine(store).any_k_batch(queries, algo=algo)
+        eng = NeedleTailEngine(store)
+        eng.attach_mesh(mesh)
+        sh = eng.any_k_batch(queries, algo=algo)
+        out[algo] = all(_same(h, s) for h, s in zip(host.results, sh.results))
+        # the sequential oracle: the host batch path is itself locked to
+        # any_k by tests/test_multi_query.py, but re-check one query here
+        q0 = queries[0]
+        seq = NeedleTailEngine(store).any_k(q0.predicates, q0.k, op=q0.op, algo=algo)
+        out[algo] = out[algo] and _same(seq, sh.results[0])
+    return out
+"""
+
+
+def _run(body: str) -> dict:
+    code = PREAMBLE + textwrap.dedent(body)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo", timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_wave_byte_identical_across_layouts():
+    """Acceptance: clustered / uniform / skewed, AND and OR templates, all
+    planners — sharded any_k_batch is byte-identical to the host path."""
+    res = _run("""
+    from repro.data.synthetic import make_clustered_table
+    mesh = jax.make_mesh((8,), ("data",))
+    out = {}
+
+    t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+    store = build_block_store(t, records_per_block=100)  # lam divisible by 8
+    out["clustered"] = _compare(store, [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+        BatchQuery([(2, 0)], 10),
+    ], mesh)
+
+    rng = np.random.default_rng(7)  # uniform: lam=235, NOT divisible by 8
+    t = Table(dims=rng.integers(0, 3, (15_000, 3)).astype(np.int32),
+              measures=rng.normal(size=(15_000, 2)).astype(np.float32),
+              cards=np.asarray([3, 3, 3]))
+    out["uniform"] = _compare(build_block_store(t, records_per_block=64), [
+        BatchQuery([(0, 0)], 40),
+        BatchQuery([(1, 0), (2, 2)], 80),
+        BatchQuery([(0, 0), (1, 1)], 500, op="or"),
+    ], mesh)
+
+    rng = np.random.default_rng(3)  # skewed: density piled at one end
+    n = 8_000
+    a0 = np.zeros(n, np.int32); a0[:500] = 1
+    a1 = rng.integers(0, 2, n).astype(np.int32)
+    t = Table(dims=np.stack([a0, a1], axis=1),
+              measures=rng.normal(size=(n, 1)).astype(np.float32),
+              cards=np.asarray([2, 2]))
+    out["skewed"] = _compare(build_block_store(t, records_per_block=50), [
+        BatchQuery([(0, 1)], 400),
+        BatchQuery([(0, 1), (1, 1)], 200),
+        BatchQuery([(0, 1), (1, 0)], 100, op="or"),
+    ], mesh)
+    print(json.dumps(out))
+    """)
+    for layout, algos in res.items():
+        assert all(algos.values()), (layout, algos)
+
+
+def test_sharded_wave_edge_cases():
+    """Q=1 waves, wave sizes that do not divide the shard count, and a wave
+    whose queries hit disjoint shards (plan union spans both extremes)."""
+    res = _run("""
+    mesh = jax.make_mesh((8,), ("data",))
+    out = {}
+
+    # disjoint-shard layout: 64 blocks over 8 shards; attr0 matches only
+    # shard 0's block range, attr1 only shard 7's
+    rpb = 100
+    n = 64 * rpb
+    a0 = np.zeros(n, np.int32); a0[: 8 * rpb] = 1          # blocks 0..7
+    a1 = np.zeros(n, np.int32); a1[56 * rpb:] = 1          # blocks 56..63
+    a2 = (np.arange(n) // rpb % 2).astype(np.int32)        # everywhere
+    rng = np.random.default_rng(0)
+    t = Table(dims=np.stack([a0, a1, a2], axis=1),
+              measures=rng.normal(size=(n, 1)).astype(np.float32),
+              cards=np.asarray([2, 2, 2]))
+    store = build_block_store(t, records_per_block=rpb)
+
+    out["q1"] = _compare(store, [BatchQuery([(0, 1)], 120)], mesh)
+    out["q3_not_divisible"] = _compare(store, [
+        BatchQuery([(0, 1)], 150),
+        BatchQuery([(1, 1)], 150),
+        BatchQuery([(2, 1)], 90),
+    ], mesh)
+    out["q5_not_divisible"] = _compare(store, [
+        BatchQuery([(0, 1)], 60), BatchQuery([(1, 1)], 60),
+        BatchQuery([(0, 1), (2, 1)], 90), BatchQuery([(1, 1), (2, 0)], 90),
+        BatchQuery([(0, 1), (1, 1)], 10),  # matches nowhere: plans run dry
+    ], mesh)
+
+    # the disjoint pair really planned blocks on opposite shards
+    eng = NeedleTailEngine(store)
+    eng.attach_mesh(mesh)
+    b = eng.any_k_batch(
+        [BatchQuery([(0, 1)], 150), BatchQuery([(1, 1)], 150)], algo="threshold"
+    )
+    s0 = set(b.results[0].blocks_fetched.tolist())
+    s1 = set(b.results[1].blocks_fetched.tolist())
+    out["disjoint"] = bool(
+        s0 and s1 and not (s0 & s1)
+        and max(s0) < 8 and min(s1) >= 56
+    )
+    print(json.dumps(out))
+    """)
+    for case, ok in res.items():
+        if isinstance(ok, dict):
+            assert all(ok.values()), (case, ok)
+        else:
+            assert ok, case
+
+
+def test_sharded_warm_replan_reads_zero_store_blocks():
+    """Cache-warm sharded replan: the repeat wave is served entirely from the
+    engine-lifetime LRU (0 physical store reads, mirroring the host smoke
+    guard) and reuses the sharded plan memo."""
+    res = _run("""
+    from repro.data.synthetic import make_clustered_table
+    mesh = jax.make_mesh((8,), ("data",))
+    t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+    store = build_block_store(t, records_per_block=100)
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+    ]
+    eng = NeedleTailEngine(store)
+    eng.attach_mesh(mesh)
+    cold = eng.any_k_batch(queries, algo="auto")
+    warm = eng.any_k_batch(queries, algo="auto")
+    host = NeedleTailEngine(store, cache_bytes=0)
+    seq_same = all(
+        _same(host.any_k(q.predicates, q.k, op=q.op, algo="auto"), w)
+        for q, w in zip(queries, warm.results)
+    )
+    print(json.dumps({
+        "cold_reads": int(cold.store_blocks_fetched),
+        "cold_unique": int(cold.unique_blocks_fetched.size),
+        "warm_reads": int(warm.store_blocks_fetched),
+        "warm_hits": int(warm.cache_hits),
+        "memo_hits": int(eng.plan_cache.stats.sharded_threshold_hits
+                         + eng.plan_cache.stats.two_prong_hits),
+        "seq_same": bool(seq_same),
+    }))
+    """)
+    assert res["cold_reads"] == res["cold_unique"] > 0, res
+    assert res["warm_reads"] == 0, res
+    assert res["warm_hits"] > 0 and res["memo_hits"] > 0, res
+    assert res["seq_same"], res
+
+
+def test_group_aligned_windows_do_not_poison_shared_memo():
+    """two_prong_group > 1 windows are approximate (group-aligned); they must
+    bypass the exact (row, need) window memo the host path shares, and a
+    replace_store must refresh the attached planner's records_per_block."""
+    res = _run("""
+    from repro.data.synthetic import make_clustered_table
+    mesh = jax.make_mesh((8,), ("data",))
+    t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+    store = build_block_store(t, records_per_block=100)
+    queries = [BatchQuery([(0, 1), (2, 1)], 300),
+               BatchQuery([(1, 1), (3, 1)], 200, op="or")]
+    eng = NeedleTailEngine(store)
+    eng.attach_mesh(mesh, two_prong_group=4)
+    eng.any_k_batch(queries, algo="two_prong")  # sharded: approximate windows
+    host = eng.any_k_batch(queries, algo="two_prong", sharded=False)
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    unpoisoned = all(
+        _same(ref.any_k(q.predicates, q.k, op=q.op, algo="two_prong"), r)
+        for q, r in zip(queries, host.results)
+    )
+
+    t2 = make_clustered_table(num_records=12_800, num_dims=4, density=0.15, seed=5)
+    store64 = build_block_store(t2, records_per_block=64)
+    eng2 = NeedleTailEngine(store)
+    eng2.attach_mesh(mesh)
+    eng2.replace_store(store64)
+    sh = eng2.any_k_batch(queries, algo="auto")
+    ref64 = NeedleTailEngine(store64, cache_bytes=0)
+    rpb_ok = eng2.distributed.rpb == 64 and all(
+        _same(ref64.any_k(q.predicates, q.k, op=q.op, algo="auto"), r)
+        for q, r in zip(queries, sh.results)
+    )
+    print(json.dumps({"unpoisoned": bool(unpoisoned), "rpb_ok": bool(rpb_ok)}))
+    """)
+    assert res["unpoisoned"] and res["rpb_ok"], res
+
+
+def test_serving_exemplar_wave_routes_through_sharded_path():
+    """ServeEngine with a configured mesh attaches it to the any-k engine on
+    the first wave; results stay byte-identical to the host-planned wave."""
+    res = _run("""
+    import collections, itertools
+    from repro.data.synthetic import make_clustered_table
+    from repro.serving.engine import ServeEngine
+    mesh = jax.make_mesh((8,), ("data",))
+    t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+    store = build_block_store(t, records_per_block=100)
+    eng = NeedleTailEngine(store)
+    serve = ServeEngine.__new__(ServeEngine)  # no LM needed for exemplar path
+    serve.max_slots = 4
+    serve.exemplar_queue = collections.deque()
+    serve._rid = itertools.count()
+    serve.exemplar_mesh = mesh
+    reqs = [serve.submit_exemplar_request([(0, 1), (2, 1)], 50) for _ in range(6)]
+    reqs.append(serve.submit_exemplar_request([(1, 1)], 30))
+    done = serve.drain_exemplar_requests(eng)
+    ref_eng = NeedleTailEngine(store)
+    ok = all(
+        _same(ref_eng.any_k(r.predicates, r.k, op=r.op, algo="auto"), r.result)
+        for r in done
+    )
+    print(json.dumps({
+        "done": len(done),
+        "attached": eng.distributed is not None,
+        "sharded_planner_used": int(
+            eng.plan_cache.stats.sharded_threshold_hits
+            + eng.plan_cache.stats.sharded_threshold_misses) > 0,
+        "identical": bool(ok),
+    }))
+    """)
+    assert res["done"] == 7 and res["attached"], res
+    assert res["sharded_planner_used"], res
+    assert res["identical"], res

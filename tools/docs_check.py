@@ -1,0 +1,147 @@
+"""Documentation guard: doctest the fenced examples in the markdown docs and
+fail on broken cross-references into the source tree.
+
+Checks, over ``README.md`` and ``docs/*.md``:
+
+1. **Doctests** — every ```` ```python ```` fenced block containing ``>>>``
+   is executed with :mod:`doctest`; any failure or example exception fails
+   the run.  Blocks must be self-contained (do their own imports).
+2. **Dotted references** — backticked names like
+   ``repro.core.sharded.DistributedAnyK.any_k_batch`` are resolved: the
+   longest importable module prefix is imported and the remaining components
+   are walked with ``getattr``.  A rename (the very staleness this guard
+   exists for — e.g. a doc still pointing at ``fetch_blocks`` after the
+   method became ``fetch_plan``) fails the run.
+3. **Path references** — backticked repo paths (``src/...``, ``tests/...``,
+   ``benchmarks/...``, ``docs/...``, ``examples/...``, ``tools/...``) and
+   relative markdown links must exist; ``*`` patterns must glob to at least
+   one file.
+
+Run standalone (``python -m tools.docs_check``), via the benchmark driver
+(``python -m benchmarks.run --only docs``), or through tier-1 pytest
+(``tests/test_docs.py``).  :func:`main` raises ``AssertionError`` on any
+failure so the driver records it like a bench regression.
+"""
+from __future__ import annotations
+
+import doctest
+import glob as globmod
+import importlib
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_DOTTED = re.compile(r"\b(?:repro|benchmarks|tools)(?:\.[A-Za-z_]\w*)+")
+_PATHREF = re.compile(r"^(?:src|tests|benchmarks|docs|examples|tools)/[\w.*/-]+$")
+_MDLINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)(?:#[^)]*)?\)")
+
+
+def _doc_files() -> list[Path]:
+    return [p for p in [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+            if p.exists()]
+
+
+def _run_doctests(path: Path, errors: list[str]) -> int:
+    """Execute the doctest-style fenced blocks of one file; returns #blocks."""
+    text = path.read_text()
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(verbose=False)
+    n = 0
+    for m in _FENCE.finditer(text):
+        block = m.group(1)
+        if ">>>" not in block:
+            continue
+        n += 1
+        lineno = text[: m.start()].count("\n") + 1
+        test = parser.get_doctest(
+            block, {}, f"{path.name}:{lineno}", str(path), lineno
+        )
+        res = runner.run(test, clear_globs=True)
+        if res.failed:
+            errors.append(
+                f"{path.name}:{lineno}: {res.failed}/{res.attempted} doctest "
+                "example(s) failed (run `python -m tools.docs_check` for detail)"
+            )
+    return n
+
+
+def _check_dotted(name: str, errors: list[str], where: str) -> None:
+    parts = name.split(".")
+    mod = None
+    for cut in range(len(parts), 0, -1):
+        prefix = ".".join(parts[:cut])
+        try:
+            if importlib.util.find_spec(prefix) is not None:
+                mod = importlib.import_module(prefix)
+                break
+        except (ImportError, ModuleNotFoundError):
+            continue
+    if mod is None:
+        errors.append(f"{where}: unresolvable module reference `{name}`")
+        return
+    obj = mod
+    for attr in parts[cut:]:
+        if not hasattr(obj, attr):
+            errors.append(
+                f"{where}: `{name}` — `{type(obj).__name__}` object "
+                f"`{'.'.join(parts[:cut])}` has no attribute chain at `{attr}`"
+            )
+            return
+        obj = getattr(obj, attr)
+
+
+def _check_refs(path: Path, errors: list[str]) -> int:
+    text = path.read_text()
+    # blank out fenced code (examples are checked by doctest, not reference
+    # rules) with equal newline counts so reported line numbers stay true
+    prose = _FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), text)
+    n = 0
+    for m in _BACKTICK.finditer(prose):
+        span = m.group(1).strip()
+        for dm in _DOTTED.finditer(span):
+            where = f"{path.name}:{prose[: m.start()].count(chr(10)) + 1}"
+            _check_dotted(dm.group(0), errors, where)
+            n += 1
+        if _PATHREF.match(span):
+            n += 1
+            where = f"{path.name}:{prose[: m.start()].count(chr(10)) + 1}"
+            if "*" in span:
+                if not globmod.glob(str(REPO / span)):
+                    errors.append(f"{where}: path pattern `{span}` matches nothing")
+            elif not (REPO / span).exists():
+                errors.append(f"{where}: referenced path `{span}` does not exist")
+    for m in _MDLINK.finditer(prose):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        n += 1
+        where = f"{path.name}:{prose[: m.start()].count(chr(10)) + 1}"
+        if not (path.parent / target).exists() and not (REPO / target).exists():
+            errors.append(f"{where}: markdown link target `{target}` does not exist")
+    return n
+
+
+def main(argv=None) -> None:
+    for p in (str(REPO), str(REPO / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    errors: list[str] = []
+    for path in _doc_files():
+        nt = _run_doctests(path, errors)
+        nr = _check_refs(path, errors)
+        print(f"# {path.relative_to(REPO)}: {nt} doctest block(s), "
+              f"{nr} cross-reference(s) checked")
+    if errors:
+        for e in errors:
+            print(f"DOCS-CHECK FAIL: {e}", file=sys.stderr)
+        raise AssertionError(f"docs-check: {len(errors)} error(s)")
+    print("# docs-check ok")
+
+
+if __name__ == "__main__":
+    main()
