@@ -24,6 +24,14 @@ wave re-reads the same dense blocks.  Sections:
       Asserts byte-identity to the cache-less sequential baseline AND that
       the warm sharded wave reads **0 blocks from the store** — the sharded
       CI guard.
+  device sweep (``--device``) — the Q=64 wave through the device-resident
+      pipeline (``any_k_batch(device=True)``: plan state carried on device,
+      :mod:`repro.core.multi_query` ``plan_on_host=False``), cold then warm.
+      Asserts byte-identity, 0 warm store reads, and **≤1 device→host
+      transfer per refill round** — counted by the pipeline's transfer
+      ledger and policed by a ``jax.transfer_guard`` disallow probe
+      (:mod:`benchmarks.common`) — the device CI guard (driver key
+      ``device``).
 
 ``--smoke`` runs a reduced workload (<60 s) that still executes every
 selected section and hard-fails on cache-stat regressions — the CI hook.
@@ -215,6 +223,64 @@ def sharded_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
     return rows
 
 
+def device_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
+    """The Q=`q` wave through the device-resident pipeline, cold then warm.
+
+    Every phase must be byte-identical to the cache-less sequential baseline,
+    the warm waves must read 0 blocks from the store, and every phase must
+    ship ≤ 1 device→host transfer per refill round — the ledger is asserted
+    by :func:`benchmarks.common.assert_single_transfer_rounds`, and the warm
+    phases additionally run under the
+    :func:`benchmarks.common.forbid_device_to_host_transfers` probe
+    (``jax.transfer_guard``) so any stray transfer raises.  Also exercises
+    the ``block_gather`` device union fetch once against the host slabs.
+    Raises on any regression — this is the device CI hook.
+    """
+    from benchmarks.common import (
+        assert_single_transfer_rounds, forbid_device_to_host_transfers,
+    )
+
+    queries = overlapping_queries(q, seed=100 + q)
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
+    eng = NeedleTailEngine(store)
+    rows = []
+    for phase in ("cold", "warm", "warm2"):
+        t0 = time.perf_counter()
+        if phase == "cold":  # compile outside the guard; transfers still tallied
+            batch = eng.any_k_batch(queries, algo=algo, device=True)
+        else:
+            with forbid_device_to_host_transfers():
+                batch = eng.any_k_batch(queries, algo=algo, device=True)
+        ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        assert_single_transfer_rounds(batch)
+        st = eng.block_cache.stats
+        rows.append(dict(
+            phase=phase, Q=q, algo=algo, batch_ms=round(ms, 2),
+            rounds=batch.rounds, transfers=batch.device_transfers,
+            store_blocks=batch.store_blocks_fetched,
+            cache_hits=batch.cache_hits,
+            hit_rate=round(st.hit_rate, 3),
+        ))
+    if rows[1]["store_blocks"] != 0 or rows[2]["store_blocks"] != 0:
+        raise AssertionError(
+            f"device warm-cache regression: repeat wave read "
+            f"{rows[1]['store_blocks']}/{rows[2]['store_blocks']} blocks from "
+            "the store (expected 0: 100% LRU hits)"
+        )
+    # the union gather kernel: device fetch of the touched union must match
+    # the host slabs byte for byte
+    union = eng.any_k_batch(queries[:4], algo=algo, device=True)
+    ids = union.unique_blocks_fetched[:32]
+    bd, bm, bv = store.fetch(ids)
+    dd, dm, dv = store.fetch_device(ids)
+    np.testing.assert_array_equal(bd, np.asarray(dd))
+    np.testing.assert_array_equal(bm, np.asarray(dm))
+    np.testing.assert_array_equal(bv, np.asarray(dv))
+    return rows
+
+
 class _SimClock:
     def __init__(self):
         self.t = 0.0
@@ -284,6 +350,11 @@ def main(argv=None):
                     help="also run the sharded-planning sweep (attach_mesh: "
                          "one shard_map collective per plan wave) and assert "
                          "the warm sharded Q=64 wave reads 0 store blocks")
+    ap.add_argument("--device", action="store_true",
+                    help="also run the device-resident pipeline sweep and "
+                         "assert ≤1 device→host transfer per refill round on "
+                         "the warm Q=64 wave (jax.transfer_guard probe + "
+                         "pipeline transfer ledger)")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
 
@@ -320,6 +391,16 @@ def main(argv=None):
     emit(arows, ["slo_ms", "max_wave", "waves", "mean_wave", "mean_wait_ms",
                  "max_wait_ms", "slo_violations", "store_blocks", "hit_rate",
                  "wall_ms"])
+
+    if args.device:
+        print("\n# --- device-resident pipeline sweep (one transfer per round) ---")
+        drows = device_sweep(store, algo=args.algo, q=64)
+        emit(drows, ["phase", "Q", "algo", "batch_ms", "rounds", "transfers",
+                     "store_blocks", "cache_hits", "hit_rate"])
+        print(f"# device warm repeat: {drows[0]['store_blocks']} -> "
+              f"{drows[-1]['store_blocks']} store blocks, "
+              f"{drows[-1]['transfers']} transfer(s) for "
+              f"{drows[-1]['rounds']} round(s) (asserted ≤1 per round)")
 
     if args.sharded:
         print("\n# --- sharded-planning sweep (one collective per plan wave) ---")

@@ -8,6 +8,7 @@ same fitted model (DESIGN.md §7).  CPU time is measured.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 
 import numpy as np
@@ -76,3 +77,42 @@ def emit(rows: list[dict], header: list[str]):
     print(",".join(header))
     for r in rows:
         print(",".join(str(r[h]) for h in header))
+
+
+@contextlib.contextmanager
+def forbid_device_to_host_transfers():
+    """``jax.transfer_guard``-based probe for the device-resident pipeline.
+
+    Arms ``jax.transfer_guard_device_to_host("disallow")`` for the context:
+    any device→host transfer that is not explicitly sanctioned raises on the
+    spot.  The device plan loop (``repro.core.multi_query._device_plan_loop``)
+    wraps its ONE packed per-round transfer in a nested
+    ``transfer_guard_device_to_host("allow")`` block, so under this probe the
+    pipeline can only ship that single sanctioned transfer per refill round —
+    a stray host mirror anywhere else in the hot loop fails loudly instead of
+    silently regressing to per-query transfers.
+
+    Caveat: on the CPU backend host and device share one memory space and
+    JAX never trips transfer guards, so the probe is structurally armed but
+    vacuous there — which is why the guard is always paired with the
+    pipeline's explicit ledger (``BatchQueryResult.device_transfers``, the
+    count :func:`assert_single_transfer_rounds` enforces on every backend).
+    """
+    import jax
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+def assert_single_transfer_rounds(batch) -> None:
+    """Hard CI guard: the device pipeline shipped exactly one device→host
+    transfer per planning round (``rounds`` executed waves plus at most one
+    final empty-plan round that terminates the loop).  Raises on regression
+    to per-query (or per-plan-step) transfers."""
+    lo, hi = max(int(batch.rounds), 1), int(batch.rounds) + 1
+    if not (lo <= int(batch.device_transfers) <= hi):
+        raise AssertionError(
+            f"device-pipeline transfer regression: {batch.device_transfers} "
+            f"device→host transfers for {batch.rounds} refill round(s) "
+            f"(expected between {lo} and {hi} — one packed plan per round)"
+        )

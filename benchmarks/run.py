@@ -9,6 +9,9 @@ import argparse
 import sys
 import time
 
+# key -> (title, module[, argv]): an optional third element is passed to the
+# module's main(argv) so one bench module can back several driver sections
+# with different flags (e.g. the device-pipeline transfer guard).
 SECTIONS = {
     "fig3": ("Fig 3: synthetic any-k runtimes", "benchmarks.bench_anyk_synthetic"),
     "fig456": ("Figs 4-6: real-layout any-k runtimes (HDD+SSD)", "benchmarks.bench_anyk_real"),
@@ -18,6 +21,8 @@ SECTIONS = {
     "params": ("Sec 7.6: parameter effects", "benchmarks.bench_parameters"),
     "kernels": ("Kernel microbenchmarks", "benchmarks.bench_kernels"),
     "multiq": ("Batched multi-query vs sequential any-k", "benchmarks.bench_multi_query"),
+    "device": ("Device-resident wave pipeline: ≤1 transfer/round guard",
+               "benchmarks.bench_multi_query", ["--device", "--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 
@@ -29,11 +34,12 @@ def main() -> None:
     keys = [k.strip() for k in args.only.split(",") if k.strip()] or list(SECTIONS)
     failures = 0
     for key in keys:
-        title, module = SECTIONS[key]
+        title, module, *extra = SECTIONS[key]
         print(f"\n===== [{key}] {title} =====")
         t0 = time.time()
         try:
-            __import__(module, fromlist=["main"]).main()
+            entry = __import__(module, fromlist=["main"]).main
+            entry(extra[0]) if extra else entry()
             print(f"# [{key}] ok in {time.time()-t0:.1f}s")
         except Exception as e:  # keep the suite going; report at the end
             import traceback

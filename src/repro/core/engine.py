@@ -236,7 +236,13 @@ class NeedleTailEngine:
         self.distributed = None
 
     # ------------------------------------------------------------------ batch
-    def any_k_batch(self, queries, algo: str = "auto", sharded: bool | None = None):
+    def any_k_batch(
+        self,
+        queries,
+        algo: str = "auto",
+        sharded: bool | None = None,
+        device: bool = False,
+    ):
         """Evaluate Q concurrent any-k queries with shared-fetch scheduling.
 
         ``queries`` is a sequence of :class:`~repro.core.multi_query.BatchQuery`
@@ -247,6 +253,15 @@ class NeedleTailEngine:
         ``sharded`` — ``None`` (default) plans mesh-natively iff a mesh is
         attached (:meth:`attach_mesh`); ``True`` requires one; ``False``
         forces the host-mirror plan path even with a mesh attached.
+
+        ``device`` — ``True`` runs the device-resident wave pipeline
+        (``plan_on_host=False``): the plan state is carried across refill
+        rounds as jax Arrays and each round ships exactly ONE packed
+        device→host transfer (see :mod:`repro.core.multi_query` §4 and
+        ``BatchQueryResult.device_transfers``).  Composes with ``sharded``:
+        with a mesh attached, each device round's plan step is one
+        ``shard_map`` collective feeding the device block-cut directly.
+        Results stay byte-identical to the default host-mirror oracle.
         Returns a :class:`~repro.core.multi_query.BatchQueryResult`.
         """
         from repro.core.multi_query import run_batch
@@ -255,7 +270,9 @@ class NeedleTailEngine:
         planner = getattr(self, "distributed", None) if sharded is None or sharded else None
         if sharded and planner is None:
             raise ValueError("sharded=True but no mesh attached; call attach_mesh")
-        return run_batch(self, queries, algo=algo, planner=planner)
+        return run_batch(
+            self, queries, algo=algo, planner=planner, plan_on_host=not device
+        )
 
     # -------------------------------------------------------------- aggregate
     def aggregate(

@@ -30,19 +30,42 @@ This module evaluates Q concurrent ``(predicates, k)`` requests as one unit:
    (template, exclusion) plan orders are memoized across batches — a repeat
    wave skips both the THRESHOLD sort and the store reads entirely.
 
+4. **Device-resident planning** (``plan_on_host=False``) — the default loop
+   above still consults host mirrors every round (``np.asarray`` of the
+   sorted orders, host prefix cuts, host window diffs).  The device pipeline
+   instead carries a :class:`DevicePlanState` across refill rounds as jax
+   Arrays (base combined matrix, exclusion masks, planned-prefix cursors) and
+   runs combine → θ-stats → plan → block-cut entirely on device
+   (:mod:`repro.kernels.plan_wave`; one ``shard_map`` collective per round
+   when a sharded ``planner`` is attached).  Exactly ONE device→host transfer
+   per round ships the packed ``[Q, λ]`` plan (plus per-query cut offsets)
+   back for fetching — counted in ``BatchQueryResult.device_transfers`` and
+   wrapped in ``jax.transfer_guard_device_to_host("allow")`` so callers can
+   run the whole loop under a ``"disallow"`` guard to catch stray transfers.
+   The host stays an I/O peripheral: it decodes the packed plans, applies the
+   §7.2 ``auto`` cost comparison (the cost model is host-side float64), and
+   uploads only the per-query choice codes + needs for the next round.
+
 Per-query refill semantics are preserved exactly: each query's plan trajectory
 (combined densities, exclusions, needs, refill rounds) is bit-identical to what
 :meth:`NeedleTailEngine.any_k` would compute for it alone, so per-query results
 are byte-identical to the sequential engine — only the physical I/O schedule
-changes.  This admission → batch plan → shared fetch seam is what the sharding
-and async-serving follow-ons build on.
+changes.  The host-mirror path (``plan_on_host=True``, the default) is the
+byte-identity oracle for the device pipeline; it alone feeds the
+:class:`~repro.core.block_cache.PlanOrderCache` memo (device rounds never
+read or write it — their plans live on device, so there are no row bytes to
+key on — and therefore cannot poison it).  This admission → batch plan →
+shared fetch seam is what the sharding and async-serving follow-ons build on.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from collections import OrderedDict
 from typing import TYPE_CHECKING, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +74,10 @@ from repro.core.forward_optimal import forward_optimal_faithful
 from repro.core.predicates import Predicate
 from repro.core.threshold import threshold_cut, threshold_sort_batch
 from repro.core.two_prong import two_prong_select_batch
+
+# repro.kernels.plan_wave is imported lazily inside the device-pipeline
+# functions: pulling it here would make every host-only any_k_batch call pay
+# the Pallas import (see repro.compat's import-cost note).
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import NeedleTailEngine, QueryResult
@@ -91,6 +118,12 @@ class BatchQueryResult:
     store_blocks_fetched: int = 0  # physical store reads (cache misses)
     modeled_store_io_s: float = 0.0  # one pass over only the missed blocks
     cache_hits: int = 0  # block gathers served from the engine LRU
+    # device pipeline only (plan_on_host=False): device→host transfers shipped
+    # by the plan loop — exactly one packed plan per planning round when
+    # healthy (``rounds`` executed waves plus at most one final round whose
+    # plans come up empty and terminate the loop), 0 on the host-mirror path.
+    # The CI guard asserts transfers <= rounds + 1.
+    device_transfers: int = 0
 
     @property
     def num_queries(self) -> int:
@@ -135,12 +168,87 @@ class _QueryState:
     meas: list[np.ndarray] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class DevicePlanState:
+    """Round-carried device residency of the wave planner.
+
+    The device pipeline's inversion of data-flow ownership: the planning
+    state lives on the device(s) as jax Arrays and the host touches it only
+    through one packed transfer per refill round.  ``combined0`` is the base
+    ⊕-combined wave matrix (computed once, exclusion-free); ``excl`` is the
+    per-query exclusion mask the device updates itself from the host's choice
+    codes (:func:`repro.kernels.plan_wave.apply_chosen`); ``th_mask`` /
+    ``tp_win`` are the previous round's planned-prefix cursors (THRESHOLD
+    selection mask and TWO-PRONG window) the replay reconstructs fetched
+    block sets from.  ``transfers`` is the host-side ledger of device→host
+    transfers the plan loop shipped — the quantity the ≤1-per-round CI guard
+    enforces.
+    """
+
+    combined0: jax.Array  # [Qb, λ] f32 base combined densities (no exclusions)
+    excl: jax.Array  # [Qb, λ] bool blocks already planned/fetched per query
+    th_mask: jax.Array  # [Qb, λ] bool previous round's THRESHOLD prefix
+    tp_win: jax.Array  # [Qb, 2] i32 previous round's TWO-PRONG window
+    transfers: int = 0
+
+
 def _bucket(n: int) -> int:
     """Next power of two ≥ n: bounds vmapped-planner recompilations."""
     b = 1
     while b < n:
         b *= 2
     return b
+
+
+# Padded-row device-buffer cache (bugfix): _pad_rows used to re-pad and
+# re-upload identical row sets every round — one fresh host copy plus one
+# host→device transfer per planner call even when the wave re-planned the
+# exact same (template, exclusion) rows.  Keys are a 16-byte blake2b digest
+# of the row bytes (+ shape/dtype), not the bytes themselves, so a cached
+# entry retains only the device buffer; eviction is LRU, bounded by both an
+# entry count and a device-byte budget.
+_PAD_CACHE: "OrderedDict[tuple, jax.Array]" = OrderedDict()
+_PAD_CACHE_MAX = 128
+_PAD_CACHE_MAX_BYTES = 256 << 20
+_pad_cache_stats = {"hits": 0, "misses": 0, "nbytes": 0}
+
+
+def _pad_rows_device(rows: np.ndarray) -> jax.Array:
+    """Padded ``[bucket, λ]`` DEVICE buffer for a host row set, memoized on
+    the row-set fingerprint.
+
+    Padding to a power-of-two row count bounds vmapped-planner
+    recompilations (one compile per bucket size); padded rows are zeros and
+    their outputs are never read.  Reuse cases: the threshold and two-prong
+    passes of one ``auto`` wave plan the same miss rows, and repeat waves on
+    a cold plan memo re-upload identical row sets round after round.
+    """
+    import hashlib
+
+    key = (
+        hashlib.blake2b(rows.tobytes(), digest_size=16).digest(),
+        rows.shape, str(rows.dtype),
+    )
+    buf = _PAD_CACHE.get(key)
+    if buf is not None:
+        _pad_cache_stats["hits"] += 1
+        _PAD_CACHE.move_to_end(key)
+        return buf
+    _pad_cache_stats["misses"] += 1
+    b = _bucket(rows.shape[0])
+    if b != rows.shape[0]:
+        padded = np.zeros((b, rows.shape[1]), dtype=rows.dtype)
+        padded[: rows.shape[0]] = rows
+        rows = padded
+    buf = jnp.asarray(rows)
+    _PAD_CACHE[key] = buf
+    _pad_cache_stats["nbytes"] += int(buf.nbytes)
+    while len(_PAD_CACHE) > _PAD_CACHE_MAX or (
+        len(_PAD_CACHE) > 1 and _pad_cache_stats["nbytes"] > _PAD_CACHE_MAX_BYTES
+    ):
+        _, old = _PAD_CACHE.popitem(last=False)
+        _pad_cache_stats["nbytes"] -= int(old.nbytes)
+    return buf
 
 
 def _combined_matrix(engine: "NeedleTailEngine", states: list[_QueryState]) -> np.ndarray:
@@ -211,17 +319,6 @@ def _plan_wave(
             uniq_rows.append(i)
     u_idx = np.asarray([row_of[key] for key in row_key])
 
-    def _pad_rows(rows: np.ndarray) -> np.ndarray:
-        # pad to a power-of-two row count so the vmapped planners compile once
-        # per bucket size, not once per unique-set size; padded rows are zeros
-        # and their outputs are never read
-        b = _bucket(rows.shape[0])
-        if b == rows.shape[0]:
-            return rows
-        out = np.zeros((b, rows.shape[1]), dtype=rows.dtype)
-        out[: rows.shape[0]] = rows
-        return out
-
     plan_cache = engine.plan_cache
 
     def threshold_plans() -> list[np.ndarray]:
@@ -237,7 +334,7 @@ def _plan_wave(
                 miss.append(j)
         if miss:
             rows = combined[[uniq_rows[j] for j in miss]]
-            si, sd, cum = threshold_sort_batch(jnp.asarray(_pad_rows(rows)))
+            si, sd, cum = threshold_sort_batch(_pad_rows_device(rows))
             si, sd, cum = np.asarray(si), np.asarray(sd), np.asarray(cum)
             for off, j in enumerate(miss):
                 entries[j] = (si[off], sd[off], cum[off])
@@ -278,7 +375,7 @@ def _plan_wave(
             k_u = np.ones((_bucket(len(miss)),), dtype=np.float32)
             k_u[: len(miss)] = needs[miss]
             r = two_prong_select_batch(
-                jnp.asarray(_pad_rows(combined[miss])), jnp.asarray(k_u), rpb
+                _pad_rows_device(combined[miss]), jnp.asarray(k_u), rpb
             )
             starts, ends = np.asarray(r.start), np.asarray(r.end)
             return [(int(starts[o]), int(ends[o])) for o in range(len(miss))]
@@ -348,11 +445,268 @@ def _plan_wave(
     raise ValueError(f"unknown algo {algo!r}")
 
 
+def _execute_wave(
+    engine: "NeedleTailEngine",
+    cache,
+    active: list[_QueryState],
+    wave_blocks: list[np.ndarray],
+    touched: list[int],
+    touched_set: set[int],
+) -> tuple[bool, int]:
+    """Fetch one wave's deduplicated union and apply each query's §4.1
+    post-fetch bookkeeping (mask, record append, exclusion growth, refill
+    accounting).  Shared verbatim by the host-mirror and device plan loops so
+    the only thing that differs between them is where plans are computed.
+    Returns ``(progressed, blocks_requested_delta)``."""
+    union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
+    if union.size:
+        for b in union:
+            if int(b) not in touched_set:
+                touched_set.add(int(b))
+                touched.append(int(b))
+        cache.ensure(engine.store, union)
+    progressed = False
+    requested = 0
+    for st, blocks in zip(active, wave_blocks):
+        if blocks.size == 0:
+            continue
+        progressed = True
+        bd, bm, bv = cache.get_many(engine.store, blocks)
+        mask = np.asarray(engine._mask(bd, st.query.predicates, st.query.op) & bv)
+        bi, ri = np.nonzero(mask)
+        st.rec_blocks.append(blocks[bi])
+        st.rec_rows.append(ri)
+        st.meas.append(np.asarray(bm)[bi, ri])
+        st.planned.append(blocks)
+        requested += int(blocks.size)
+        st.got += int(bi.size)
+        st.exclude = np.concatenate([st.exclude, blocks])
+        st.need = st.query.k - st.got
+        st.rounds += 1
+        if st.got >= st.query.k:
+            st.done = True
+    return progressed, requested
+
+
+def _host_plan_loop(
+    engine: "NeedleTailEngine",
+    states: list[_QueryState],
+    algo: str,
+    planner,
+    cache,
+    touched: list[int],
+    touched_set: set[int],
+) -> tuple[int, int]:
+    """The host-mirror refill loop (the byte-identity oracle): plans on host
+    mirrors via :func:`_plan_wave`, one shared union fetch per wave.  Returns
+    ``(waves, blocks_requested_total)``."""
+    requested_total = 0
+    waves = 0
+    while waves < engine.max_refills:
+        active = [st for st in states if not st.done]
+        if not active:
+            break
+        # per-query algo override: plan each algo group in its own wave call
+        by_algo: dict[str, list[_QueryState]] = {}
+        for st in active:
+            by_algo.setdefault(st.query.algo or algo, []).append(st)
+        plan_of: dict[int, np.ndarray] = {}
+        for a, group in by_algo.items():
+            for st, plan in zip(group, _plan_wave(engine, group, a, planner)):
+                plan_of[id(st)] = plan
+        plans = [plan_of[id(st)] for st in active]
+        # per-query §4.1 post-plan steps: drop already-fetched blocks,
+        # ascending fetch order (setdiff1d returns sorted ids)
+        wave_blocks: list[np.ndarray] = []
+        for st, plan in zip(active, plans):
+            blocks = np.setdiff1d(plan, st.exclude)
+            if blocks.size == 0:
+                st.done = True  # plan exhausted: nothing new to read
+            wave_blocks.append(blocks)
+        progressed, req = _execute_wave(
+            engine, cache, active, wave_blocks, touched, touched_set
+        )
+        requested_total += req
+        if not progressed:
+            break
+        waves += 1
+    return waves, requested_total
+
+
+@functools.lru_cache(maxsize=None)
+def _local_round_fn(records_per_block: int):
+    """Jitted single-device round body of the device pipeline (memoized per
+    block capacity; jax caches per wave shape).  One call = replay last
+    round's choices onto the exclusion mask, re-plan every query on device,
+    and pack the round's plans into the single-transfer matrix."""
+    from repro.kernels.plan_wave import (
+        apply_chosen, pack_plan, plan_wave_from_combined,
+    )
+
+    def round_fn(combined0, excl, th_prev, tp_prev, chosen_prev, needs):
+        excl = apply_chosen(excl, th_prev, tp_prev, chosen_prev)
+        res = plan_wave_from_combined(combined0, excl, needs, records_per_block)
+        packed = pack_plan(res.th_mask, res.n_sel, res.tp_start, res.tp_end)
+        tp_win = jnp.stack([res.tp_start, res.tp_end], axis=1)
+        return packed, excl, res.th_mask, tp_win
+
+    return jax.jit(round_fn)
+
+
+def _device_state(
+    engine: "NeedleTailEngine", states: list[_QueryState], qb: int
+) -> DevicePlanState:
+    """Build round-0 device residency: one ⊕-combine per op group on device
+    (the :func:`repro.kernels.plan_wave.combine_wave` fold — bit-identical to
+    the host combine), Predicate trees compiled host-side once and uploaded."""
+    from repro.kernels.plan_wave import combine_wave
+
+    lam = engine.store.num_blocks
+    dens_dev = engine.store.index.densities  # [rows, λ] jax Array, resident
+    combined0 = jnp.zeros((qb, lam), jnp.float32)
+    groups: dict[str, list[int]] = {}
+    tree_idx: list[int] = []
+    for i, st in enumerate(states):
+        if isinstance(st.query.predicates, Predicate):
+            tree_idx.append(i)
+        else:
+            groups.setdefault(st.query.op, []).append(i)
+    vocab = engine.store.index.vocab
+    for op, idxs in groups.items():
+        rm = pack_row_matrix(vocab, [states[i].query.predicates for i in idxs])
+        rows_dev = combine_wave(dens_dev, jnp.asarray(rm), op)
+        combined0 = combined0.at[jnp.asarray(np.asarray(idxs))].set(rows_dev)
+    if tree_idx:
+        host_rows = np.stack(
+            [
+                np.asarray(
+                    states[i].query.predicates.density(engine.store.index),
+                    dtype=np.float32,
+                )
+                for i in tree_idx
+            ]
+        )
+        combined0 = combined0.at[jnp.asarray(tree_idx)].set(jnp.asarray(host_rows))
+    return DevicePlanState(
+        combined0=combined0,
+        excl=jnp.zeros((qb, lam), bool),
+        th_mask=jnp.zeros((qb, lam), bool),
+        tp_win=jnp.zeros((qb, 2), jnp.int32),
+    )
+
+
+def _device_plan_loop(
+    engine: "NeedleTailEngine",
+    states: list[_QueryState],
+    algo: str,
+    planner,
+    cache,
+    touched: list[int],
+    touched_set: set[int],
+) -> tuple[int, int, int]:
+    """The device-resident refill loop: combine → θ-stats → plan → block-cut
+    on device, ONE device→host transfer per round.
+
+    The wave's plan state is a :class:`DevicePlanState` carried across
+    rounds; with a sharded ``planner`` each round's plan step is one
+    ``shard_map`` collective whose outputs feed the device cut directly
+    (:meth:`repro.core.sharded.DistributedAnyK.device_round_fn` — no host
+    mirrors between plan and cut).  Per-query results are byte-identical to
+    the ``plan_on_host=True`` oracle; ``forward_optimal`` queries (inherently
+    sequential, host cost DP) ride the wave but plan on host.  Returns
+    ``(waves, blocks_requested_total, device_transfers)``.
+    """
+    from repro.kernels.plan_wave import unpack_plan
+
+    lam = engine.store.num_blocks
+    rpb = engine.store.records_per_block
+    algo_of = [st.query.algo or algo for st in states]
+    for a in set(algo_of):
+        if a not in ("threshold", "two_prong", "auto", "forward_optimal"):
+            raise ValueError(f"unknown algo {a!r}")
+    qb = _bucket(max(len(states), 1))
+    dstate = _device_state(engine, states, qb)
+    if planner is not None:
+        round_fn = planner.device_round_fn(lam, rpb)
+    else:
+        round_fn = _local_round_fn(rpb)
+    idx_of = {id(st): i for i, st in enumerate(states)}
+    chosen_np = np.full((qb,), -1, np.int8)
+    requested_total = 0
+    waves = 0
+    while waves < engine.max_refills:
+        active = [st for st in states if not st.done]
+        if not active:
+            break
+        needs_np = np.ones((qb,), np.float32)
+        for st in active:
+            needs_np[idx_of[id(st)]] = float(st.need)
+        packed, excl, th_prev, tp_prev = round_fn(
+            dstate.combined0, dstate.excl, dstate.th_mask, dstate.tp_win,
+            jnp.asarray(chosen_np), jnp.asarray(needs_np),
+        )
+        dstate.excl, dstate.th_mask, dstate.tp_win = excl, th_prev, tp_prev
+        # the round's single device→host transfer: the packed [Q, λ+3] plan.
+        # Explicitly allowed so callers can run the whole loop under
+        # jax.transfer_guard_device_to_host("disallow") as a stray-transfer
+        # probe (benchmarks/common.py).
+        with jax.transfer_guard_device_to_host("allow"):
+            packed_np = np.asarray(packed)
+        dstate.transfers += 1
+        th_mask, _, tps, tpe = unpack_plan(packed_np, lam)
+        # forward_optimal falls back to the host DP (sequential by nature);
+        # its combined rows come from the host mirror, not the device
+        fo_active = [st for st in active if algo_of[idx_of[id(st)]] == "forward_optimal"]
+        fo_plans: dict[int, np.ndarray] = {}
+        if fo_active:
+            fo_combined = _combined_matrix(engine, fo_active)
+            for st, comb in zip(fo_active, fo_combined):
+                sel, _ = forward_optimal_faithful(comb, st.need, rpb, engine.cost)
+                fo_plans[id(st)] = np.asarray(sel, dtype=np.int64)
+        chosen_np = np.full((qb,), -1, np.int8)
+        wave_blocks: list[np.ndarray] = []
+        for st in active:
+            i = idx_of[id(st)]
+            a = algo_of[i]
+            if a == "forward_optimal":
+                plan = fo_plans[id(st)]
+                st.used_algo = a
+            elif a == "threshold":
+                plan = np.flatnonzero(th_mask[i]).astype(np.int64)
+                chosen_np[i] = 0
+                st.used_algo = a
+            elif a == "two_prong":
+                plan = np.arange(int(tps[i]), int(tpe[i]), dtype=np.int64)
+                chosen_np[i] = 1
+                st.used_algo = a
+            else:  # auto — §7.2: cost both on host (the cost model is f64 host code)
+                bt = np.flatnonzero(th_mask[i]).astype(np.int64)
+                b2 = np.arange(int(tps[i]), int(tpe[i]), dtype=np.int64)
+                ct, c2 = engine.cost.io_time(bt), engine.cost.io_time(b2)
+                if ct <= c2:
+                    plan, chosen_np[i], st.used_algo = bt, 0, "threshold"
+                else:
+                    plan, chosen_np[i], st.used_algo = b2, 1, "two_prong"
+            blocks = np.setdiff1d(plan, st.exclude)
+            if blocks.size == 0:
+                st.done = True  # plan exhausted: nothing new to read
+            wave_blocks.append(blocks)
+        progressed, req = _execute_wave(
+            engine, cache, active, wave_blocks, touched, touched_set
+        )
+        requested_total += req
+        if not progressed:
+            break
+        waves += 1
+    return waves, requested_total, dstate.transfers
+
+
 def run_batch(
     engine: "NeedleTailEngine",
     queries: Sequence[BatchQuery | tuple],
     algo: str = "auto",
     planner=None,
+    plan_on_host: bool = True,
 ) -> BatchQueryResult:
     """Evaluate Q any-k queries with shared-fetch scheduling.
 
@@ -371,6 +725,14 @@ def run_batch(
     exact).  Most callers go through
     :meth:`NeedleTailEngine.any_k_batch` / :meth:`DistributedAnyK.any_k_batch`
     rather than passing ``planner`` directly.
+
+    ``plan_on_host=False`` selects the device-resident pipeline
+    (:func:`_device_plan_loop`): the plan state stays on device across refill
+    rounds and exactly one device→host transfer per round ships the packed
+    plans (``BatchQueryResult.device_transfers`` counts them).  The default
+    ``True`` keeps the host-mirror loop — the byte-identity oracle, and the
+    only path that feeds the :class:`~repro.core.block_cache.PlanOrderCache`
+    memo.
     """
     from repro.core.engine import QueryResult
 
@@ -386,58 +748,19 @@ def run_batch(
     prev_log, cache.fetch_log = cache.fetch_log, missed
     requested_total = 0
     waves = 0
+    device_transfers = 0
 
     try:
-        while waves < engine.max_refills:
-            active = [st for st in states if not st.done]
-            if not active:
-                break
-            # per-query algo override: plan each algo group in its own wave call
-            by_algo: dict[str, list[_QueryState]] = {}
-            for st in active:
-                by_algo.setdefault(st.query.algo or algo, []).append(st)
-            plan_of: dict[int, np.ndarray] = {}
-            for a, group in by_algo.items():
-                for st, plan in zip(group, _plan_wave(engine, group, a, planner)):
-                    plan_of[id(st)] = plan
-            plans = [plan_of[id(st)] for st in active]
-            # per-query §4.1 post-plan steps: drop already-fetched blocks,
-            # ascending fetch order (setdiff1d returns sorted ids)
-            wave_blocks: list[np.ndarray] = []
-            for st, plan in zip(active, plans):
-                blocks = np.setdiff1d(plan, st.exclude)
-                if blocks.size == 0:
-                    st.done = True  # plan exhausted: nothing new to read
-                wave_blocks.append(blocks)
-            union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
-            if union.size:
-                for b in union:
-                    if int(b) not in touched_set:
-                        touched_set.add(int(b))
-                        touched.append(int(b))
-                cache.ensure(engine.store, union)
-            progressed = False
-            for st, blocks in zip(active, wave_blocks):
-                if blocks.size == 0:
-                    continue
-                progressed = True
-                bd, bm, bv = cache.get_many(engine.store, blocks)
-                mask = np.asarray(engine._mask(bd, st.query.predicates, st.query.op) & bv)
-                bi, ri = np.nonzero(mask)
-                st.rec_blocks.append(blocks[bi])
-                st.rec_rows.append(ri)
-                st.meas.append(np.asarray(bm)[bi, ri])
-                st.planned.append(blocks)
-                requested_total += int(blocks.size)
-                st.got += int(bi.size)
-                st.exclude = np.concatenate([st.exclude, blocks])
-                st.need = st.query.k - st.got
-                st.rounds += 1
-                if st.got >= st.query.k:
-                    st.done = True
-            if not progressed:
-                break
-            waves += 1
+        if engine.store.num_blocks == 0 or not any(not st.done for st in states):
+            pass  # λ=0 store or an all-satisfied wave: nothing to plan or fetch
+        elif plan_on_host:
+            waves, requested_total = _host_plan_loop(
+                engine, states, algo, planner, cache, touched, touched_set
+            )
+        else:
+            waves, requested_total, device_transfers = _device_plan_loop(
+                engine, states, algo, planner, cache, touched, touched_set
+            )
     finally:
         cache.fetch_log = prev_log
 
@@ -476,4 +799,5 @@ def run_batch(
         store_blocks_fetched=int(cache.stats.store_blocks_fetched - store0),
         modeled_store_io_s=sum(engine.cost.io_time(m) for m in missed),
         cache_hits=int(cache.stats.hits - hits0),
+        device_transfers=device_transfers,
     )

@@ -540,6 +540,54 @@ def _next_pow2(n: int) -> int:
     return b
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_device_round_fn(
+    mesh: Mesh, axis, records_per_block: int, lam: int, num_shards: int, group: int
+):
+    """Jitted mesh-native round body for the device-resident wave pipeline.
+
+    The sharded analogue of ``repro.core.multi_query._local_round_fn``: one
+    round = replay last round's host choices onto the device exclusion mask,
+    plan the whole wave with ONE ``shard_map`` collective per planner, and
+    feed the collective outputs *directly* into the device block-cut — the
+    THRESHOLD prefixes are scattered into the ``[Q, λ]`` plan mask on device,
+    never re-materialized as host id lists between plan and cut.  The
+    frontier is the full local sort (``C = λ/P``), exact by construction, so
+    no sufficiency check (and no extra device→host transfer) is needed.
+    """
+    from repro.kernels.plan_wave import apply_chosen, pack_plan
+
+    pad = (-lam) % num_shards
+    lam_p = lam + pad
+    lam_local = lam_p // num_shards
+    th_fn = _threshold_wave_fn(mesh, axis, records_per_block, lam_local)
+    tp_fn = _two_prong_wave_fn(mesh, axis, records_per_block, group)
+
+    def round_fn(combined0, excl, th_prev, tp_prev, chosen_prev, needs):
+        excl = apply_chosen(excl, th_prev, tp_prev, chosen_prev)
+        masked = jnp.where(excl, jnp.float32(0.0), combined0)
+        wave = jnp.pad(masked, ((0, 0), (0, pad)))  # λ to a shard multiple
+        ids, n_sel, _exp, _ok = th_fn(wave, needs)
+        # device cut: scatter the selected prefix (ids are -1 past n_sel;
+        # scatter-add cannot collide because selected ids are unique per row)
+        qa = combined0.shape[0]
+        pos = jnp.arange(ids.shape[1], dtype=jnp.int32)
+        selv = (pos[None, :] < n_sel[:, None]) & (ids >= 0)
+        hits = (
+            jnp.zeros((qa, lam_p), jnp.int32)
+            .at[jnp.arange(qa)[:, None], jnp.maximum(ids, 0)]
+            .add(selv.astype(jnp.int32))
+        )
+        th_mask = (hits > 0)[:, :lam]
+        s, e, _ = tp_fn(wave, needs)
+        s = s.astype(jnp.int32)
+        e = jnp.minimum(e, lam).astype(jnp.int32)  # λ-padding never planned
+        packed = pack_plan(th_mask, n_sel, s, e)
+        return packed, excl, th_mask, jnp.stack([s, e], axis=1)
+
+    return jax.jit(round_fn)
+
+
 class DistributedAnyK:
     """Production wrapper over the SPMD planners.
 
@@ -752,6 +800,31 @@ class DistributedAnyK:
             (int(starts[q]), min(int(ends[q]), lam)) for q in range(qa)
         ]
 
+    def device_round_fn(self, lam: int, records_per_block: int | None = None):
+        """Memoized jitted round body for the device-resident pipeline.
+
+        Used by ``repro.core.multi_query._device_plan_loop`` when this
+        planner is attached: each refill round's combine-masked wave is
+        planned by ONE ``shard_map`` collective (full-local-sort THRESHOLD —
+        exact, no frontier refill — plus the wave TWO-PRONG) whose outputs
+        feed the device block-cut directly; the round returns the packed
+        single-transfer plan matrix.  Byte-identity with the host oracle
+        holds for ``two_prong_group == 1`` (the serving default; larger
+        groups give group-aligned approximate windows, exactly as on the
+        host-mirror sharded path).
+
+        Parameters
+        ----------
+        lam : int
+            True (unpadded) block count λ of the store being planned.
+        records_per_block : int | None
+            Block capacity; defaults to this planner's ``rpb``.
+        """
+        return _sharded_device_round_fn(
+            self.mesh, self.axis, records_per_block or self.rpb, lam,
+            self.num_shards, self.two_prong_group,
+        )
+
     def bisect_stats_wave(
         self, combined: np.ndarray, needs: np.ndarray, **kw
     ) -> ShardedBisectWave:
@@ -765,7 +838,7 @@ class DistributedAnyK:
             wave, needs, self.rpb, self.mesh, self.axis, **kw
         )
 
-    def any_k_batch(self, engine, queries, algo: str = "auto"):
+    def any_k_batch(self, engine, queries, algo: str = "auto", device: bool = False):
         """Evaluate Q any-k queries with sharded batched planning.
 
         The mesh-native form of
@@ -787,6 +860,11 @@ class DistributedAnyK:
             ``"threshold"`` / ``"two_prong"`` / ``"auto"`` run sharded;
             ``"forward_optimal"`` is inherently sequential and falls back to
             the host planner.
+        device : bool
+            ``True`` runs the device-resident pipeline: the wave state stays
+            on device across refill rounds and each round's collective feeds
+            the device block-cut directly (:meth:`device_round_fn`), with ONE
+            packed device→host transfer per round.
 
         Returns
         -------
@@ -794,4 +872,6 @@ class DistributedAnyK:
         """
         from repro.core.multi_query import run_batch
 
-        return run_batch(engine, queries, algo=algo, planner=self)
+        return run_batch(
+            engine, queries, algo=algo, planner=self, plan_on_host=not device
+        )

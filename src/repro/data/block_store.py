@@ -101,6 +101,42 @@ class BlockStore:
         ids = np.asarray(block_ids, dtype=np.int64)
         return self._dims_np[ids], self._meas_np[ids], self._valid_np[ids]
 
+    def fetch_device(
+        self, block_ids, interpret: bool | None = None
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Device-resident union fetch: gather a wave's deduplicated block
+        union from the device-resident ``[λ, R, ·]`` slabs in one launch per
+        tensor via the :func:`repro.kernels.plan_wave.block_gather` Pallas
+        kernel (scalar-prefetched ids drive the gather ``index_map``).
+
+        The device-side counterpart of :meth:`fetch` for consumers that keep
+        the slabs on device (e.g. exemplar measures feeding an LM): no host
+        mirror is materialized, so it adds zero device→host transfers to the
+        wave pipeline.  Values are byte-identical to :meth:`fetch`.
+
+        Parameters
+        ----------
+        block_ids : array-like
+            Deduplicated block ids (``[U]``).
+        interpret : bool | None
+            Force Pallas interpret mode; ``None`` auto-selects (interpret
+            everywhere but TPU, matching ``repro.kernels.ops``).
+        """
+        from repro.kernels.plan_wave import block_gather
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        # jnp.asarray alone: lists/numpy upload, device-resident ids stay on
+        # device (np.asarray here would force a device→host round-trip and
+        # trip the transfer-guard probe)
+        ids = jnp.asarray(block_ids, jnp.int32)
+        return (
+            block_gather(self.dims, ids, interpret=interpret),
+            block_gather(self.measures, ids, interpret=interpret),
+            block_gather(self.valid_rows.astype(jnp.int8), ids, interpret=interpret)
+            != 0,
+        )
+
     def predicate_mask(
         self, block_dims, predicates: Sequence[tuple[int, int]], op: str = AND
     ):

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import density_combine as _dc
 from repro.kernels import flash_attention as _fa
+from repro.kernels import plan_wave as _pw
 from repro.kernels import ssd_chunk as _ssd
 from repro.kernels import theta_stats as _ts
 from repro.kernels import window_scan as _ws
@@ -87,6 +88,34 @@ def threshold_bisect(
         new_hi = jnp.where(any_ok, jnp.minimum(ths[jnp.minimum(idx + 1, fanout - 1)], hi), ths[0])
         lo, hi = new_lo, jnp.where(idx == fanout - 1, hi, new_hi)
     return lo
+
+
+@functools.partial(
+    jax.jit, static_argnames=("records_per_block", "op", "use_kernel")
+)
+def plan_wave(
+    densities: jax.Array,
+    row_matrix: jax.Array,
+    excl: jax.Array,
+    needs: jax.Array,
+    records_per_block: int,
+    op: str = "and",
+    use_kernel: bool = True,
+):
+    """Fused device wave planner: combine → θ-stats → sort → cut in one
+    program (``repro.kernels.plan_wave``).  ``use_kernel`` routes the combine
+    and θ-stats through their Pallas kernels (interpret on CPU)."""
+    return _pw.plan_wave(
+        densities, row_matrix, excl, needs, records_per_block, op=op,
+        use_kernel=use_kernel, interpret=_interpret(),
+    )
+
+
+@jax.jit
+def block_gather(slab: jax.Array, block_ids: jax.Array) -> jax.Array:
+    """One-launch union gather: ``slab[block_ids]`` via the scalar-prefetch
+    Pallas kernel (``repro.kernels.plan_wave.block_gather``)."""
+    return _pw.block_gather(slab, block_ids, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale"))

@@ -42,6 +42,66 @@ def theta_stats_batch_ref(combined: jax.Array, thetas: jax.Array):
     return counts, recsum
 
 
+def block_gather_ref(slab: jax.Array, block_ids: jax.Array) -> jax.Array:
+    """Union gather oracle: ``slab[block_ids]`` (any trailing shape)."""
+    return slab[block_ids]
+
+
+def plan_wave_ref(
+    densities: jax.Array,  # [rows, λ] f32
+    row_matrix: jax.Array,  # [Q, γ_max] int32, padded with -1
+    excl: jax.Array,  # [Q, λ] bool
+    needs: jax.Array,  # [Q] f32
+    records_per_block: int,
+    op: str = "and",
+):
+    """Pure-jnp oracle for :func:`repro.kernels.plan_wave.plan_wave`.
+
+    Composes the scalar oracles per query: ⊕-combine, THRESHOLD select
+    (:func:`repro.core.threshold.threshold_select` on the exclusion-masked
+    row) materialized as a selection mask, cut threshold θ with its masked
+    statistics, and the TWO-PRONG minimal window.  Returns
+    ``(th_mask [Q, λ] bool, n_sel [Q], theta [Q], theta_count [Q],
+    expected_records [Q], tp_start [Q], tp_end [Q])``.
+    """
+    from repro.core.threshold import threshold_select
+    from repro.core.two_prong import two_prong_select
+
+    combined = density_combine_batch_ref(densities, row_matrix, op)
+    masked = jnp.where(excl, jnp.float32(0.0), combined)
+    th_masks, n_sels, thetas, th_counts, exps, starts, ends = (
+        [], [], [], [], [], [], [])
+    lam = masked.shape[1]
+    for q in range(masked.shape[0]):
+        row, k = masked[q], needs[q]
+        r = threshold_select(row, k, records_per_block)
+        n = r.num_selected
+        sel = jnp.zeros((lam,), bool).at[
+            jnp.maximum(r.block_ids, 0)
+        ].max(jnp.arange(lam) < n)
+        theta = jnp.where(n > 0, row[r.block_ids[jnp.maximum(n - 1, 0)]], 0.0)
+        above = row >= theta
+        th_masks.append(sel)
+        n_sels.append(n)
+        thetas.append(theta)
+        th_counts.append(jnp.where(n > 0, jnp.sum(above).astype(jnp.float32), 0.0))
+        exps.append(
+            jnp.where(
+                n > 0,
+                jnp.sum(jnp.where(above, row, 0.0)) * records_per_block,
+                0.0,
+            )
+        )
+        w = two_prong_select(row, k, records_per_block)
+        starts.append(w.start)
+        ends.append(w.end)
+    stack = lambda xs: jnp.stack(xs)  # noqa: E731
+    return (
+        stack(th_masks), stack(n_sels), stack(thetas), stack(th_counts),
+        stack(exps), stack(starts), stack(ends),
+    )
+
+
 def attention_ref(
     q: jax.Array,  # [B, Hq, S, D]
     k: jax.Array,  # [B, Hkv, T, D]

@@ -24,6 +24,15 @@ configured (``exemplar_mesh=...``, or the any-k engine already has one
 attached), each wave's plan additionally runs as ONE ``shard_map`` collective
 over the λ-sharded density maps (:mod:`repro.core.sharded`) — the whole wave
 is planned by a single collective instead of per-shard host mirrors.
+
+With ``exemplar_device=True`` the wave runs the **device-resident pipeline**
+(:mod:`repro.core.multi_query` ``plan_on_host=False``): the plan state stays
+on device across refill rounds and :meth:`pump_exemplar_requests` consumes
+exactly ONE packed device→host transfer per round, while the wave's fetch
+set is filtered through real :class:`~repro.core.block_cache.BlockLRUCache`
+residency — a wave whose needs are covered by cache residency alone performs
+0 store reads and 0 store gathers (``last_wave_stats`` reports the per-wave
+transfer/residency accounting).
 """
 from __future__ import annotations
 
@@ -76,6 +85,7 @@ class ServeEngine:
         exemplar_policy: AdmissionPolicy | None = None,
         clock=time.monotonic,
         exemplar_mesh=None,
+        exemplar_device: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -88,6 +98,13 @@ class ServeEngine:
         # the any-k engine gets this mesh attached on first wave (one
         # shard_map collective per plan wave, repro.core.sharded)
         self.exemplar_mesh = exemplar_mesh
+        # when set, exemplar waves run the device-resident pipeline: plan
+        # state carried on device, ONE packed device→host transfer per
+        # refill round (repro.core.multi_query, plan_on_host=False)
+        self.exemplar_device = exemplar_device
+        # per-wave accounting of the most recent exemplar wave (transfer
+        # ledger + BlockLRUCache residency feed); see pump_exemplar_requests
+        self.last_wave_stats: dict | None = None
         self.queue: deque[Request] = deque()
         self.exemplar_queue: deque[ExemplarRequest] = deque()  # legacy intake
         self.exemplar_admission = AdmissionController(
@@ -188,13 +205,29 @@ class ServeEngine:
         if mesh is not None and getattr(engine, "distributed", None) is None:
             engine.attach_mesh(mesh)
         try:
+            # only pass device= when set: engine shims in tests (and older
+            # engines) may not accept the kwarg on the default host path
+            kwargs = {"device": True} if getattr(self, "exemplar_device", False) else {}
             batch = engine.any_k_batch(
-                [BatchQuery(r.predicates, r.k, r.op) for r in wave], algo="auto"
+                [BatchQuery(r.predicates, r.k, r.op) for r in wave],
+                algo="auto",
+                **kwargs,
             )
         except Exception:
             # put the wave back so no admitted request is silently lost
             self._exemplar_admission().requeue_front(wave)
             raise
+        # the wave's fetch set was filtered through real BlockLRUCache
+        # residency (cache.ensure reads only non-resident blocks); surface
+        # that plus the device-transfer ledger for the serving loop
+        self.last_wave_stats = {
+            "wave_size": len(wave),
+            "rounds": batch.rounds,
+            "device_transfers": batch.device_transfers,
+            "store_blocks_fetched": batch.store_blocks_fetched,
+            "cache_hits": batch.cache_hits,
+            "unique_blocks": int(batch.unique_blocks_fetched.size),
+        }
         for req, res in zip(wave, batch.results):
             req.result = res
             req.done = True
@@ -205,7 +238,15 @@ class ServeEngine:
         each through one batched any-k call.  Under-filled waves whose SLO
         still has slack keep accumulating — call again later (or use
         ``exemplar_admission.next_deadline()`` to schedule the next tick).
-        Returns the requests completed by this tick."""
+
+        With ``exemplar_device=True`` each launched wave runs the
+        device-resident pipeline: this tick consumes exactly one packed
+        device→host transfer per refill round, and the wave's fetch set is
+        fed through real block-LRU residency — a fully cache-resident wave
+        completes with 0 store reads and 0 store gathers.
+        ``self.last_wave_stats`` carries the most recent wave's
+        transfer/residency ledger.  Returns the requests completed by this
+        tick."""
         adm = self._exemplar_admission()
         done: list[ExemplarRequest] = []
         while True:

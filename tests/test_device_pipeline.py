@@ -1,0 +1,354 @@
+"""Device-resident wave pipeline: byte-identity against the host-mirror
+oracle (``plan_on_host=True``), degenerate waves, and the one-transfer-per-
+round contract.
+
+The transfer-count regression test is the tier-1 tripwire for the hot loop:
+if the device pipeline regresses to per-query (or per-plan-step) device→host
+transfers, ``BatchQueryResult.device_transfers`` exceeds ``rounds + 1`` and
+the suite fails.  The ``jax.transfer_guard``-based probe from
+``benchmarks.common`` is armed around the warm waves as well (vacuous on the
+CPU backend, load-bearing on accelerators — see the probe's docstring).
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery, _pad_cache_stats
+from repro.data.block_store import Table, build_block_store
+from repro.data.synthetic import make_clustered_table
+
+pytestmark = pytest.mark.device
+
+ALGOS = ("threshold", "two_prong", "auto")
+
+
+def _assert_query_equal(dev_r, ref_r):
+    np.testing.assert_array_equal(dev_r.record_block, ref_r.record_block)
+    np.testing.assert_array_equal(dev_r.record_row, ref_r.record_row)
+    np.testing.assert_array_equal(dev_r.measures, ref_r.measures)
+    np.testing.assert_array_equal(
+        np.sort(dev_r.blocks_fetched), np.sort(ref_r.blocks_fetched)
+    )
+    assert dev_r.plan_rounds == ref_r.plan_rounds
+    assert dev_r.algo == ref_r.algo
+
+
+def _check_device_vs_host(store, queries, algos=ALGOS):
+    """device=True vs the plan_on_host oracle vs sequential any_k."""
+    for algo in algos:
+        host = NeedleTailEngine(store).any_k_batch(queries, algo=algo)
+        dev = NeedleTailEngine(store).any_k_batch(queries, algo=algo, device=True)
+        assert host.device_transfers == 0
+        assert max(dev.rounds, 1) <= dev.device_transfers <= dev.rounds + 1
+        for q, (hr, dr) in enumerate(zip(host.results, dev.results)):
+            _assert_query_equal(dr, hr)
+        seq_eng = NeedleTailEngine(store, cache_bytes=0)
+        q0 = queries[0]
+        _assert_query_equal(
+            dev.results[0],
+            seq_eng.any_k(q0.predicates, q0.k, op=q0.op, algo=algo),
+        )
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+    return build_block_store(t, records_per_block=100)
+
+
+def test_device_byte_identical_clustered(clustered):
+    """Acceptance: clustered layout, AND and OR templates, all planners."""
+    _check_device_vs_host(clustered, [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+        BatchQuery([(2, 0)], 10),
+    ])
+
+
+def test_device_byte_identical_uniform():
+    """Acceptance: uniform layout (TWO-PRONG's adversarial case)."""
+    rng = np.random.default_rng(7)
+    t = Table(
+        dims=rng.integers(0, 3, (15_000, 3)).astype(np.int32),
+        measures=rng.normal(size=(15_000, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3]),
+    )
+    _check_device_vs_host(build_block_store(t, records_per_block=64), [
+        BatchQuery([(0, 0)], 40),
+        BatchQuery([(1, 0), (2, 2)], 80),
+        BatchQuery([(0, 0), (1, 1)], 500, op="or"),
+    ])
+
+
+def test_device_byte_identical_skewed():
+    """Acceptance: density piled at one end — refill trajectories must match."""
+    rng = np.random.default_rng(3)
+    n = 8_000
+    a0 = np.zeros(n, np.int32)
+    a0[:500] = 1
+    a1 = rng.integers(0, 2, n).astype(np.int32)
+    t = Table(
+        dims=np.stack([a0, a1], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    _check_device_vs_host(build_block_store(t, records_per_block=50), [
+        BatchQuery([(0, 1)], 400),
+        BatchQuery([(0, 1), (1, 1)], 200),
+        BatchQuery([(0, 1), (1, 0)], 100, op="or"),
+    ])
+
+
+def _underdelivery_store():
+    """Estimates 25x overconfident on 30 decoy blocks; true matches hidden in
+    10 low-estimate blocks — forces multi-round refills (same construction as
+    tests/test_multi_query.py)."""
+    rng = np.random.default_rng(0)
+    rpb = 100
+    n = 40 * rpb
+    a0 = np.zeros(n, np.int32)
+    a1 = np.zeros(n, np.int32)
+    for b in range(30):
+        lo = b * rpb
+        a0[lo : lo + rpb : 2] = 1
+        a1[lo + 1 : lo + rpb : 2] = 1
+    for b in range(30, 40):
+        lo = b * rpb
+        a0[lo : lo + 30] = 1
+        a1[lo : lo + 30] = 1
+    t = Table(
+        dims=np.stack([a0, a1], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    return build_block_store(t, records_per_block=rpb)
+
+
+def test_transfer_ledger_one_per_round_across_refills():
+    """THE hot-loop regression tripwire: a multi-round refill wave must ship
+    exactly one packed device→host transfer per planning round — Q=3 queries
+    over 3+ refill rounds would mean 9+ transfers on a per-query regression."""
+    store = _underdelivery_store()
+    eng = NeedleTailEngine(store)
+    queries = [
+        BatchQuery([(0, 1), (1, 1)], 250),  # under-delivers -> refills
+        BatchQuery([(0, 1)], 100),
+        BatchQuery([(1, 1)], 100),
+    ]
+    dev = eng.any_k_batch(queries, algo="threshold", device=True)
+    assert dev.rounds > 1  # it really did refill
+    assert dev.results[0].plan_rounds > 1
+    assert max(dev.rounds, 1) <= dev.device_transfers <= dev.rounds + 1, (
+        f"per-round transfer regression: {dev.device_transfers} transfers "
+        f"for {dev.rounds} rounds"
+    )
+    host = NeedleTailEngine(store).any_k_batch(queries, algo="threshold")
+    for hr, dr in zip(host.results, dev.results):
+        _assert_query_equal(dr, hr)
+
+
+def test_warm_wave_zero_store_reads_zero_gathers_under_guard(clustered):
+    """Degenerate wave: every query's need satisfied by cache residency
+    alone — 0 store reads AND 0 store gather calls — while the whole warm
+    wave runs under the jax.transfer_guard disallow probe."""
+    from benchmarks.common import (
+        assert_single_transfer_rounds, forbid_device_to_host_transfers,
+    )
+
+    eng = NeedleTailEngine(clustered)
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 300),
+        BatchQuery([(0, 1)], 50),
+        BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+    ]
+    cold = eng.any_k_batch(queries, algo="auto", device=True)
+    assert cold.store_blocks_fetched == cold.unique_blocks_fetched.size > 0
+    calls0 = eng.block_cache.stats.store_fetch_calls
+    with forbid_device_to_host_transfers():
+        warm = eng.any_k_batch(queries, algo="auto", device=True)
+    assert warm.store_blocks_fetched == 0  # 0 store reads
+    assert eng.block_cache.stats.store_fetch_calls == calls0  # 0 gathers
+    assert_single_transfer_rounds(warm)
+    for c, w in zip(cold.results, warm.results):
+        _assert_query_equal(w, c)
+
+
+def test_degenerate_q1_wave(clustered):
+    """Q=1: the wave machinery must degrade to the single-query trajectory."""
+    _check_device_vs_host(clustered, [BatchQuery([(0, 1)], 60)])
+
+
+def test_degenerate_lambda_zero_store():
+    """λ=0 (empty store): both paths terminate with empty results instead of
+    tripping the planners' argmax-on-empty edge."""
+    t = Table(
+        dims=np.zeros((0, 2), np.int32),
+        measures=np.zeros((0, 1), np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    store = build_block_store(t, records_per_block=16)
+    assert store.num_blocks == 0
+    queries = [BatchQuery([(0, 1)], 5), BatchQuery([(1, 0)], 3)]
+    for device in (False, True):
+        batch = NeedleTailEngine(store).any_k_batch(queries, device=device)
+        assert batch.rounds == 0 and batch.unique_blocks_fetched.size == 0
+        assert all(r.num_records == 0 for r in batch.results)
+    assert batch.device_transfers == 0  # nothing planned, nothing shipped
+
+
+def test_degenerate_all_blocks_excluded(clustered):
+    """k beyond the total valid count: plans run dry once every nonzero
+    block is excluded; the device loop must terminate identically."""
+    eng = NeedleTailEngine(clustered)
+    preds = [(0, 1), (1, 1), (2, 1), (3, 1)]
+    host = eng.any_k_batch([BatchQuery(preds, 10_000_000)], algo="threshold")
+    dev = NeedleTailEngine(clustered).any_k_batch(
+        [BatchQuery(preds, 10_000_000)], algo="threshold", device=True
+    )
+    _assert_query_equal(dev.results[0], host.results[0])
+    assert dev.results[0].num_records < 10_000_000  # really exhausted
+
+
+def test_forward_optimal_rides_device_wave(clustered):
+    """forward_optimal is host-planned (sequential cost DP) but must ride the
+    device wave without disturbing the device-planned members."""
+    queries = [
+        BatchQuery([(0, 1), (2, 1)], 120, algo="forward_optimal"),
+        BatchQuery([(0, 1)], 50),  # inherits the batch-level algo
+        BatchQuery([(1, 1)], 80, algo="two_prong"),
+    ]
+    host = NeedleTailEngine(clustered).any_k_batch(queries, algo="threshold")
+    dev = NeedleTailEngine(clustered).any_k_batch(
+        queries, algo="threshold", device=True
+    )
+    assert dev.results[0].algo == "forward_optimal"
+    assert dev.results[1].algo == "threshold"
+    assert dev.results[2].algo == "two_prong"
+    for hr, dr in zip(host.results, dev.results):
+        _assert_query_equal(dr, hr)
+
+
+def test_device_path_leaves_plan_memo_untouched(clustered):
+    """Plan-order memo contract: device rounds never read or write the
+    PlanOrderCache (their plans live on device — no row bytes to key on), so
+    they can neither consume nor poison the host oracle's memo."""
+    eng = NeedleTailEngine(clustered)
+    queries = [BatchQuery([(0, 1), (2, 1)], 300), BatchQuery([(0, 1)], 50)]
+    eng.any_k_batch(queries, algo="auto", device=True)
+    pc = eng.plan_cache.stats
+    assert pc.threshold_hits + pc.threshold_misses == 0
+    assert pc.two_prong_hits + pc.two_prong_misses == 0
+    # and the host path afterwards populates + reuses the memo as before
+    eng.any_k_batch(queries, algo="auto")
+    misses = eng.plan_cache.stats.threshold_misses
+    assert misses > 0
+    eng.any_k_batch(queries, algo="auto")
+    assert eng.plan_cache.stats.threshold_hits > 0
+    assert eng.plan_cache.stats.threshold_misses == misses
+
+
+def test_pad_rows_device_buffer_cache(clustered):
+    """Bugfix regression: the host planner's padded row uploads are memoized
+    on the row-set fingerprint — a repeated wave on a fresh engine (cold plan
+    memo, identical rows) must hit the pad cache instead of re-uploading."""
+    queries = [BatchQuery([(0, 1), (2, 1)], 300), BatchQuery([(3, 1)], 40)]
+    NeedleTailEngine(clustered).any_k_batch(queries, algo="auto")
+    h0, m0 = _pad_cache_stats["hits"], _pad_cache_stats["misses"]
+    NeedleTailEngine(clustered).any_k_batch(queries, algo="auto")
+    assert _pad_cache_stats["hits"] > h0  # identical row sets reused
+    assert _pad_cache_stats["misses"] == m0  # nothing re-padded/re-uploaded
+
+
+def test_serving_exemplar_device_wave(clustered):
+    """ServeEngine(exemplar_device=True): the wave consumes the single
+    per-round transfer and reports the residency-fed fetch accounting; a
+    cache-resident repeat wave does 0 store reads and 0 store gathers."""
+    import collections
+    import itertools
+
+    from repro.serving.engine import ServeEngine
+
+    eng = NeedleTailEngine(clustered)
+    serve = ServeEngine.__new__(ServeEngine)  # no LM needed for exemplar path
+    serve.max_slots = 4
+    serve.exemplar_queue = collections.deque()
+    serve._rid = itertools.count()
+    serve.exemplar_device = True
+    for _ in range(4):
+        serve.submit_exemplar_request([(0, 1), (2, 1)], 50)
+    done = serve.drain_exemplar_requests(eng)
+    assert len(done) == 4 and all(r.done for r in done)
+    stats = serve.last_wave_stats
+    assert stats["device_transfers"] <= stats["rounds"] + 1
+    ref = NeedleTailEngine(clustered).any_k([(0, 1), (2, 1)], 50, algo="auto")
+    for r in done:
+        _assert_query_equal(r.result, ref)
+    # repeat wave: served from residency alone
+    calls0 = eng.block_cache.stats.store_fetch_calls
+    for _ in range(4):
+        serve.submit_exemplar_request([(0, 1), (2, 1)], 50)
+    serve.drain_exemplar_requests(eng)
+    assert serve.last_wave_stats["store_blocks_fetched"] == 0
+    assert eng.block_cache.stats.store_fetch_calls == calls0
+
+
+def test_sharded_device_round_feeds_device_cut():
+    """Mesh path: the sharded collective's outputs feed the device block-cut
+    directly (no host mirrors between plan and cut) and per-query results
+    stay byte-identical to the host oracle.  Runs in a subprocess so the
+    main pytest process keeps exactly 1 CPU device."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.data.block_store import build_block_store
+from repro.data.synthetic import make_clustered_table
+
+mesh = jax.make_mesh((8,), ("data",))
+t = make_clustered_table(num_records=16_000, num_dims=4, density=0.15, seed=2)
+store = build_block_store(t, records_per_block=100)
+queries = [
+    BatchQuery([(0, 1), (2, 1)], 300),
+    BatchQuery([(0, 1)], 50),
+    BatchQuery([(1, 1), (3, 1)], 200, op="or"),
+]
+out = {}
+for algo in ("threshold", "two_prong", "auto"):
+    host = NeedleTailEngine(store).any_k_batch(queries, algo=algo)
+    eng = NeedleTailEngine(store)
+    eng.attach_mesh(mesh)
+    dev = eng.any_k_batch(queries, algo=algo, device=True)
+    out[algo] = {
+        "same": all(
+            np.array_equal(h.record_block, d.record_block)
+            and np.array_equal(h.record_row, d.record_row)
+            and np.array_equal(h.measures, d.measures)
+            and h.plan_rounds == d.plan_rounds and h.algo == d.algo
+            for h, d in zip(host.results, dev.results)
+        ),
+        "rounds": int(dev.rounds),
+        "transfers": int(dev.device_transfers),
+    }
+print(json.dumps(out))
+"""
+    import json
+
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo", timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for algo, r in res.items():
+        assert r["same"], (algo, r)
+        assert max(r["rounds"], 1) <= r["transfers"] <= r["rounds"] + 1, (algo, r)
