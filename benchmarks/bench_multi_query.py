@@ -32,6 +32,15 @@ wave re-reads the same dense blocks.  Sections:
       ledger and policed by a ``jax.transfer_guard`` disallow probe
       (:mod:`benchmarks.common`) — the device CI guard (driver key
       ``device``).
+  tiered sweep (``--tiered``) — the Q=64 wave on the tiered block-storage
+      subsystem (:mod:`repro.storage`: HBM device buffers → host DRAM →
+      backing store, cost-model-arbitrated placement), with the tier-0
+      budget deliberately smaller than the working set.  Asserts
+      byte-identity to the flat-cache oracle on BOTH the host and device
+      plan paths, that the warm wave is served entirely from tiers 0-1
+      (**0 backing-store reads**), and that capacity pressure **demotes**
+      hot blocks down the stack instead of dropping them (0 stack
+      evictions) — the tiered CI guard (driver key ``tiered``).
 
 ``--smoke`` runs a reduced workload (<60 s) that still executes every
 selected section and hard-fails on cache-stat regressions — the CI hook.
@@ -281,6 +290,104 @@ def device_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
     return rows
 
 
+def tiered_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
+    """The Q=`q` wave on the tiered block-storage subsystem, tier-0 budget
+    smaller than the working set, cold then warm — host path then a device-
+    pipeline phase.
+
+    Asserts (the tiered CI hook, raises on any regression):
+
+    * every phase is byte-identical per query to the cache-less sequential
+      baseline (placement changes the medium, never the bytes);
+    * the warm waves read **0 blocks from the backing store** — the whole
+      working set is served from tiers 0-1;
+    * capacity pressure on tier 0 **demotes** blocks to the host tier
+      instead of dropping them (0 stack evictions, demotion counters
+      balance);
+    * the device-pipeline phase keeps the ≤1-transfer-per-round ledger.
+    """
+    from benchmarks.common import assert_single_transfer_rounds
+    from repro.storage import TierStack, make_tier_stack
+
+    queries = overlapping_queries(q, seed=100 + q)
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo) for bq in queries]
+
+    # size tier 0 at ~1/4 of the wave's working set so placement is under
+    # real pressure; the host DRAM tier is unbounded (demote, never drop)
+    ws_blocks = int(
+        NeedleTailEngine(store).any_k_batch(queries, algo=algo)
+        .unique_blocks_fetched.size
+    )
+    slab_nbytes = TierStack.block_nbytes(store)
+    stack = make_tier_stack(max(ws_blocks // 4, 2) * slab_nbytes, None)
+    eng = NeedleTailEngine(store, tiers=stack)
+    rows = []
+    for phase in ("cold", "warm", "warm2"):
+        t0 = time.perf_counter()
+        batch = eng.any_k_batch(queries, algo=algo)
+        ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        ts = batch.tier_stats
+        rows.append(dict(
+            phase=phase, Q=q, algo=algo, batch_ms=round(ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            hbm_hits=ts["hbm.hits"], dram_hits=ts["dram.hits"],
+            promotions=ts["hbm.promotions_in"],
+            demotions=ts["hbm.demotions_out"],
+            drops=stack.stats.evictions,
+            hbm_blocks=len(stack.tiers[0]), dram_blocks=len(stack.tiers[1]),
+        ))
+    if rows[1]["store_blocks"] != 0 or rows[2]["store_blocks"] != 0:
+        raise AssertionError(
+            f"tiered warm regression: repeat wave read "
+            f"{rows[1]['store_blocks']}/{rows[2]['store_blocks']} blocks from "
+            "the backing store (expected 0: served from tiers 0-1)"
+        )
+    tc = stack.tier_counters()
+    if ws_blocks > max(ws_blocks // 4, 2) and tc["hbm.demotions_out"] == 0:
+        raise AssertionError(
+            "tiered placement regression: tier-0 pressure produced no "
+            "demotions (working set exceeds the tier-0 budget)"
+        )
+    if stack.stats.evictions != 0:
+        raise AssertionError(
+            f"tiered placement regression: {stack.stats.evictions} blocks "
+            "DROPPED out of the stack (expected demotion to the host tier)"
+        )
+    if tc["dram.demotions_in"] != tc["hbm.demotions_out"]:
+        raise AssertionError("tiered ledger regression: demotion counters "
+                             "do not balance across tiers")
+
+    # device-pipeline phase on a fresh constrained stack: the tiered fetch
+    # path under DevicePlanState rounds, byte-identical, ≤1 transfer/round,
+    # and warm again served from the tiers
+    stack_d = make_tier_stack(max(ws_blocks // 4, 2) * slab_nbytes, None)
+    eng_d = NeedleTailEngine(store, tiers=stack_d)
+    for phase in ("dev_cold", "dev_warm"):
+        t0 = time.perf_counter()
+        batch = eng_d.any_k_batch(queries, algo=algo, device=True)
+        ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        assert_single_transfer_rounds(batch)
+        ts = batch.tier_stats
+        rows.append(dict(
+            phase=phase, Q=q, algo=algo, batch_ms=round(ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            hbm_hits=ts["hbm.hits"], dram_hits=ts["dram.hits"],
+            promotions=ts["hbm.promotions_in"],
+            demotions=ts["hbm.demotions_out"],
+            drops=stack_d.stats.evictions,
+            hbm_blocks=len(stack_d.tiers[0]), dram_blocks=len(stack_d.tiers[1]),
+        ))
+    if rows[-1]["store_blocks"] != 0:
+        raise AssertionError(
+            "tiered device regression: warm device wave read "
+            f"{rows[-1]['store_blocks']} blocks from the backing store"
+        )
+    return rows
+
+
 class _SimClock:
     def __init__(self):
         self.t = 0.0
@@ -355,6 +462,12 @@ def main(argv=None):
                          "assert ≤1 device→host transfer per refill round on "
                          "the warm Q=64 wave (jax.transfer_guard probe + "
                          "pipeline transfer ledger)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="also run the tiered block-storage sweep "
+                         "(repro.storage TierStack, tier-0 budget < working "
+                         "set) and assert 0 warm backing-store reads, "
+                         "demote-not-drop placement, and flat-oracle "
+                         "byte-identity on host AND device plan paths")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
 
@@ -401,6 +514,20 @@ def main(argv=None):
               f"{drows[-1]['store_blocks']} store blocks, "
               f"{drows[-1]['transfers']} transfer(s) for "
               f"{drows[-1]['rounds']} round(s) (asserted ≤1 per round)")
+
+    if args.tiered:
+        print("\n# --- tiered block-storage sweep (HBM -> DRAM -> store) ---")
+        trows = tiered_sweep(store, algo=args.algo, q=64)
+        emit(trows, ["phase", "Q", "algo", "batch_ms", "store_blocks",
+                     "hbm_hits", "dram_hits", "promotions", "demotions",
+                     "drops", "hbm_blocks", "dram_blocks"])
+        host_warm = next(r for r in trows if r["phase"] == "warm2")
+        print(f"# tiered warm wave: {host_warm['store_blocks']} store reads "
+              f"(asserted 0), {host_warm['demotions']} tier-0 demotions, "
+              f"{host_warm['drops']} drops (asserted 0) — "
+              f"tier 0 holds {host_warm['hbm_blocks']} / "
+              f"{host_warm['hbm_blocks'] + host_warm['dram_blocks']} "
+              "resident blocks")
 
     if args.sharded:
         print("\n# --- sharded-planning sweep (one collective per plan wave) ---")

@@ -23,6 +23,8 @@ SECTIONS = {
     "multiq": ("Batched multi-query vs sequential any-k", "benchmarks.bench_multi_query"),
     "device": ("Device-resident wave pipeline: ≤1 transfer/round guard",
                "benchmarks.bench_multi_query", ["--device", "--smoke"]),
+    "tiered": ("Tiered block storage: 0 warm store reads / demote-not-drop guard",
+               "benchmarks.bench_multi_query", ["--tiered", "--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 

@@ -311,6 +311,25 @@ class PlanOrderCache:
         while len(od) > self.max_entries:
             od.popitem(last=False)
 
+    # ----------------------------------------------------------------- peeks
+    # Stat-free, LRU-order-free probes for residency-aware admission
+    # (repro.storage.residency): peeking at whether a wave COULD be planned
+    # from the memo must not distort the hit/miss counters or the eviction
+    # order that the real plan path maintains.
+    def peek_threshold(self, row_bytes: bytes):
+        """`get_threshold` without stats or LRU touch; ``None`` on miss."""
+        return self._threshold.get(row_bytes)
+
+    def peek_two_prong(self, row_bytes: bytes, need: float):
+        """`get_two_prong` without stats or LRU touch; ``None`` on miss."""
+        return self._two_prong.get((row_bytes, float(need)))
+
+    def peek_sharded_threshold(self, row_bytes: bytes, need: float):
+        """`get_sharded_threshold` without stats or LRU touch; ``None`` on
+        miss — lets the residency probe serve mesh-attached engines, whose
+        waves feed this memo instead of the host sorted-order one."""
+        return self._sharded_threshold.get((row_bytes, float(need)))
+
     # ---------------------------------------------------------------- lookup
     def get_threshold(self, row_bytes: bytes):
         hit = self._threshold.get(row_bytes)

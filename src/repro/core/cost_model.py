@@ -11,8 +11,18 @@ presets for the tiers the TPU framework actually sees:
 * ``hbm``  — HBM→VMEM on TPU v5e: 819 GB/s, ~1 µs DMA issue latency; a "seek" is
   re-issuing a DMA descriptor for a non-contiguous block, a "sequential" read rides
   the same streamed prefetch.
+* ``dram`` — host DRAM (the middle tier of the `repro.storage` hierarchy):
+  ~100 GB/s effective stream bandwidth, ~100 ns random-access latency.  Slower
+  than HBM, far faster than any backing store — the preset the host
+  ``BlockLRUCache`` tier prices itself with.
 * ``ici``  — cross-chip fetch over ICI at ~50 GB/s/link with ~3 µs per-message
   latency (fetching a remote shard's block, the distributed engine's tier).
+
+The presets form a strict cost ladder (asserted by the preset-consistency test
+in ``tests/test_tiering.py``): ``hbm < dram < ici < ssd < hdd`` on both
+``far_cost`` and modeled ``io_time`` of a scattered fetch — which is exactly
+the gradient the tiered block-storage placement policy
+(:mod:`repro.storage.policy`) arbitrates over.
 """
 from __future__ import annotations
 
@@ -162,6 +172,13 @@ def make_cost_model(kind: str, block_bytes: int = 256 * 1024) -> CostModel:
         xfer = block_bytes / 819e9
         t = 8
         return CostModel("hbm", xfer, t, xfer + 1e-6, _linear_curve(xfer, xfer + 1e-6, t), xfer + 1e-6)
+    if kind == "dram":
+        # host DDR: ~100 GB/s effective stream, ~100 ns random-access latency.
+        # The middle tier of the repro.storage hierarchy: an order of magnitude
+        # behind HBM on bandwidth, two orders ahead of ICI/SSD on latency.
+        xfer = block_bytes / 100e9
+        t = 8
+        return CostModel("dram", xfer, t, xfer + 1e-7, _linear_curve(xfer, xfer + 1e-7, t), xfer + 1e-7)
     if kind == "ici":
         # remote-shard fetch: ~50 GB/s/link, ~3us message latency
         xfer = block_bytes / 50e9

@@ -61,6 +61,8 @@ class NeedleTailEngine:
         max_refills: int = 8,
         cache_bytes: int | None = None,
         plan_cache_entries: int = 4096,
+        tiers=None,
+        residency_aware: bool = False,
     ):
         from repro.core.block_cache import BlockLRUCache, PlanOrderCache
 
@@ -72,7 +74,17 @@ class NeedleTailEngine:
         # shared by any_k / any_k_batch / the sharded fetch path, plus the
         # cross-batch per-(template, exclusion) plan-order memo.
         # cache_bytes: None = unbounded, 0 = disabled (reference path).
-        self.block_cache = BlockLRUCache(cache_bytes)
+        # tiers: a repro.storage.TierStack replaces the flat LRU — same
+        # drop-in surface, cost-model-arbitrated placement across HBM/host
+        # tiers (cache_bytes is then ignored; budgets live on the tiers).
+        self.block_cache = tiers if tiers is not None else BlockLRUCache(cache_bytes)
+        # residency_aware: the §7.2 auto arbitration prices candidate plans
+        # by EFFECTIVE tier cost (TierStack.effective_io_time) instead of the
+        # backing model alone — a tier-resident sparse plan can beat a cold
+        # dense one.  Opt-in: it legitimately changes the physical plan, so
+        # it is excluded from the tiered-vs-flat byte-identity contract
+        # (exactly like algo="threshold" vs "two_prong" differ).
+        self.residency_aware = bool(residency_aware)
         self.plan_cache = PlanOrderCache(plan_cache_entries)
         store.register_invalidation_listener(self.block_cache.invalidate)
         # set by attach_mesh: a repro.core.sharded.DistributedAnyK that plans
@@ -109,6 +121,20 @@ class NeedleTailEngine:
         return grown
 
     # ------------------------------------------------------------------ plans
+    def plan_cost(self, block_ids) -> float:
+        """Modeled I/O cost of a candidate plan (the §7.2 auto comparison).
+
+        With ``residency_aware`` set and a :class:`repro.storage.TierStack`
+        attached, blocks resident in a tier are priced by THAT tier's cost
+        model and only misses by the backing model
+        (:meth:`repro.storage.tiers.TierStack.effective_io_time`); otherwise
+        the backing model prices everything (the paper's behavior)."""
+        if getattr(self, "residency_aware", False):
+            eff = getattr(self.block_cache, "effective_io_time", None)
+            if eff is not None:
+                return eff(block_ids, backing=self.cost)
+        return self.cost.io_time(block_ids)
+
     def combined_density(self, predicates, op: str = AND) -> np.ndarray:
         from repro.core.predicates import Predicate
 
@@ -156,9 +182,10 @@ class NeedleTailEngine:
             sel, _ = forward_optimal_faithful(combined, k, rpb, self.cost)
             return np.asarray(sel, dtype=np.int64), algo
         if algo == "auto":
-            # §7.2 Discussion: plan with both, cost both, take the cheaper.
+            # §7.2 Discussion: plan with both, cost both, take the cheaper
+            # (effective tier cost when the engine is residency-aware).
             bt, b2 = plan_threshold(), plan_two_prong()
-            ct, c2 = self.cost.io_time(bt), self.cost.io_time(b2)
+            ct, c2 = self.plan_cost(bt), self.plan_cost(b2)
             return (bt, "threshold") if ct <= c2 else (b2, "two_prong")
         raise ValueError(f"unknown algo {algo!r}")
 

@@ -124,6 +124,11 @@ class BatchQueryResult:
     # plans come up empty and terminate the loop), 0 on the host-mirror path.
     # The CI guard asserts transfers <= rounds + 1.
     device_transfers: int = 0
+    # tiered storage only (engine.block_cache is a repro.storage.TierStack):
+    # this batch's per-tier placement deltas, keyed "<tier>.<counter>" (e.g.
+    # "hbm.hits", "dram.demotions_in") — the ledger benchmarks and tests
+    # assert placement behavior with.  None on a flat-LRU engine.
+    tier_stats: dict | None = None
 
     @property
     def num_queries(self) -> int:
@@ -430,11 +435,14 @@ def _plan_wave(
             st.used_algo = algo
         return plans
     if algo == "auto":
-        # §7.2: plan with both, cost both, take the cheaper — per query
+        # §7.2: plan with both, cost both, take the cheaper — per query.
+        # plan_cost prices by effective tier cost on a residency-aware tiered
+        # engine (getattr: tolerate engine shims built without __init__).
+        cost_fn = getattr(engine, "plan_cost", None) or engine.cost.io_time
         pt, p2 = threshold_plans(), two_prong_plans()
         plans = []
         for st, bt, b2 in zip(states, pt, p2):
-            ct, c2 = engine.cost.io_time(bt), engine.cost.io_time(b2)
+            ct, c2 = cost_fn(bt), cost_fn(b2)
             if ct <= c2:
                 plans.append(bt)
                 st.used_algo = "threshold"
@@ -682,7 +690,8 @@ def _device_plan_loop(
             else:  # auto — §7.2: cost both on host (the cost model is f64 host code)
                 bt = np.flatnonzero(th_mask[i]).astype(np.int64)
                 b2 = np.arange(int(tps[i]), int(tpe[i]), dtype=np.int64)
-                ct, c2 = engine.cost.io_time(bt), engine.cost.io_time(b2)
+                cost_fn = getattr(engine, "plan_cost", None) or engine.cost.io_time
+                ct, c2 = cost_fn(bt), cost_fn(b2)
                 if ct <= c2:
                     plan, chosen_np[i], st.used_algo = bt, 0, "threshold"
                 else:
@@ -742,6 +751,10 @@ def run_batch(
     cache = engine.block_cache
     hits0 = cache.stats.hits
     store0 = cache.stats.store_blocks_fetched
+    # tiered storage (repro.storage.TierStack): snapshot the per-tier
+    # placement counters so this batch's deltas ride out on the result
+    tier_fn = getattr(cache, "tier_counters", None)
+    tier0 = tier_fn() if tier_fn is not None else None
     touched: list[int] = []  # batch-touched unique block ids, first-touch order
     touched_set: set[int] = set()
     missed: list[np.ndarray] = []  # ids physically read from the store
@@ -800,4 +813,9 @@ def run_batch(
         modeled_store_io_s=sum(engine.cost.io_time(m) for m in missed),
         cache_hits=int(cache.stats.hits - hits0),
         device_transfers=device_transfers,
+        tier_stats=(
+            {k: v - tier0[k] for k, v in tier_fn().items()}
+            if tier0 is not None
+            else None
+        ),
     )

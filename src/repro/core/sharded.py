@@ -626,17 +626,31 @@ class DistributedAnyK:
     def __init__(self, mesh: Mesh, axis="data", records_per_block: int = 8192,
                  candidates: int = 16, max_refills: int = 4,
                  bisect_above: int = 512, block_cache=None,
-                 two_prong_group: int = 1):
+                 two_prong_group: int = 1, remote_cost=None):
+        from repro.core.cost_model import make_cost_model
+
         self.mesh = mesh
         self.axis = axis
         self.rpb = records_per_block
         self.candidates = candidates
         self.max_refills = max_refills
-        # optional engine-lifetime LRU (repro.core.block_cache.BlockLRUCache);
+        # optional engine-lifetime cache (a flat
+        # repro.core.block_cache.BlockLRUCache or a tiered
+        # repro.storage.TierStack — both expose the same get_many surface);
         # pass NeedleTailEngine.block_cache to share one cache across the
         # scalar, batched, and sharded fetch paths
         self.block_cache = block_cache
         self.two_prong_group = two_prong_group
+        # cost model pricing a NON-resident block of a sharded plan: fetching
+        # it means crossing the interconnect to the shard that owns it, so
+        # the `ici` preset is the default.  fetch_plan records the modeled
+        # cost of each fetch in `last_fetch_io_s` (residency-aware when a
+        # TierStack is attached: resident blocks are priced by their tier).
+        # `price_fetches=False` skips the diagnostic on latency-critical
+        # paths (the pricing walks the plan's residency before each fetch).
+        self.remote_cost = remote_cost or make_cost_model("ici")
+        self.price_fetches = True
+        self.last_fetch_io_s = 0.0
         sz = 1
         for a in (axis if isinstance(axis, tuple) else (axis,)):
             sz *= mesh.shape[a]
@@ -686,8 +700,24 @@ class DistributedAnyK:
         tuple
             ``(block_ids, dims, measures, valid)`` — slabs byte-identical to
             ``store.fetch(block_ids)`` (the LRU's byte-identity guarantee).
+
+        Notes
+        -----
+        ``last_fetch_io_s`` records this fetch's modeled I/O under the
+        ``ici`` remote-shard pricing (``remote_cost``): a non-resident block
+        crosses the interconnect.  With a :class:`repro.storage.TierStack`
+        attached the price is residency-aware — locally resident blocks are
+        priced by their tier's model, only true remote reads by ``ici``.
         """
         ids = self.plan_block_ids(plan)
+        if getattr(self, "price_fetches", True):
+            # priced BEFORE the fetch: residency must reflect what this
+            # fetch will actually cross the interconnect for
+            eff = getattr(self.block_cache, "effective_io_time", None)
+            if eff is not None:
+                self.last_fetch_io_s = eff(ids, backing=self.remote_cost)
+            else:
+                self.last_fetch_io_s = self.remote_cost.io_time(ids)
         if self.block_cache is not None:
             return (ids, *self.block_cache.get_many(store, ids))
         return (ids, *store.fetch(ids))

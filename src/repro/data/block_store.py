@@ -112,7 +112,12 @@ class BlockStore:
         The device-side counterpart of :meth:`fetch` for consumers that keep
         the slabs on device (e.g. exemplar measures feeding an LM): no host
         mirror is materialized, so it adds zero device→host transfers to the
-        wave pipeline.  Values are byte-identical to :meth:`fetch`.
+        wave pipeline.  Values are byte-identical to :meth:`fetch`.  This is
+        also the HBM tier's fill path in the tiered storage hierarchy: a
+        :class:`repro.storage.tiers.TierStack` with ``device_fill`` enabled
+        admits backing-store misses into its device tier through one union
+        gather here, and device consumers read that residency back without
+        any transfer via :meth:`repro.storage.tiers.TierStack.get_device`.
 
         Parameters
         ----------

@@ -60,6 +60,7 @@ class AdmissionStats:
     waves: int = 0
     full_waves: int = 0  # launched because the wave filled
     deadline_waves: int = 0  # launched because the oldest SLO came due
+    resident_waves: int = 0  # launched early: fully cache-resident (probe)
     flush_waves: int = 0  # launched by an explicit flush barrier
     max_wave_size: int = 0
     total_wait_s: float = 0.0
@@ -106,10 +107,18 @@ class AdmissionController:
         self,
         policy: AdmissionPolicy | None = None,
         clock: Callable[[], float] = time.monotonic,
+        residency_probe: Callable[[list], bool] | None = None,
     ):
         self.policy = policy or AdmissionPolicy()
         self.clock = clock
         self.stats = AdmissionStats()
+        # residency-aware early launch (repro.storage.residency): a stat-free
+        # peek answering "would this wave be served entirely from cache
+        # tiers?".  When it says yes, poll launches the wave before its SLO
+        # deadline — accumulating further buys no shared-fetch savings (the
+        # wave reads nothing from the store) and costs pure latency.  The
+        # probe must be side-effect-free; see `wave_is_resident`.
+        self.residency_probe = residency_probe
         self._pending: "deque[tuple[Any, float]]" = deque()  # (request, t_submit)
         self._last_pop: dict | None = None  # rollback record for requeue_front
 
@@ -201,10 +210,13 @@ class AdmissionController:
     def poll(self, now: float | None = None) -> list[Any] | None:
         """The opportunistic-launch decision (one wave per call).
 
-        A full wave launches immediately; otherwise a wave of everything
-        pending (≤ ``max_wave``) launches iff the oldest deadline has come
-        due and the batching floor ``min_wave`` is met (the floor yields to
-        the deadline only when overridden by ``flush``).
+        A full wave launches immediately; a wave meeting the batching floor
+        whose every pending request would be served entirely from cache
+        tiers launches early (``residency_probe``, zero I/O deferred by
+        waiting); otherwise a wave of everything pending (≤ ``max_wave``)
+        launches iff the oldest deadline has come due and the batching floor
+        ``min_wave`` is met (the floor yields to the deadline only when
+        overridden by ``flush``).
 
         Parameters
         ----------
@@ -229,6 +241,17 @@ class AdmissionController:
             and len(self._pending) >= p.min_wave
         ):
             return self._pop_wave(p.max_wave, now, "deadline_waves")
+        # residency peek LAST: a wave about to launch on deadline anyway
+        # should not pay the probe (one density combine per request until
+        # the first memo miss short-circuits)
+        if (
+            self.residency_probe is not None
+            and p.min_wave <= len(self._pending)
+            and self.residency_probe(
+                [r for r, _ in list(self._pending)[: p.max_wave]]
+            )
+        ):
+            return self._pop_wave(p.max_wave, now, "resident_waves")
         return None
 
     def drain_ready(self, now: float | None = None) -> list[list[Any]]:

@@ -86,6 +86,7 @@ class ServeEngine:
         clock=time.monotonic,
         exemplar_mesh=None,
         exemplar_device: bool = False,
+        exemplar_residency: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -102,6 +103,16 @@ class ServeEngine:
         # state carried on device, ONE packed device→host transfer per
         # refill round (repro.core.multi_query, plan_on_host=False)
         self.exemplar_device = exemplar_device
+        # when set, pump_exemplar_requests installs a residency probe on the
+        # admission controller (repro.storage.residency.wave_is_resident):
+        # a wave whose every query has a memoized plan over cache-resident
+        # blocks launches BEFORE its SLO deadline — it reads nothing from
+        # the backing store, so waiting buys no shared-fetch savings.
+        # Caveat: the probe peeks the host/sharded plan memos; device waves
+        # (exemplar_device=True) never write any memo, so with that combo
+        # residency launches never fire and waves use full/deadline policy
+        # (see repro.storage.residency's module docstring).
+        self.exemplar_residency = exemplar_residency
         # per-wave accounting of the most recent exemplar wave (transfer
         # ledger + BlockLRUCache residency feed); see pump_exemplar_requests
         self.last_wave_stats: dict | None = None
@@ -219,7 +230,12 @@ class ServeEngine:
             raise
         # the wave's fetch set was filtered through real BlockLRUCache
         # residency (cache.ensure reads only non-resident blocks); surface
-        # that plus the device-transfer ledger for the serving loop
+        # that plus the device-transfer ledger for the serving loop.
+        # "tiers" is the per-tier placement delta of THIS wave (hits /
+        # promotions / demotions / evictions per tier, flat-keyed
+        # "<tier>.<counter>") when the engine runs a repro.storage.TierStack,
+        # None on a flat LRU — benchmarks and tests assert placement
+        # behavior with it, not just totals.
         self.last_wave_stats = {
             "wave_size": len(wave),
             "rounds": batch.rounds,
@@ -227,6 +243,7 @@ class ServeEngine:
             "store_blocks_fetched": batch.store_blocks_fetched,
             "cache_hits": batch.cache_hits,
             "unique_blocks": int(batch.unique_blocks_fetched.size),
+            "tiers": batch.tier_stats,
         }
         for req, res in zip(wave, batch.results):
             req.result = res
@@ -244,10 +261,31 @@ class ServeEngine:
         device→host transfer per refill round, and the wave's fetch set is
         fed through real block-LRU residency — a fully cache-resident wave
         completes with 0 store reads and 0 store gathers.
+        With ``exemplar_residency=True`` the controller additionally
+        launches a wave *early* — before its SLO deadline — when every
+        pending request's plan is memoized over cache-resident blocks
+        (``repro.storage.residency.wave_is_resident``: the wave would read
+        nothing from the backing store, so accumulating buys nothing).
+
         ``self.last_wave_stats`` carries the most recent wave's
         transfer/residency ledger.  Returns the requests completed by this
         tick."""
         adm = self._exemplar_admission()
+        if getattr(self, "exemplar_residency", False):
+            # one probe per engine, kept across ticks: the probe memoizes
+            # template row bytes, and it must peek THIS engine's memo/tiers
+            cached = getattr(self, "_residency_probe", None)
+            if cached is None or cached[0] is not engine:
+                from repro.storage.residency import make_residency_probe
+
+                cached = (engine, make_residency_probe(engine))
+                self._residency_probe = cached
+            adm.residency_probe = cached[1]
+        elif getattr(self, "_residency_probe", None) is not None:
+            # flag flipped off: uninstall, so polls stop paying the peek and
+            # resident launches stop firing
+            self._residency_probe = None
+            adm.residency_probe = None
         done: list[ExemplarRequest] = []
         while True:
             # one wave at a time: if a wave's engine call fails, the waves

@@ -1,0 +1,29 @@
+"""Tiered block-storage subsystem: HBM → host DRAM → backing store.
+
+Public surface:
+
+* :class:`~repro.storage.tiers.TierStack` / :class:`~repro.storage.tiers.Tier`
+  — the byte-budgeted hierarchy, drop-in for ``NeedleTailEngine.block_cache``.
+* :func:`~repro.storage.tiers.make_tier_stack` — the canonical hbm/dram stack.
+* :class:`~repro.storage.policy.CostAwarePolicy` /
+  :class:`~repro.storage.policy.RecencyPolicy` — placement arbiters
+  (io_time saved per byte vs pure recency).
+* :func:`~repro.storage.residency.wave_is_resident` /
+  :func:`~repro.storage.residency.make_residency_probe` — the stat-free
+  residency peek behind admission's early launch of fully-resident waves.
+"""
+from repro.storage.policy import CostAwarePolicy, PlacementPolicy, RecencyPolicy
+from repro.storage.residency import make_residency_probe, wave_is_resident
+from repro.storage.tiers import Tier, TierStack, TierStats, make_tier_stack
+
+__all__ = [
+    "CostAwarePolicy",
+    "PlacementPolicy",
+    "RecencyPolicy",
+    "Tier",
+    "TierStack",
+    "TierStats",
+    "make_tier_stack",
+    "make_residency_probe",
+    "wave_is_resident",
+]
