@@ -41,6 +41,18 @@ wave re-reads the same dense blocks.  Sections:
       (**0 backing-store reads**), and that capacity pressure **demotes**
       hot blocks down the stack instead of dropping them (0 stack
       evictions) — the tiered CI guard (driver key ``tiered``).
+  serving sweep (``--serving``) — sustained-traffic serving in virtual time:
+      the continuous-batching loop (``ServeEngine.exemplar_tick``: slot-level
+      join/leave, mid-wave refill, cost-fed admission, memo-driven tier
+      prefetch) vs the drain-the-wave baseline at equal ``max_slots``, on
+      seeded traces with skewed templates, mixed per-request SLOs, and
+      appends racing queries.  Asserts byte-identity to the versioned solo
+      oracle in both modes, continuous ≥ drain on p99 latency AND SLO
+      attainment (5-seed trimmed means), ≤1 device→host transfer per
+      continuous device tick, ≥90% steady-state slot occupancy under backlog
+      (smoke), and that a memo-predicted wave reads **0 backing-store
+      blocks** after the prefetcher warmed its round-0 union — the serving
+      CI guard (driver key ``serving``).  Emits ``BENCH_serving.json``.
 
 ``--smoke`` runs a reduced workload (<60 s) that still executes every
 selected section and hard-fails on cache-stat regressions — the CI hook.
@@ -447,6 +459,411 @@ def admission_sweep(
     return rows
 
 
+#: fixed planning/dispatch overhead charged per refill round in the serving
+#: simulation's virtual clock — the non-I/O cost of a round (combine + plan +
+#: cut + scatter).  Both serving modes pay it per round, so it biases neither;
+#: it exists so a zero-I/O round still consumes time and the simulation
+#: cannot launch infinite rounds per simulated second.
+ROUND_OVERHEAD_S = 0.002
+
+
+def _serving_trace(n: int, seed: int) -> list[dict]:
+    """Seeded sustained-traffic trace: skewed template popularity (hot pool),
+    quantized k (hot LIMIT values repeat, so the plan memo observes each
+    (template, k) pair early and the memo-driven prefetch/cost machinery has
+    something to peek), mixed per-request SLOs, exponential inter-arrivals."""
+    rng = np.random.default_rng(seed)
+    pool = [
+        [(0, 1), (1, 1)],
+        [(0, 1)],
+        [(2, 1), (3, 1)],
+        [(1, 1)],
+        [(4, 1), (5, 1)],
+        [(0, 1), (2, 1)],
+    ]
+    probs = np.asarray([0.35, 0.25, 0.15, 0.10, 0.08, 0.07])
+    ks = (16, 64, 256)
+    slos = (0.025, 0.06, 0.25)
+    t = np.cumsum(rng.exponential(0.002, n))
+    return [
+        dict(
+            t=float(t[i]),
+            predicates=pool[int(rng.choice(len(pool), p=probs))],
+            k=int(ks[int(rng.integers(len(ks)))]),
+            slo=float(slos[int(rng.integers(len(slos)))]),
+        )
+        for i in range(n)
+    ]
+
+
+def _serving_engine(table, rpb):
+    """Fresh tiered engine per serving run: HBM tier sized to a fraction of
+    the hot working set, unbounded host tier (demote, never drop)."""
+    from repro.storage import TierStack, make_tier_stack
+
+    store = build_block_store(table, rpb)
+    stack = make_tier_stack(192 * TierStack.block_nbytes(store), None)
+    return NeedleTailEngine(store, tiers=stack), stack
+
+
+def _advance_idle(clk, arrivals, adm) -> bool:
+    """Jump virtual time to the next event (arrival or SLO deadline) when no
+    round ran.  Returns False when there is nothing left to wait for."""
+    cand = []
+    if arrivals:
+        cand.append(arrivals[0]["t"])
+    nd = adm.next_deadline()
+    if nd is not None:
+        cand.append(nd)
+    if not cand:
+        return False
+    t_next = min(cand)
+    # a due deadline always launches on the next tick; only future events
+    # should land here.  Nudge forward anyway so the loop can never stall.
+    clk.t = t_next if t_next > clk.t else clk.t + 1e-6
+    return True
+
+
+def _serving_metrics(completions, adm, stack, *, ticks, occ_sum, steady,
+                     versions, prefetcher=None, max_tick_transfers=0) -> dict:
+    lats = np.asarray([t_done - a["t"] for _, a, t_done, _ in completions])
+    slos = np.asarray([a["slo"] for _, a, _, _ in completions])
+    pf = prefetcher.stats if prefetcher is not None else None
+    return dict(
+        completions=completions, versions=versions,
+        p50_ms=float(np.percentile(lats, 50) * 1e3),
+        p99_ms=float(np.percentile(lats, 99) * 1e3),
+        slo_attainment=float(np.mean(lats <= slos)),
+        occupancy=occ_sum / ticks if ticks else 0.0,
+        steady_occupancy=float(np.mean(steady)) if steady else 1.0,
+        rounds=ticks,
+        tier_hit_rate=float(stack.stats.hit_rate),
+        store_blocks=int(stack.stats.store_blocks_fetched),
+        prefetch_hit_rate=float(pf.hit_rate) if pf is not None else 0.0,
+        prefetch_issued=int(pf.issued) if pf is not None else 0,
+        cheap_waves=adm.stats.cheap_waves,
+        refill_waves=adm.stats.refill_waves,
+        mean_wait_ms=adm.stats.mean_wait_s * 1e3,
+        served=adm.stats.served,
+        max_tick_transfers=max_tick_transfers,
+    )
+
+
+def _run_continuous_serving(table, rpb, trace, appends, max_slots,
+                            device=False) -> dict:
+    """Drive the continuous-batching loop (``ServeEngine.exemplar_tick``)
+    over the trace in virtual time: one refill round per tick priced at the
+    round's DEMAND store I/O plus ``ROUND_OVERHEAD_S``; appends applied at
+    idle boundaries (no in-flight slot straddles a store version); per-tick
+    transfer ledger asserted ≤ 1 on the device path."""
+    from collections import deque
+
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.engine import ServeEngine
+
+    eng, stack = _serving_engine(table, rpb)
+    clk = _SimClock()
+    serve = ServeEngine(
+        None, None, max_slots=max_slots,
+        exemplar_policy=AdmissionPolicy(
+            slo_s=0.02, max_wave=max_slots,
+            # memo-fed cost gate: a pending wave priced at/under one round
+            # overhead (its blocks are prefetched/resident) launches early.
+            # Device waves never write the host memo, so the probe would
+            # always answer None there — leave it (and prefetch) off.
+            cheap_cost_s=None if device else ROUND_OVERHEAD_S),
+        clock=clk, exemplar_device=device, exemplar_prefetch=not device,
+    )
+    adm = serve.exemplar_admission
+    arrivals = deque(trace)
+    append_q = deque(appends)
+    versions = [eng.store]
+    meta, completions = {}, []
+    submitted = 0
+    occ_sum, ticks, steady = 0.0, 0, []
+    max_tick_transfers = 0
+    while True:
+        while arrivals and arrivals[0]["t"] <= clk.t + 1e-12:
+            a = arrivals.popleft()
+            req = serve.submit_exemplar_request(a["predicates"], a["k"])
+            meta[id(req)] = a
+            submitted += 1
+        loop = serve._exemplar_loop
+        busy0 = loop.sched.busy if loop is not None else 0
+        if not (arrivals or adm.pending or busy0):
+            break
+        if busy0 == 0 and append_q and submitted >= append_q[0][0]:
+            # idle boundary: every request completes under ONE store version
+            versions.append(eng.append(append_q.popleft()[1]))
+        backlog = busy0 + adm.pending
+        rounds0 = loop.sched.rounds if loop is not None else 0
+        done = serve.exemplar_tick(eng)
+        loop = serve._exemplar_loop
+        ran = loop is not None and loop.sched.rounds > rounds0
+        if ran:
+            st = serve.last_wave_stats
+            tr = int(st["device_transfers"])
+            max_tick_transfers = max(max_tick_transfers, tr)
+            if tr > 1:
+                raise AssertionError(
+                    f"continuous serving regression: a tick shipped {tr} "
+                    "device→host transfers (expected ≤1 per refill round)"
+                )
+            clk.t += st["modeled_store_io_s"] + ROUND_OVERHEAD_S
+            occ_sum += st["wave_size"] / max_slots
+            ticks += 1
+            if backlog >= max_slots:  # steady state: enough work to fill
+                steady.append(st["wave_size"] / max_slots)
+        for req in done:
+            completions.append((req, meta[id(req)], clk.t, len(versions) - 1))
+        if not ran and not _advance_idle(clk, arrivals, adm):
+            break
+    pf = serve._prefetcher[1] if serve._prefetcher is not None else None
+    return _serving_metrics(
+        completions, adm, stack, ticks=ticks, occ_sum=occ_sum, steady=steady,
+        versions=versions, prefetcher=pf,
+        max_tick_transfers=max_tick_transfers,
+    )
+
+
+def _run_drain_serving(table, rpb, trace, appends, max_slots) -> dict:
+    """The drain-the-wave baseline on the SAME trace, pricing, appends, and
+    slot count: each launched wave runs to completion
+    (``ServeEngine._run_exemplar_wave``) before the next launches — a
+    satisfied query holds its slot for the wave's remaining rounds and
+    arrivals wait out the whole wave."""
+    from collections import deque
+
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.engine import ServeEngine
+
+    eng, stack = _serving_engine(table, rpb)
+    clk = _SimClock()
+    serve = ServeEngine(
+        None, None, max_slots=max_slots,
+        exemplar_policy=AdmissionPolicy(slo_s=0.02, max_wave=max_slots),
+        clock=clk,
+    )
+    adm = serve.exemplar_admission
+    arrivals = deque(trace)
+    append_q = deque(appends)
+    versions = [eng.store]
+    meta, completions = {}, []
+    submitted = 0
+    occ_sum, ticks, steady = 0.0, 0, []
+    while arrivals or adm.pending:
+        while arrivals and arrivals[0]["t"] <= clk.t + 1e-12:
+            a = arrivals.popleft()
+            req = serve.submit_exemplar_request(a["predicates"], a["k"])
+            meta[id(req)] = a
+            submitted += 1
+        if append_q and submitted >= append_q[0][0]:
+            # between waves nothing is in flight: same one-version guarantee
+            versions.append(eng.append(append_q.popleft()[1]))
+        backlog = adm.pending
+        wave = adm.poll()
+        if wave:
+            serve._run_exemplar_wave(eng, wave)
+            st = serve.last_wave_stats
+            rounds = max(int(st["rounds"]), 1)
+            clk.t += st["modeled_store_io_s"] + rounds * ROUND_OVERHEAD_S
+            for req in wave:
+                completions.append(
+                    (req, meta[id(req)], clk.t, len(versions) - 1)
+                )
+            occ_sum += st["slot_occupancy"] * rounds
+            ticks += rounds
+            if backlog >= max_slots:
+                steady.extend([st["slot_occupancy"]] * rounds)
+        elif not _advance_idle(clk, arrivals, adm):
+            break
+    return _serving_metrics(completions, adm, stack, ticks=ticks,
+                            occ_sum=occ_sum, steady=steady, versions=versions)
+
+
+def _oracle_check(run: dict) -> None:
+    """Every completion byte-identical to a solo cache-less ``any_k`` against
+    the store version it completed under — batching/continuous scheduling
+    moves I/O and time, never bytes."""
+    oracles: dict[int, NeedleTailEngine] = {}
+    for req, a, _t, v in run["completions"]:
+        o = oracles.get(v)
+        if o is None:
+            o = NeedleTailEngine(run["versions"][v], cache_bytes=0)
+            oracles[v] = o
+        ref = o.any_k(a["predicates"], a["k"], algo="auto")
+        np.testing.assert_array_equal(req.result.record_block, ref.record_block)
+        np.testing.assert_array_equal(req.result.record_row, ref.record_row)
+        np.testing.assert_array_equal(req.result.measures, ref.measures)
+
+
+def _prefetch_zero_read_check(table, rpb) -> dict:
+    """Scripted two-wave scenario: wave A runs while the prefetcher warms
+    pending wave B's memoized round-0 union; B's rounds must then read **0
+    blocks from the backing store**.  Single-attribute templates keep the
+    density estimates exact, so round 0 satisfies k and the prediction
+    covers the whole trajectory."""
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.engine import ServeEngine
+
+    eng, stack = _serving_engine(table, rpb)
+    wave_a = [BatchQuery([(0, 1)], 32), BatchQuery([(2, 1)], 32)]
+    wave_b = [BatchQuery([(1, 1)], 48), BatchQuery([(3, 1)], 48)]
+    eng.any_k_batch(wave_a + wave_b, algo="auto")  # memoize round-0 plans
+    stack.clear()  # cold tiers, warm memo: prediction is all the loop has
+    serve = ServeEngine(
+        None, None, max_slots=2,
+        exemplar_policy=AdmissionPolicy(slo_s=0.0, max_wave=2),
+        exemplar_prefetch=True,
+    )
+    rb = [serve.submit_exemplar_request(q.predicates, q.k)
+          for q in wave_a + wave_b][2:]
+    b_reads, guard = 0, 0
+    while not all(r.done for r in rb):
+        done = serve.exemplar_tick(eng, drain=True)
+        guard += 1
+        if guard > 64:
+            raise AssertionError("prefetch zero-read check did not converge")
+        st = serve.last_wave_stats or {}
+        loop = serve._exemplar_loop
+        b_live = any(
+            s is not None and s[0] in rb for s in loop.sched.slots
+        ) or any(r in rb for r in done)
+        if b_live:
+            b_reads += int(st.get("store_blocks_fetched", 0))
+    pf = serve._prefetcher[1]
+    if pf.stats.issued == 0:
+        raise AssertionError("prefetcher issued nothing for the pending wave")
+    if b_reads != 0:
+        raise AssertionError(
+            f"prefetch regression: the predicted wave read {b_reads} blocks "
+            "from the backing store (expected 0: served from the warmed tier)"
+        )
+    return dict(issued=int(pf.stats.issued), fetched=int(pf.stats.fetched),
+                hits=int(pf.stats.hits), predicted_wave_store_reads=b_reads)
+
+
+def serving_sweep(smoke: bool, max_slots: int = 8,
+                  seeds=(0, 1, 2, 3, 4)) -> tuple[list[dict], dict]:
+    """Sustained-traffic serving comparison: the continuous-batching loop vs
+    the drain-the-wave baseline at equal ``max_slots``, on seeded traces with
+    skewed templates, mixed deadlines, and appends racing queries.
+
+    Asserts (the serving CI hook, raises on any regression):
+
+    * every completion in BOTH modes is byte-identical to a solo cache-less
+      ``any_k`` against the store version it completed under;
+    * every continuous tick ships ≤ 1 device→host transfer (device segment);
+    * trimmed-mean p99 latency and SLO attainment: continuous beats drain;
+    * steady-state slot occupancy ≥ 0.9 (smoke guard: with enough backlog to
+      fill the pool, freed slots are refilled mid-wave, not parked);
+    * the memo-driven prefetch check: a predicted wave reads 0 store blocks.
+    """
+    from benchmarks.common import trimmed_mean, write_bench_json
+    from repro.data.block_store import Table
+
+    # table size is fixed across smoke/full: the comparison regime (arrival
+    # rate vs per-round service time) is tuned for this layout; only the
+    # trace length scales
+    num_records = 100_000
+    rpb = 256
+    n = 48 if smoke else 160
+    base = make_clustered_table(num_records=num_records, num_dims=8,
+                                density=0.1, seed=0, mean_cluster=2 * rpb)
+    extra = make_clustered_table(num_records=8 * rpb, num_dims=8, density=0.1,
+                                 seed=7, mean_cluster=2 * rpb)
+    half = 4 * rpb
+    t1 = Table(dims=extra.dims[:half], measures=extra.measures[:half],
+               cards=base.cards)
+    t2 = Table(dims=extra.dims[half:], measures=extra.measures[half:],
+               cards=base.cards)
+    rows: list[dict] = []
+    agg: dict[str, list[dict]] = {"continuous": [], "drain": []}
+    for seed in seeds:
+        trace = _serving_trace(n, seed=1000 + seed)
+        appends = [(n // 3, t1), (2 * n // 3, t2)]
+        runs = {
+            "continuous": _run_continuous_serving(
+                base, rpb, trace, list(appends), max_slots),
+            "drain": _run_drain_serving(
+                base, rpb, trace, list(appends), max_slots),
+        }
+        for mode, m in runs.items():
+            if m["served"] != n:
+                raise AssertionError(
+                    f"serving lost requests ({mode}): {m['served']}/{n}")
+            if seed == seeds[0]:
+                _oracle_check(m)
+            agg[mode].append(m)
+            rows.append(dict(
+                mode=mode, seed=seed,
+                p50_ms=round(m["p50_ms"], 2), p99_ms=round(m["p99_ms"], 2),
+                slo_att=round(m["slo_attainment"], 3),
+                occupancy=round(m["occupancy"], 3),
+                steady_occ=round(m["steady_occupancy"], 3),
+                rounds=m["rounds"], store_blocks=m["store_blocks"],
+                tier_hit=round(m["tier_hit_rate"], 3),
+                prefetch_hit=round(m["prefetch_hit_rate"], 3),
+                cheap=m["cheap_waves"], refill=m["refill_waves"],
+            ))
+
+    def _agg(mode: str) -> dict:
+        ms = agg[mode]
+        out = {k: trimmed_mean([m[k] for m in ms]) for k in (
+            "p50_ms", "p99_ms", "slo_attainment", "occupancy",
+            "steady_occupancy", "tier_hit_rate", "prefetch_hit_rate",
+            "mean_wait_ms")}
+        out["store_blocks"] = trimmed_mean([m["store_blocks"] for m in ms])
+        out["cheap_waves"] = sum(m["cheap_waves"] for m in ms)
+        out["refill_waves"] = sum(m["refill_waves"] for m in ms)
+        return {k: round(v, 4) for k, v in out.items()}
+
+    cont, drain = _agg("continuous"), _agg("drain")
+    if cont["p99_ms"] > drain["p99_ms"]:
+        raise AssertionError(
+            f"serving regression: continuous p99 {cont['p99_ms']:.1f} ms "
+            f"worse than drain {drain['p99_ms']:.1f} ms at equal max_slots"
+        )
+    if cont["slo_attainment"] < drain["slo_attainment"]:
+        raise AssertionError(
+            f"serving regression: continuous SLO attainment "
+            f"{cont['slo_attainment']:.3f} below drain "
+            f"{drain['slo_attainment']:.3f}"
+        )
+    if smoke and cont["steady_occupancy"] < 0.9:
+        raise AssertionError(
+            f"continuous serving regression: steady-state slot occupancy "
+            f"{cont['steady_occupancy']:.3f} < 0.9 (freed slots not refilled"
+            " mid-wave under backlog)"
+        )
+
+    # device segment: the same continuous loop on the device-resident
+    # pipeline — byte-identity to the versioned oracle plus the per-tick
+    # ≤1-transfer ledger (asserted inside the runner as well)
+    dev = _run_continuous_serving(
+        base, rpb, _serving_trace(16, seed=4242), [(8, t1)], max_slots,
+        device=True)
+    _oracle_check(dev)
+    if dev["max_tick_transfers"] > 1:
+        raise AssertionError("device continuous tick shipped >1 transfer")
+
+    zero = _prefetch_zero_read_check(base, rpb)
+
+    payload = dict(
+        config=dict(num_records=num_records, rpb=rpb, max_slots=max_slots,
+                    n_requests=n, seeds=len(seeds),
+                    round_overhead_s=ROUND_OVERHEAD_S, smoke=bool(smoke)),
+        continuous=cont, drain=drain,
+        device_continuous=dict(
+            ticks=dev["rounds"],
+            max_transfers_per_tick=dev["max_tick_transfers"]),
+        prefetch_zero_read=zero,
+    )
+    path = write_bench_json("serving", payload)
+    print(f"# wrote {path}")
+    return rows, payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -468,6 +885,17 @@ def main(argv=None):
                          "set) and assert 0 warm backing-store reads, "
                          "demote-not-drop placement, and flat-oracle "
                          "byte-identity on host AND device plan paths")
+    ap.add_argument("--serving", action="store_true",
+                    help="also run the sustained-traffic serving sweep: the "
+                         "continuous-batching loop vs drain-the-wave at equal "
+                         "max_slots on seeded traces (skewed templates, mixed "
+                         "deadlines, appends racing queries); asserts "
+                         "byte-identity to the versioned solo oracle, "
+                         "continuous beats drain on p99 + SLO attainment, "
+                         "≤1 transfer per continuous device tick, ≥90% "
+                         "steady-state slot occupancy (smoke), and 0 "
+                         "backing-store reads for prefetch-predicted waves; "
+                         "emits BENCH_serving.json")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
 
@@ -528,6 +956,24 @@ def main(argv=None):
               f"tier 0 holds {host_warm['hbm_blocks']} / "
               f"{host_warm['hbm_blocks'] + host_warm['dram_blocks']} "
               "resident blocks")
+
+    if args.serving:
+        print("\n# --- sustained-traffic serving (continuous vs wave drain) ---")
+        srows, spayload = serving_sweep(args.smoke)
+        emit(srows, ["mode", "seed", "p50_ms", "p99_ms", "slo_att",
+                     "occupancy", "steady_occ", "rounds", "store_blocks",
+                     "tier_hit", "prefetch_hit", "cheap", "refill"])
+        c, d = spayload["continuous"], spayload["drain"]
+        print(f"# continuous vs drain (trimmed mean over "
+              f"{spayload['config']['seeds']} seeds): "
+              f"p99 {c['p99_ms']:.1f} vs {d['p99_ms']:.1f} ms, "
+              f"SLO attainment {c['slo_attainment']:.3f} vs "
+              f"{d['slo_attainment']:.3f}, steady occupancy "
+              f"{c['steady_occupancy']:.3f} vs {d['steady_occupancy']:.3f}")
+        z = spayload["prefetch_zero_read"]
+        print(f"# prefetch: {z['issued']} blocks warmed ahead, predicted "
+              f"wave read {z['predicted_wave_store_reads']} store blocks "
+              "(asserted 0)")
 
     if args.sharded:
         print("\n# --- sharded-planning sweep (one collective per plan wave) ---")

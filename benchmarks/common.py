@@ -79,6 +79,33 @@ def emit(rows: list[dict], header: list[str]):
         print(",".join(str(r[h]) for h in header))
 
 
+def trimmed_mean(values) -> float:
+    """Mean with the min and max dropped (5-run trimmed mean when fed 5
+    values); degenerates to the plain mean below 3 samples."""
+    vs = sorted(float(v) for v in values)
+    if len(vs) >= 3:
+        vs = vs[1:-1]
+    return sum(vs) / len(vs) if vs else 0.0
+
+
+def write_bench_json(section: str, payload: dict) -> str:
+    """Persist a benchmark section's headline numbers as
+    ``BENCH_<section>.json`` at the repo root, so a perf trajectory exists
+    across PRs (committed alongside the code that produced it).  Returns the
+    path written.  Deterministic formatting: sorted keys, 2-space indent,
+    trailing newline — reruns with identical numbers produce identical
+    bytes."""
+    import json
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    path = root / f"BENCH_{section}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return str(path)
+
+
 @contextlib.contextmanager
 def forbid_device_to_host_transfers():
     """``jax.transfer_guard``-based probe for the device-resident pipeline.

@@ -25,6 +25,8 @@ SECTIONS = {
                "benchmarks.bench_multi_query", ["--device", "--smoke"]),
     "tiered": ("Tiered block storage: 0 warm store reads / demote-not-drop guard",
                "benchmarks.bench_multi_query", ["--tiered", "--smoke"]),
+    "serving": ("Sustained-traffic serving: continuous batching vs wave drain",
+                "benchmarks.bench_multi_query", ["--serving", "--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 

@@ -129,6 +129,10 @@ class BatchQueryResult:
     # "hbm.hits", "dram.demotions_in") — the ledger benchmarks and tests
     # assert placement behavior with.  None on a flat-LRU engine.
     tier_stats: dict | None = None
+    # number of still-active queries at each executed refill round — the
+    # serving layer derives slot occupancy (busy-slot fraction per round)
+    # from it; len(active_per_round) == rounds.
+    active_per_round: list = dataclasses.field(default_factory=list)
 
     @property
     def num_queries(self) -> int:
@@ -496,6 +500,47 @@ def _execute_wave(
     return progressed, requested
 
 
+def new_query_state(query: "BatchQuery | tuple") -> _QueryState:
+    """Fresh per-query refill state for `query` (satisfied immediately when
+    ``k <= 0``).  The continuous serving loop creates states one at a time as
+    requests join slots; ``run_batch`` creates a whole wave's worth."""
+    q = query if isinstance(query, BatchQuery) else BatchQuery(*query)
+    return _QueryState(query=q, need=q.k, done=(q.k <= 0))
+
+
+def plan_round_host(
+    engine: "NeedleTailEngine",
+    active: list[_QueryState],
+    algo: str,
+    planner=None,
+) -> list[np.ndarray]:
+    """Plan ONE refill round for `active` (not-done) states on host mirrors.
+
+    The single-round body of :func:`_host_plan_loop`, reusable by the
+    continuous serving loop (which re-plans a slot pool whose membership
+    changes between rounds): per-query algo groups each plan in one
+    :func:`_plan_wave` call, then each state's plan is diffed against its
+    exclusions (§4.1: ``setdiff1d`` returns ascending fetch order).  A state
+    whose diff comes up empty is marked done (plan exhausted).  Returns the
+    per-state block sets, aligned with `active`, ready for
+    :func:`_execute_wave`.
+    """
+    by_algo: dict[str, list[_QueryState]] = {}
+    for st in active:
+        by_algo.setdefault(st.query.algo or algo, []).append(st)
+    plan_of: dict[int, np.ndarray] = {}
+    for a, group in by_algo.items():
+        for st, plan in zip(group, _plan_wave(engine, group, a, planner)):
+            plan_of[id(st)] = plan
+    wave_blocks: list[np.ndarray] = []
+    for st in active:
+        blocks = np.setdiff1d(plan_of[id(st)], st.exclude)
+        if blocks.size == 0:
+            st.done = True  # plan exhausted: nothing new to read
+        wave_blocks.append(blocks)
+    return wave_blocks
+
+
 def _host_plan_loop(
     engine: "NeedleTailEngine",
     states: list[_QueryState],
@@ -504,33 +549,18 @@ def _host_plan_loop(
     cache,
     touched: list[int],
     touched_set: set[int],
+    active_counts: list[int] | None = None,
 ) -> tuple[int, int]:
     """The host-mirror refill loop (the byte-identity oracle): plans on host
-    mirrors via :func:`_plan_wave`, one shared union fetch per wave.  Returns
-    ``(waves, blocks_requested_total)``."""
+    mirrors via :func:`plan_round_host`, one shared union fetch per wave.
+    Returns ``(waves, blocks_requested_total)``."""
     requested_total = 0
     waves = 0
     while waves < engine.max_refills:
         active = [st for st in states if not st.done]
         if not active:
             break
-        # per-query algo override: plan each algo group in its own wave call
-        by_algo: dict[str, list[_QueryState]] = {}
-        for st in active:
-            by_algo.setdefault(st.query.algo or algo, []).append(st)
-        plan_of: dict[int, np.ndarray] = {}
-        for a, group in by_algo.items():
-            for st, plan in zip(group, _plan_wave(engine, group, a, planner)):
-                plan_of[id(st)] = plan
-        plans = [plan_of[id(st)] for st in active]
-        # per-query §4.1 post-plan steps: drop already-fetched blocks,
-        # ascending fetch order (setdiff1d returns sorted ids)
-        wave_blocks: list[np.ndarray] = []
-        for st, plan in zip(active, plans):
-            blocks = np.setdiff1d(plan, st.exclude)
-            if blocks.size == 0:
-                st.done = True  # plan exhausted: nothing new to read
-            wave_blocks.append(blocks)
+        wave_blocks = plan_round_host(engine, active, algo, planner)
         progressed, req = _execute_wave(
             engine, cache, active, wave_blocks, touched, touched_set
         )
@@ -538,7 +568,42 @@ def _host_plan_loop(
         if not progressed:
             break
         waves += 1
+        if active_counts is not None:
+            active_counts.append(len(active))
     return waves, requested_total
+
+
+def finalize_query_result(
+    engine: "NeedleTailEngine",
+    st: _QueryState,
+    default_algo: str = "auto",
+    cpu_time_s: float = 0.0,
+):
+    """Assemble the public :class:`~repro.core.engine.QueryResult` from a
+    finished (or retired) refill state.  Shared by ``run_batch`` (per wave
+    member at batch end) and the continuous serving loop (per slot the
+    instant it leaves)."""
+    from repro.core.engine import QueryResult
+
+    all_blocks = (
+        np.concatenate(st.planned) if st.planned else np.asarray([], dtype=np.int64)
+    )
+    return QueryResult(
+        record_block=np.concatenate(st.rec_blocks)
+        if st.rec_blocks
+        else np.asarray([], np.int64),
+        record_row=np.concatenate(st.rec_rows)
+        if st.rec_rows
+        else np.asarray([], np.int64),
+        measures=np.concatenate(st.meas)
+        if st.meas
+        else np.zeros((0, 0), np.float32),
+        blocks_fetched=all_blocks,
+        algo=st.used_algo or (st.query.algo or default_algo),
+        cpu_time_s=cpu_time_s,  # wave time is shared; a per-query share is not meaningful
+        modeled_io_s=engine.cost.io_time(all_blocks),
+        plan_rounds=st.rounds,
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -561,46 +626,214 @@ def _local_round_fn(records_per_block: int):
     return jax.jit(round_fn)
 
 
-def _device_state(
-    engine: "NeedleTailEngine", states: list[_QueryState], qb: int
-) -> DevicePlanState:
-    """Build round-0 device residency: one ⊕-combine per op group on device
-    (the :func:`repro.kernels.plan_wave.combine_wave` fold — bit-identical to
-    the host combine), Predicate trees compiled host-side once and uploaded."""
-    from repro.kernels.plan_wave import combine_wave
+_DEVICE_ALGOS = ("threshold", "two_prong", "auto", "forward_optimal")
 
-    lam = engine.store.num_blocks
-    dens_dev = engine.store.index.densities  # [rows, λ] jax Array, resident
-    combined0 = jnp.zeros((qb, lam), jnp.float32)
-    groups: dict[str, list[int]] = {}
-    tree_idx: list[int] = []
-    for i, st in enumerate(states):
-        if isinstance(st.query.predicates, Predicate):
-            tree_idx.append(i)
+
+class DeviceWave:
+    """A slot-pooled device-resident wave planner.
+
+    Owns a fixed ``[Qb, λ]`` :class:`DevicePlanState` whose rows are serving
+    *slots*: queries :meth:`join` a slot between refill rounds and
+    :meth:`leave` the instant they are satisfied, so the wave's effective Q
+    axis shrinks and grows without reallocating device state or recompiling
+    the round body.  Departures are host-side only (active mask + choice
+    code cleared — a stale row is never replayed and its plan outputs are
+    not decoded); joins batch into ONE device scatter per round
+    (:func:`repro.kernels.plan_wave.join_wave_slots`), flushed lazily at the
+    top of :meth:`plan_round`.  Rows are planned independently, so each
+    occupant's plan trajectory is bit-identical to a solo run whatever the
+    other slots hold, and each round still ships exactly one packed
+    device→host transfer (``state.transfers`` is the ledger the CI guard
+    audits).
+
+    ``run_batch(plan_on_host=False)`` drives a throwaway DeviceWave with one
+    slot per query; the continuous serving loop keeps one alive across
+    requests (``repro.serving.engine.ServeEngine``).
+    """
+
+    def __init__(
+        self,
+        engine: "NeedleTailEngine",
+        n_slots: int,
+        default_algo: str = "auto",
+        planner=None,
+    ):
+        if default_algo not in _DEVICE_ALGOS:
+            raise ValueError(f"unknown algo {default_algo!r}")
+        self.engine = engine
+        self.planner = planner
+        self.default_algo = default_algo
+        self.n_slots = n_slots
+        self.lam = engine.store.num_blocks
+        self.rpb = engine.store.records_per_block
+        self.qb = _bucket(max(n_slots, 1))
+        if planner is not None:
+            self.round_fn = planner.device_round_fn(self.lam, self.rpb)
         else:
-            groups.setdefault(st.query.op, []).append(i)
-    vocab = engine.store.index.vocab
-    for op, idxs in groups.items():
-        rm = pack_row_matrix(vocab, [states[i].query.predicates for i in idxs])
-        rows_dev = combine_wave(dens_dev, jnp.asarray(rm), op)
-        combined0 = combined0.at[jnp.asarray(np.asarray(idxs))].set(rows_dev)
-    if tree_idx:
-        host_rows = np.stack(
-            [
-                np.asarray(
-                    states[i].query.predicates.density(engine.store.index),
-                    dtype=np.float32,
-                )
-                for i in tree_idx
-            ]
+            self.round_fn = _local_round_fn(self.rpb)
+        self.state = DevicePlanState(
+            combined0=jnp.zeros((self.qb, self.lam), jnp.float32),
+            excl=jnp.zeros((self.qb, self.lam), bool),
+            th_mask=jnp.zeros((self.qb, self.lam), bool),
+            tp_win=jnp.zeros((self.qb, 2), jnp.int32),
         )
-        combined0 = combined0.at[jnp.asarray(tree_idx)].set(jnp.asarray(host_rows))
-    return DevicePlanState(
-        combined0=combined0,
-        excl=jnp.zeros((qb, lam), bool),
-        th_mask=jnp.zeros((qb, lam), bool),
-        tp_win=jnp.zeros((qb, 2), jnp.int32),
-    )
+        self.chosen = np.full((self.qb,), -1, np.int8)
+        self.slots: list[_QueryState | None] = [None] * n_slots
+        self._joining: list[int] = []
+
+    @property
+    def transfers(self) -> int:
+        return self.state.transfers
+
+    def busy_slots(self) -> list[int]:
+        return [s for s in range(self.n_slots) if self.slots[s] is not None]
+
+    def join(self, slot: int, st: _QueryState) -> None:
+        """Seat `st` at `slot` (must be free); its base combined row and any
+        prior exclusions are scattered into the device state on the next
+        :meth:`plan_round` (one batched scatter for all joiners)."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied")
+        if (st.query.algo or self.default_algo) not in _DEVICE_ALGOS:
+            raise ValueError(f"unknown algo {st.query.algo!r}")
+        self.slots[slot] = st
+        self.chosen[slot] = -1
+        self._joining.append(slot)
+
+    def leave(self, slot: int) -> _QueryState | None:
+        """Vacate `slot`.  Host-side only: the stale device row is inert
+        (choice code -1 is never replayed; outputs of inactive rows are not
+        decoded) and will be overwritten by the next joiner's scatter."""
+        st = self.slots[slot]
+        self.slots[slot] = None
+        self.chosen[slot] = -1
+        if slot in self._joining:  # joined and left without ever planning
+            self._joining.remove(slot)
+        return st
+
+    def _flush_joins(self) -> None:
+        """One ⊕-combine per op group for the queued joiners (the
+        :func:`repro.kernels.plan_wave.combine_wave` fold — bit-identical to
+        the host combine; Predicate trees compile host-side and upload), then
+        one scatter seats them all."""
+        if not self._joining:
+            return
+        from repro.kernels.plan_wave import combine_wave, join_wave_slots
+
+        joining, self._joining = self._joining, []
+        engine = self.engine
+        dens_dev = engine.store.index.densities  # [rows, λ] jax Array, resident
+        vocab = engine.store.index.vocab
+        rows: list = [None] * len(joining)
+        groups: dict[str, list[int]] = {}
+        for j, slot in enumerate(joining):
+            st = self.slots[slot]
+            if isinstance(st.query.predicates, Predicate):
+                rows[j] = jnp.asarray(
+                    np.asarray(
+                        st.query.predicates.density(engine.store.index),
+                        dtype=np.float32,
+                    )
+                )
+            else:
+                groups.setdefault(st.query.op, []).append(j)
+        for op, js in groups.items():
+            rm = pack_row_matrix(
+                vocab, [self.slots[joining[j]].query.predicates for j in js]
+            )
+            rows_dev = combine_wave(dens_dev, jnp.asarray(rm), op)
+            for off, j in enumerate(js):
+                rows[j] = rows_dev[off]
+        excl_rows = np.zeros((len(joining), self.lam), dtype=bool)
+        for j, slot in enumerate(joining):
+            ex = self.slots[slot].exclude
+            if ex.size:
+                excl_rows[j, ex] = True
+        c0, ex, th, tp = join_wave_slots(
+            self.state.combined0, self.state.excl, self.state.th_mask,
+            self.state.tp_win, jnp.asarray(np.asarray(joining, np.int32)),
+            jnp.stack(rows), jnp.asarray(excl_rows),
+        )
+        self.state.combined0, self.state.excl = c0, ex
+        self.state.th_mask, self.state.tp_win = th, tp
+
+    def plan_round(self) -> tuple[list[_QueryState], list[np.ndarray]]:
+        """One device planning round over the current occupants.
+
+        Flush queued joins, replay last round's choice codes onto the
+        exclusion masks, re-plan every slot on device, and ship the round's
+        single packed transfer; the host decodes only the occupied rows
+        (forward_optimal occupants plan on the host DP as ever).  Returns
+        ``(active_states, wave_blocks)`` in slot order, ready for
+        :func:`_execute_wave` — both empty when no slot is occupied (in
+        which case no transfer is shipped).
+        """
+        self._flush_joins()
+        active_slots = self.busy_slots()
+        active = [self.slots[s] for s in active_slots]
+        if not active:
+            return [], []
+        from repro.kernels.plan_wave import unpack_plan
+
+        engine = self.engine
+        dstate = self.state
+        needs_np = np.ones((self.qb,), np.float32)
+        for s, st in zip(active_slots, active):
+            needs_np[s] = float(st.need)
+        packed, excl, th_prev, tp_prev = self.round_fn(
+            dstate.combined0, dstate.excl, dstate.th_mask, dstate.tp_win,
+            jnp.asarray(self.chosen), jnp.asarray(needs_np),
+        )
+        dstate.excl, dstate.th_mask, dstate.tp_win = excl, th_prev, tp_prev
+        # the round's single device→host transfer: the packed [Q, λ+3] plan.
+        # Explicitly allowed so callers can run the whole loop under
+        # jax.transfer_guard_device_to_host("disallow") as a stray-transfer
+        # probe (benchmarks/common.py).
+        with jax.transfer_guard_device_to_host("allow"):
+            packed_np = np.asarray(packed)
+        dstate.transfers += 1
+        th_mask, _, tps, tpe = unpack_plan(packed_np, self.lam)
+        # forward_optimal falls back to the host DP (sequential by nature);
+        # its combined rows come from the host mirror, not the device
+        fo_active = [
+            st for st in active
+            if (st.query.algo or self.default_algo) == "forward_optimal"
+        ]
+        fo_plans: dict[int, np.ndarray] = {}
+        if fo_active:
+            fo_combined = _combined_matrix(engine, fo_active)
+            for st, comb in zip(fo_active, fo_combined):
+                sel, _ = forward_optimal_faithful(comb, st.need, self.rpb, engine.cost)
+                fo_plans[id(st)] = np.asarray(sel, dtype=np.int64)
+        self.chosen = np.full((self.qb,), -1, np.int8)
+        wave_blocks: list[np.ndarray] = []
+        for s, st in zip(active_slots, active):
+            a = st.query.algo or self.default_algo
+            if a == "forward_optimal":
+                plan = fo_plans[id(st)]
+                st.used_algo = a
+            elif a == "threshold":
+                plan = np.flatnonzero(th_mask[s]).astype(np.int64)
+                self.chosen[s] = 0
+                st.used_algo = a
+            elif a == "two_prong":
+                plan = np.arange(int(tps[s]), int(tpe[s]), dtype=np.int64)
+                self.chosen[s] = 1
+                st.used_algo = a
+            else:  # auto — §7.2: cost both on host (the cost model is f64 host code)
+                bt = np.flatnonzero(th_mask[s]).astype(np.int64)
+                b2 = np.arange(int(tps[s]), int(tpe[s]), dtype=np.int64)
+                cost_fn = getattr(engine, "plan_cost", None) or engine.cost.io_time
+                ct, c2 = cost_fn(bt), cost_fn(b2)
+                if ct <= c2:
+                    plan, self.chosen[s], st.used_algo = bt, 0, "threshold"
+                else:
+                    plan, self.chosen[s], st.used_algo = b2, 1, "two_prong"
+            blocks = np.setdiff1d(plan, st.exclude)
+            if blocks.size == 0:
+                st.done = True  # plan exhausted: nothing new to read
+            wave_blocks.append(blocks)
+        return active, wave_blocks
 
 
 def _device_plan_loop(
@@ -611,103 +844,46 @@ def _device_plan_loop(
     cache,
     touched: list[int],
     touched_set: set[int],
+    active_counts: list[int] | None = None,
 ) -> tuple[int, int, int]:
     """The device-resident refill loop: combine → θ-stats → plan → block-cut
     on device, ONE device→host transfer per round.
 
-    The wave's plan state is a :class:`DevicePlanState` carried across
-    rounds; with a sharded ``planner`` each round's plan step is one
-    ``shard_map`` collective whose outputs feed the device cut directly
-    (:meth:`repro.core.sharded.DistributedAnyK.device_round_fn` — no host
-    mirrors between plan and cut).  Per-query results are byte-identical to
-    the ``plan_on_host=True`` oracle; ``forward_optimal`` queries (inherently
-    sequential, host cost DP) ride the wave but plan on host.  Returns
-    ``(waves, blocks_requested_total, device_transfers)``.
+    One :class:`DeviceWave` slot per query: all states join up front and each
+    leaves the round it is satisfied; with a sharded ``planner`` each round's
+    plan step is one ``shard_map`` collective whose outputs feed the device
+    cut directly (:meth:`repro.core.sharded.DistributedAnyK.device_round_fn`
+    — no host mirrors between plan and cut).  Per-query results are
+    byte-identical to the ``plan_on_host=True`` oracle; ``forward_optimal``
+    queries (inherently sequential, host cost DP) ride the wave but plan on
+    host.  Returns ``(waves, blocks_requested_total, device_transfers)``.
     """
-    from repro.kernels.plan_wave import unpack_plan
-
-    lam = engine.store.num_blocks
-    rpb = engine.store.records_per_block
-    algo_of = [st.query.algo or algo for st in states]
-    for a in set(algo_of):
-        if a not in ("threshold", "two_prong", "auto", "forward_optimal"):
+    for a in set(st.query.algo or algo for st in states):
+        if a not in _DEVICE_ALGOS:
             raise ValueError(f"unknown algo {a!r}")
-    qb = _bucket(max(len(states), 1))
-    dstate = _device_state(engine, states, qb)
-    if planner is not None:
-        round_fn = planner.device_round_fn(lam, rpb)
-    else:
-        round_fn = _local_round_fn(rpb)
-    idx_of = {id(st): i for i, st in enumerate(states)}
-    chosen_np = np.full((qb,), -1, np.int8)
+    wave = DeviceWave(engine, len(states), default_algo=algo, planner=planner)
+    for i, st in enumerate(states):
+        if not st.done:
+            wave.join(i, st)
     requested_total = 0
     waves = 0
     while waves < engine.max_refills:
-        active = [st for st in states if not st.done]
+        active, wave_blocks = wave.plan_round()
         if not active:
             break
-        needs_np = np.ones((qb,), np.float32)
-        for st in active:
-            needs_np[idx_of[id(st)]] = float(st.need)
-        packed, excl, th_prev, tp_prev = round_fn(
-            dstate.combined0, dstate.excl, dstate.th_mask, dstate.tp_win,
-            jnp.asarray(chosen_np), jnp.asarray(needs_np),
-        )
-        dstate.excl, dstate.th_mask, dstate.tp_win = excl, th_prev, tp_prev
-        # the round's single device→host transfer: the packed [Q, λ+3] plan.
-        # Explicitly allowed so callers can run the whole loop under
-        # jax.transfer_guard_device_to_host("disallow") as a stray-transfer
-        # probe (benchmarks/common.py).
-        with jax.transfer_guard_device_to_host("allow"):
-            packed_np = np.asarray(packed)
-        dstate.transfers += 1
-        th_mask, _, tps, tpe = unpack_plan(packed_np, lam)
-        # forward_optimal falls back to the host DP (sequential by nature);
-        # its combined rows come from the host mirror, not the device
-        fo_active = [st for st in active if algo_of[idx_of[id(st)]] == "forward_optimal"]
-        fo_plans: dict[int, np.ndarray] = {}
-        if fo_active:
-            fo_combined = _combined_matrix(engine, fo_active)
-            for st, comb in zip(fo_active, fo_combined):
-                sel, _ = forward_optimal_faithful(comb, st.need, rpb, engine.cost)
-                fo_plans[id(st)] = np.asarray(sel, dtype=np.int64)
-        chosen_np = np.full((qb,), -1, np.int8)
-        wave_blocks: list[np.ndarray] = []
-        for st in active:
-            i = idx_of[id(st)]
-            a = algo_of[i]
-            if a == "forward_optimal":
-                plan = fo_plans[id(st)]
-                st.used_algo = a
-            elif a == "threshold":
-                plan = np.flatnonzero(th_mask[i]).astype(np.int64)
-                chosen_np[i] = 0
-                st.used_algo = a
-            elif a == "two_prong":
-                plan = np.arange(int(tps[i]), int(tpe[i]), dtype=np.int64)
-                chosen_np[i] = 1
-                st.used_algo = a
-            else:  # auto — §7.2: cost both on host (the cost model is f64 host code)
-                bt = np.flatnonzero(th_mask[i]).astype(np.int64)
-                b2 = np.arange(int(tps[i]), int(tpe[i]), dtype=np.int64)
-                cost_fn = getattr(engine, "plan_cost", None) or engine.cost.io_time
-                ct, c2 = cost_fn(bt), cost_fn(b2)
-                if ct <= c2:
-                    plan, chosen_np[i], st.used_algo = bt, 0, "threshold"
-                else:
-                    plan, chosen_np[i], st.used_algo = b2, 1, "two_prong"
-            blocks = np.setdiff1d(plan, st.exclude)
-            if blocks.size == 0:
-                st.done = True  # plan exhausted: nothing new to read
-            wave_blocks.append(blocks)
         progressed, req = _execute_wave(
             engine, cache, active, wave_blocks, touched, touched_set
         )
         requested_total += req
+        for s in wave.busy_slots():
+            if wave.slots[s].done:
+                wave.leave(s)
         if not progressed:
             break
         waves += 1
-    return waves, requested_total, dstate.transfers
+        if active_counts is not None:
+            active_counts.append(len(active))
+    return waves, requested_total, wave.transfers
 
 
 def run_batch(
@@ -743,11 +919,8 @@ def run_batch(
     only path that feeds the :class:`~repro.core.block_cache.PlanOrderCache`
     memo.
     """
-    from repro.core.engine import QueryResult
-
     t0 = time.perf_counter()
-    qs = [q if isinstance(q, BatchQuery) else BatchQuery(*q) for q in queries]
-    states = [_QueryState(query=q, need=q.k, done=(q.k <= 0)) for q in qs]
+    states = [new_query_state(q) for q in queries]
     cache = engine.block_cache
     hits0 = cache.stats.hits
     store0 = cache.stats.store_blocks_fetched
@@ -762,45 +935,29 @@ def run_batch(
     requested_total = 0
     waves = 0
     device_transfers = 0
+    active_counts: list[int] = []
 
     try:
         if engine.store.num_blocks == 0 or not any(not st.done for st in states):
             pass  # λ=0 store or an all-satisfied wave: nothing to plan or fetch
         elif plan_on_host:
             waves, requested_total = _host_plan_loop(
-                engine, states, algo, planner, cache, touched, touched_set
+                engine, states, algo, planner, cache, touched, touched_set,
+                active_counts=active_counts,
             )
         else:
             waves, requested_total, device_transfers = _device_plan_loop(
-                engine, states, algo, planner, cache, touched, touched_set
+                engine, states, algo, planner, cache, touched, touched_set,
+                active_counts=active_counts,
             )
     finally:
         cache.fetch_log = prev_log
 
     cpu = time.perf_counter() - t0
-    results = []
-    for st in states:
-        all_blocks = (
-            np.concatenate(st.planned) if st.planned else np.asarray([], dtype=np.int64)
-        )
-        results.append(
-            QueryResult(
-                record_block=np.concatenate(st.rec_blocks)
-                if st.rec_blocks
-                else np.asarray([], np.int64),
-                record_row=np.concatenate(st.rec_rows)
-                if st.rec_rows
-                else np.asarray([], np.int64),
-                measures=np.concatenate(st.meas)
-                if st.meas
-                else np.zeros((0, 0), np.float32),
-                blocks_fetched=all_blocks,
-                algo=st.used_algo or (st.query.algo or algo),
-                cpu_time_s=cpu,  # wave time is shared; per-query share is not meaningful
-                modeled_io_s=engine.cost.io_time(all_blocks),
-                plan_rounds=st.rounds,
-            )
-        )
+    results = [
+        finalize_query_result(engine, st, default_algo=algo, cpu_time_s=cpu)
+        for st in states
+    ]
     touched_ids = np.asarray(touched, dtype=np.int64)
     return BatchQueryResult(
         results=results,
@@ -818,4 +975,5 @@ def run_batch(
             if tier0 is not None
             else None
         ),
+        active_per_round=active_counts,
     )

@@ -263,6 +263,35 @@ def apply_chosen(
     return excl | new
 
 
+def join_wave_slots(
+    combined0: jax.Array,  # [Qb, λ] f32 base combined densities
+    excl: jax.Array,  # [Qb, λ] bool
+    th_mask: jax.Array,  # [Qb, λ] bool previous round's THRESHOLD mask
+    tp_win: jax.Array,  # [Qb, 2] i32 previous round's TWO-PRONG window
+    idx: jax.Array,  # [J] i32 slot rows being (re)occupied
+    rows: jax.Array,  # [J, λ] f32 joiners' base combined densities
+    excl_rows: jax.Array,  # [J, λ] bool joiners' prior exclusions
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Admit joining queries into slot rows of a device-resident wave.
+
+    The continuous serving loop grows and shrinks the wave's Q axis without
+    reallocating device state: a departure only clears the host-side active
+    mask and choice code (a row whose code is -1 is never replayed by
+    :func:`apply_chosen`, and its plan outputs are simply not decoded), while
+    a join scatters the newcomer's base combined row and prior-exclusion row
+    into the fixed ``[Qb, λ]`` state and zeroes the stale prefix cursors left
+    by the previous occupant.  Rows are planned independently, so active
+    occupants' plans are bit-identical whatever the other rows hold, and the
+    one-packed-transfer-per-round protocol is untouched — joins are pure
+    device-side scatters.
+    """
+    combined0 = combined0.at[idx].set(rows)
+    excl = excl.at[idx].set(excl_rows)
+    th_mask = th_mask.at[idx].set(False)
+    tp_win = tp_win.at[idx].set(0)
+    return combined0, excl, th_mask, tp_win
+
+
 # --------------------------------------------------------------------------
 # block_gather: the wave's deduplicated union in one device gather.
 # --------------------------------------------------------------------------

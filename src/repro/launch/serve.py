@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \\
       --requests 8 --max-new 16
+
+``--continuous`` swaps the drain-the-wave loop for the continuous-batching
+slot loop (``ServeEngine.run_continuous``): finished requests free their
+slot immediately and queued requests join mid-wave, so mixed-length traffic
+keeps the decode batch full instead of waiting out the longest straggler.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-level continuous batching instead of wave drain")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -41,10 +48,14 @@ def main(argv=None):
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
         eng.submit(rng.integers(0, cfg.vocab, plen), max_new_tokens=args.max_new)
-    done = eng.run_until_drained()
+    if args.continuous:
+        done = eng.run_continuous()["lm"]
+    else:
+        done = eng.run_until_drained()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.1f}s "
+    mode = "continuous" if args.continuous else "waves"
+    print(f"[serve] {mode}: {len(done)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new/dt:.1f} tok/s)")
     for r in done[:4]:
         print(f"  rid={r.rid} prompt_len={len(r.prompt)} out={r.out_tokens[:8]}...")

@@ -1,7 +1,7 @@
 from repro.serving.admission import AdmissionController, AdmissionPolicy, AdmissionStats
-from repro.serving.engine import ExemplarRequest, Request, ServeEngine
+from repro.serving.engine import ExemplarRequest, Request, ServeEngine, SlotScheduler
 
 __all__ = [
     "AdmissionController", "AdmissionPolicy", "AdmissionStats",
-    "ExemplarRequest", "Request", "ServeEngine",
+    "ExemplarRequest", "Request", "ServeEngine", "SlotScheduler",
 ]

@@ -38,11 +38,17 @@ class AdmissionPolicy:
     threshold: a full wave never waits).  ``min_wave`` — waves smaller than
     this wait for the SLO deadline even if polled (batching floor; 1 means a
     deadline launch always happens, whatever the queue depth).
+    ``cheap_cost_s`` — cost-fed early launch: with a ``cost_probe``
+    installed, a wave whose missed-block I/O prices at or under this many
+    modeled seconds launches before its deadline (cheap waves have little
+    shared-fetch left to amortize; expensive ones keep holding).  ``None``
+    disables the cost gate.
     """
 
     slo_s: float = 0.05
     max_wave: int = 8
     min_wave: int = 1
+    cheap_cost_s: float | None = None
 
     def __post_init__(self):
         if self.slo_s < 0:
@@ -51,6 +57,8 @@ class AdmissionPolicy:
             raise ValueError("max_wave must be >= 1")
         if not (1 <= self.min_wave <= self.max_wave):
             raise ValueError("need 1 <= min_wave <= max_wave")
+        if self.cheap_cost_s is not None and self.cheap_cost_s < 0:
+            raise ValueError("cheap_cost_s must be >= 0 (or None)")
 
 
 @dataclasses.dataclass
@@ -61,7 +69,9 @@ class AdmissionStats:
     full_waves: int = 0  # launched because the wave filled
     deadline_waves: int = 0  # launched because the oldest SLO came due
     resident_waves: int = 0  # launched early: fully cache-resident (probe)
+    cheap_waves: int = 0  # launched early: missed-block cost under the bar
     flush_waves: int = 0  # launched by an explicit flush barrier
+    refill_waves: int = 0  # popped mid-wave into freed slots (continuous loop)
     max_wave_size: int = 0
     total_wait_s: float = 0.0
     max_wait_s: float = 0.0
@@ -108,6 +118,7 @@ class AdmissionController:
         policy: AdmissionPolicy | None = None,
         clock: Callable[[], float] = time.monotonic,
         residency_probe: Callable[[list], bool] | None = None,
+        cost_probe: Callable[[list], float | None] | None = None,
     ):
         self.policy = policy or AdmissionPolicy()
         self.clock = clock
@@ -119,6 +130,13 @@ class AdmissionController:
         # wave reads nothing from the store) and costs pure latency.  The
         # probe must be side-effect-free; see `wave_is_resident`.
         self.residency_probe = residency_probe
+        # cost-fed early launch (repro.storage.prefetch.make_missed_cost_probe):
+        # prices a pending wave by TierStack.effective_io_time of its *missed*
+        # blocks.  A wave at or under policy.cheap_cost_s launches before its
+        # deadline; an expensive wave keeps accumulating to amortize its store
+        # reads over more sharers.  Probe returns None when unpriceable (memo
+        # miss) — then only full/deadline/residency rules apply.
+        self.cost_probe = cost_probe
         self._pending: "deque[tuple[Any, float]]" = deque()  # (request, t_submit)
         self._last_pop: dict | None = None  # rollback record for requeue_front
 
@@ -157,24 +175,33 @@ class AdmissionController:
         return request
 
     def requeue_front(self, requests) -> None:
-        """Put a failed wave back at the head of the queue (FIFO order
+        """Put failed requests back at the head of the queue (FIFO order
         preserved) so no admitted request is silently lost.  Wait clocks
-        restart; ``submitted`` is not re-counted, and if `requests` is
-        exactly the wave of the most recent pop, that pop's launch
-        accounting (served/waves/waits) is rolled back so stats reflect only
-        waves that actually ran."""
+        restart; ``submitted`` is not re-counted, and any of `requests` that
+        came from the most recent pop has its launch accounting
+        (served/wait/violation) rolled back per request — so a requeued
+        request does not double-count in ``mean_wait_s`` when it is
+        eventually served.  Only when the *whole* pop is returned does the
+        wave itself unwind (``waves``, its launch-reason counter, and the
+        max-wait/max-size water marks) — a partially failed wave did run."""
         requests = list(requests)
         lp = self._last_pop
-        if lp is not None and lp["ids"] == [id(r) for r in requests]:
+        if lp is not None:
             s = self.stats
-            s.served -= lp["n"]
-            s.waves -= 1
-            s.total_wait_s -= lp["wait"]
-            s.max_wait_s = lp["prev_max_wait"]
-            s.max_wave_size = lp["prev_max_size"]
-            s.slo_violations -= lp["violations"]
-            setattr(s, lp["reason"], getattr(s, lp["reason"]) - 1)
-            self._last_pop = None
+            for r in requests:
+                rec = lp["waits"].pop(id(r), None)
+                if rec is None:
+                    continue
+                wait, violated = rec
+                s.served -= 1
+                s.total_wait_s -= wait
+                s.slo_violations -= int(violated)
+            if not lp["waits"]:  # the full pop came back: the wave never ran
+                s.waves -= 1
+                s.max_wait_s = lp["prev_max_wait"]
+                s.max_wave_size = lp["prev_max_size"]
+                setattr(s, lp["reason"], getattr(s, lp["reason"]) - 1)
+                self._last_pop = None
         now = self.clock()
         for r in reversed(requests):
             self._pending.appendleft((r, now))
@@ -182,6 +209,7 @@ class AdmissionController:
     # ---------------------------------------------------------------- launch
     def _pop_wave(self, n: int, now: float, reason: str) -> list[Any]:
         wave = []
+        waits: dict[int, tuple[float, bool]] = {}  # id(req) -> (wait, violated)
         wait_sum = 0.0
         violations = 0
         prev_max_wait = self.stats.max_wait_s
@@ -191,8 +219,10 @@ class AdmissionController:
             wait = max(now - t_sub, 0.0)
             wait_sum += wait
             self.stats.max_wait_s = max(self.stats.max_wait_s, wait)
-            if wait > self.policy.slo_s + 1e-9:
+            violated = wait > self.policy.slo_s + 1e-9
+            if violated:
                 violations += 1
+            waits[id(req)] = (wait, violated)
             wave.append(req)
         self.stats.total_wait_s += wait_sum
         self.stats.slo_violations += violations
@@ -201,22 +231,59 @@ class AdmissionController:
         self.stats.max_wave_size = max(self.stats.max_wave_size, len(wave))
         setattr(self.stats, reason, getattr(self.stats, reason) + 1)
         self._last_pop = dict(
-            n=len(wave), ids=[id(r) for r in wave], wait=wait_sum,
-            violations=violations, reason=reason,
+            waits=waits, reason=reason,
             prev_max_wait=prev_max_wait, prev_max_size=prev_max_size,
         )
         return wave
 
+    def peek_pending(self, n: int | None = None) -> list[Any]:
+        """The next `n` pending requests (all when ``None``), oldest first,
+        without popping.  Feeds the tier prefetcher (predict the next wave's
+        block union) and the admission probes."""
+        if n is None:
+            return [r for r, _ in self._pending]
+        return [r for r, _ in list(self._pending)[:n]]
+
+    def _launch_reason(self, now: float) -> str | None:
+        """Which stats counter a launch right `now` would book under, or
+        ``None`` to keep accumulating.  Priority: full wave → SLO deadline →
+        cost-fed cheapness → residency.  The probes run LAST (and only past
+        the batching floor): a wave launching on occupancy or deadline
+        anyway should not pay a probe (each probe costs up to one density
+        combine per request until a memo miss short-circuits)."""
+        p = self.policy
+        if len(self._pending) >= p.max_wave:
+            return "full_waves"
+        deadline = self.next_deadline()
+        if (
+            deadline is not None
+            and now >= deadline
+            and len(self._pending) >= p.min_wave
+        ):
+            return "deadline_waves"
+        if not self._pending or len(self._pending) < p.min_wave:
+            return None
+        if self.cost_probe is not None and p.cheap_cost_s is not None:
+            c = self.cost_probe(self.peek_pending(p.max_wave))
+            if c is not None and c <= p.cheap_cost_s:
+                return "cheap_waves"
+        if self.residency_probe is not None and self.residency_probe(
+            self.peek_pending(p.max_wave)
+        ):
+            return "resident_waves"
+        return None
+
     def poll(self, now: float | None = None) -> list[Any] | None:
         """The opportunistic-launch decision (one wave per call).
 
-        A full wave launches immediately; a wave meeting the batching floor
-        whose every pending request would be served entirely from cache
-        tiers launches early (``residency_probe``, zero I/O deferred by
-        waiting); otherwise a wave of everything pending (≤ ``max_wave``)
-        launches iff the oldest deadline has come due and the batching floor
-        ``min_wave`` is met (the floor yields to the deadline only when
-        overridden by ``flush``).
+        A full wave launches immediately; otherwise a wave of everything
+        pending (≤ ``max_wave``) launches iff the oldest deadline has come
+        due and the batching floor ``min_wave`` is met (the floor yields to
+        the deadline only when overridden by ``flush``).  Past the floor,
+        two early-launch probes may fire before the deadline: the cost probe
+        (missed-block I/O priced ≤ ``cheap_cost_s`` — nothing much left to
+        amortize) and the residency probe (the wave would be served entirely
+        from cache tiers — waiting buys zero shared-fetch savings).
 
         Parameters
         ----------
@@ -231,28 +298,44 @@ class AdmissionController:
             one-wave-in-flight rule), or ``None`` to keep accumulating.
         """
         now = self.clock() if now is None else now
-        p = self.policy
-        if len(self._pending) >= p.max_wave:
-            return self._pop_wave(p.max_wave, now, "full_waves")
-        deadline = self.next_deadline()
-        if (
-            deadline is not None
-            and now >= deadline
-            and len(self._pending) >= p.min_wave
-        ):
-            return self._pop_wave(p.max_wave, now, "deadline_waves")
-        # residency peek LAST: a wave about to launch on deadline anyway
-        # should not pay the probe (one density combine per request until
-        # the first memo miss short-circuits)
-        if (
-            self.residency_probe is not None
-            and p.min_wave <= len(self._pending)
-            and self.residency_probe(
-                [r for r, _ in list(self._pending)[: p.max_wave]]
-            )
-        ):
-            return self._pop_wave(p.max_wave, now, "resident_waves")
-        return None
+        reason = self._launch_reason(now)
+        if reason is None:
+            return None
+        return self._pop_wave(self.policy.max_wave, now, reason)
+
+    def claim(
+        self,
+        n: int,
+        now: float | None = None,
+        *,
+        mid_wave: bool = False,
+        force: bool = False,
+    ) -> list[Any]:
+        """Pop up to ``min(n, max_wave)`` requests for a slot pool (0+).
+
+        The continuous serving loop's intake: unlike :meth:`poll` it sizes
+        the pop to the FREE SLOTS the caller actually has, not the policy
+        wave cap.  ``mid_wave=True`` claims unconditionally (a round is
+        already running — freed slots are pure capacity, every launch
+        consideration already paid); it books under ``refill_waves``.
+        ``force=True`` claims unconditionally at an idle flush barrier
+        (books under ``flush_waves``).  Otherwise the normal
+        :meth:`_launch_reason` policy gates the claim, so an idle pool still
+        accumulates small waves exactly like the drain path would.
+        """
+        if n <= 0 or not self._pending:
+            return []
+        now = self.clock() if now is None else now
+        n = min(n, self.policy.max_wave)
+        if mid_wave:
+            reason = "refill_waves"
+        elif force:
+            reason = "flush_waves"
+        else:
+            reason = self._launch_reason(now)
+            if reason is None:
+                return []
+        return self._pop_wave(n, now, reason)
 
     def drain_ready(self, now: float | None = None) -> list[list[Any]]:
         """Launch every wave that is ready right now (0+ waves)."""

@@ -33,6 +33,24 @@ set is filtered through real :class:`~repro.core.block_cache.BlockLRUCache`
 residency — a wave whose needs are covered by cache residency alone performs
 0 store reads and 0 store gathers (``last_wave_stats`` reports the per-wave
 transfer/residency accounting).
+
+**Continuous batching** (:meth:`ServeEngine.step` / :meth:`run_continuous`)
+replaces the drain-the-wave loops above with one slot-level loop: a
+:class:`SlotScheduler` owns a fixed pool of ``max_slots`` slots, requests
+join between refill rounds and leave the instant their k rows (or EOS) are
+satisfied, and freed slots are refilled from the admission queue *mid-wave*
+(``AdmissionController.claim``) — for both exemplar any-k requests and LM
+decode requests, behind the same ``step()`` tick.  A finished query never
+holds its slot while stragglers refill, which is where the p99/SLO win over
+``run_until_drained`` comes from under sustained traffic
+(``benchmarks/bench_multi_query.py --serving``).  Per-request results stay
+byte-identical to solo runs — rows of a wave are planned independently
+(:class:`repro.core.multi_query.DeviceWave`), so batching changes the I/O
+schedule, never the bytes.  With ``exemplar_prefetch=True`` the loop also
+warms the *predicted next wave* (``repro.storage.prefetch.TierPrefetcher``)
+into tier 0 while the current round plans, and
+``AdmissionPolicy.cheap_cost_s`` arms the cost-fed launch gate
+(``repro.storage.prefetch.make_missed_cost_probe``).
 """
 from __future__ import annotations
 
@@ -72,10 +90,136 @@ class ExemplarRequest:
     done: bool = False
 
 
+def _merge_lm_cache_rows(cache, joined, row_mask: np.ndarray):
+    """Graft joiner batch rows from `joined` (a freshly prefilled cache)
+    into the live decode cache.  Every decode-cache leaf is laid out
+    ``[n_layers, batch, ...]`` (:func:`repro.models.decode.init_cache` —
+    conv/ssd/k/v alike), so one ``[batch]`` mask broadcast at axis 1 splices
+    per-slot state; incumbent rows pass through untouched (batch rows are
+    independent, nothing can leak across)."""
+    mask = jnp.asarray(np.asarray(row_mask, bool))
+
+    def merge(a, b):
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (a.ndim - 2))
+        return jnp.where(m, b, a)
+
+    return jax.tree.map(merge, cache, joined)
+
+
+class SlotScheduler:
+    """A fixed pool of serving slots with join/leave bookkeeping.
+
+    The continuous loop's occupancy ledger: every round ticks
+    ``busy_slot_rounds`` by the number of occupied slots, so
+    :attr:`occupancy` is the busy-slot fraction per round — the steady-state
+    health metric the serving smoke asserts ≥ 0.9.  Slot items are opaque
+    (the exemplar loop stores ``(request, refill_state)`` pairs).
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self.slots: list[Any] = [None] * n_slots
+        self.joins = 0
+        self.leaves = 0
+        self.rounds = 0
+        self.busy_slot_rounds = 0
+
+    @property
+    def busy(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def busy_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def join(self, item: Any) -> int:
+        """Seat `item` in the lowest free slot; returns the slot index."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = item
+                self.joins += 1
+                return i
+        raise ValueError("no free slot")
+
+    def leave(self, slot: int) -> Any:
+        item = self.slots[slot]
+        if item is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        self.leaves += 1
+        return item
+
+    def tick(self) -> None:
+        """Account one executed round at the current occupancy."""
+        self.rounds += 1
+        self.busy_slot_rounds += self.busy
+
+    @property
+    def occupancy(self) -> float:
+        """Busy-slot fraction per executed round, pool lifetime."""
+        if self.rounds == 0:
+            return 0.0
+        return self.busy_slot_rounds / (self.rounds * self.n_slots)
+
+
+class _ExemplarLoop:
+    """Mutable state of the continuous exemplar loop: the slot pool, the
+    (optional) device-resident wave, and the loop-lifetime first-touch
+    ledger.  Rebuilt whenever the serving engine is pointed at a different
+    any-k engine; the device wave alone is rebuilt when the engine's store
+    is swapped (append) — occupants re-join with their refill state
+    intact."""
+
+    def __init__(self, engine, n_slots: int, device: bool):
+        self.engine = engine
+        self.sched = SlotScheduler(n_slots)
+        self.device = device
+        self.store = engine.store
+        self.dwave = None
+        if device:
+            self._build_dwave()
+        self.touched: list[int] = []
+        self.touched_set: set[int] = set()
+
+    def _build_dwave(self) -> None:
+        from repro.core.multi_query import DeviceWave
+
+        self.dwave = DeviceWave(
+            self.engine,
+            self.sched.n_slots,
+            default_algo="auto",
+            planner=getattr(self.engine, "distributed", None),
+        )
+        self.store = self.engine.store
+
+    def sync_store(self) -> None:
+        """Store swapped under us (append grew it): rebuild the device wave
+        against the new λ and re-seat the occupants — their exclusion sets
+        and needs carry over, the device combined rows recompute against the
+        fresh densities on the next round's join flush."""
+        if self.engine.store is self.store:
+            return
+        if self.device:
+            old = self.dwave
+            self._build_dwave()
+            for slot in self.sched.busy_slots():
+                _, st = self.sched.slots[slot]
+                self.dwave.join(slot, st)
+            del old
+        else:
+            self.store = self.engine.store
+        # block ids are stable under append, but invalidated blocks will be
+        # re-read on demand; the first-touch ledger stays (accounting only)
+
+
 class ServeEngine:
     def __init__(
         self,
-        cfg: ArchConfig,
+        cfg: ArchConfig | None,
         params: Any,
         max_slots: int = 4,
         max_seq: int = 256,
@@ -87,6 +231,7 @@ class ServeEngine:
         exemplar_mesh=None,
         exemplar_device: bool = False,
         exemplar_residency: bool = False,
+        exemplar_prefetch: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -113,6 +258,12 @@ class ServeEngine:
         # residency launches never fire and waves use full/deadline policy
         # (see repro.storage.residency's module docstring).
         self.exemplar_residency = exemplar_residency
+        # when set, the continuous loop runs a TierPrefetcher
+        # (repro.storage.prefetch): each tick predicts the pending requests'
+        # round-0 block union from the plan memo and promotes it into tier 0
+        # while the current round is still planning, so the predicted wave's
+        # first fetch is a pure tier hit
+        self.exemplar_prefetch = exemplar_prefetch
         # per-wave accounting of the most recent exemplar wave (transfer
         # ledger + BlockLRUCache residency feed); see pump_exemplar_requests
         self.last_wave_stats: dict | None = None
@@ -122,12 +273,20 @@ class ServeEngine:
             exemplar_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
         )
         self._rid = itertools.count()
-        self._decode = jax.jit(
-            lambda p, c, t, pos: D.decode_step(p, c, t, pos, cfg, rules)
-        )
-        self._prefill = jax.jit(
-            lambda p, toks: D.prefill(p, toks, cfg, rules, max_seq=max_seq)
-        )
+        self._exemplar_loop: _ExemplarLoop | None = None
+        self._prefetcher = None  # (engine, TierPrefetcher) cache
+        self._lm: dict | None = None  # continuous LM wave: cache/pos/slots
+        if cfg is None:
+            # exemplar-only serving (no LM): step()/run_continuous drive the
+            # any-k slot loop first-class, the LM tick is a no-op
+            self._decode = self._prefill = None
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, pos: D.decode_step(p, c, t, pos, cfg, rules)
+            )
+            self._prefill = jax.jit(
+                lambda p, toks: D.prefill(p, toks, cfg, rules, max_seq=max_seq)
+            )
 
     def submit(self, prompt, max_new_tokens: int = 32) -> Request:
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens)
@@ -200,6 +359,53 @@ class ServeEngine:
             adm.submit(q.popleft())
         return adm
 
+    def _install_admission_probes(self, engine, adm: AdmissionController) -> None:
+        """Wire the engine-bound launch probes onto the controller: the
+        residency probe (``exemplar_residency``) and the cost probe (armed
+        by ``AdmissionPolicy.cheap_cost_s``).  Probes memoize template row
+        bytes, so ONE probe per engine is cached across ticks; pointing the
+        serving engine at a different any-k engine rebuilds them."""
+        if getattr(self, "exemplar_residency", False):
+            # one probe per engine, kept across ticks: the probe memoizes
+            # template row bytes, and it must peek THIS engine's memo/tiers
+            cached = getattr(self, "_residency_probe", None)
+            if cached is None or cached[0] is not engine:
+                from repro.storage.residency import make_residency_probe
+
+                cached = (engine, make_residency_probe(engine))
+                self._residency_probe = cached
+            adm.residency_probe = cached[1]
+        elif getattr(self, "_residency_probe", None) is not None:
+            # flag flipped off: uninstall, so polls stop paying the peek and
+            # resident launches stop firing
+            self._residency_probe = None
+            adm.residency_probe = None
+        if adm.policy.cheap_cost_s is not None:
+            cached = getattr(self, "_cost_probe", None)
+            if cached is None or cached[0] is not engine:
+                from repro.storage.prefetch import make_missed_cost_probe
+
+                cached = (engine, make_missed_cost_probe(engine))
+                self._cost_probe = cached
+            adm.cost_probe = cached[1]
+        elif getattr(self, "_cost_probe", None) is not None:
+            self._cost_probe = None
+            adm.cost_probe = None
+
+    def _tier_prefetcher(self, engine):
+        """The loop's :class:`~repro.storage.prefetch.TierPrefetcher`, one
+        per engine (it registers a store invalidation listener and owns the
+        speculative-hit ledger); ``None`` unless ``exemplar_prefetch``."""
+        if not getattr(self, "exemplar_prefetch", False):
+            return None
+        cached = getattr(self, "_prefetcher", None)
+        if cached is None or cached[0] is not engine:
+            from repro.storage.prefetch import TierPrefetcher
+
+            cached = (engine, TierPrefetcher(engine))
+            self._prefetcher = cached
+        return cached[1]
+
     def submit_exemplar_request(self, predicates, k: int, op: str = "and") -> ExemplarRequest:
         """Admit an exemplar lookup under the SLO policy; it rides in the next
         wave that launches (full wave, SLO deadline, or drain barrier)."""
@@ -236,6 +442,13 @@ class ServeEngine:
         # "<tier>.<counter>") when the engine runs a repro.storage.TierStack,
         # None on a flat LRU — benchmarks and tests assert placement
         # behavior with it, not just totals.
+        # slot_occupancy: busy-slot fraction per refill round of this wave —
+        # under wave drain a satisfied query still holds its slot, so this is
+        # the number the continuous loop (step()) exists to push toward 1.0
+        apr = getattr(batch, "active_per_round", None) or []
+        occ = (
+            sum(apr) / (len(apr) * max(self.max_slots, 1)) if apr else 0.0
+        )
         self.last_wave_stats = {
             "wave_size": len(wave),
             "rounds": batch.rounds,
@@ -244,6 +457,8 @@ class ServeEngine:
             "cache_hits": batch.cache_hits,
             "unique_blocks": int(batch.unique_blocks_fetched.size),
             "tiers": batch.tier_stats,
+            "slot_occupancy": min(occ, 1.0),
+            "modeled_store_io_s": batch.modeled_store_io_s,
         }
         for req, res in zip(wave, batch.results):
             req.result = res
@@ -271,21 +486,7 @@ class ServeEngine:
         transfer/residency ledger.  Returns the requests completed by this
         tick."""
         adm = self._exemplar_admission()
-        if getattr(self, "exemplar_residency", False):
-            # one probe per engine, kept across ticks: the probe memoizes
-            # template row bytes, and it must peek THIS engine's memo/tiers
-            cached = getattr(self, "_residency_probe", None)
-            if cached is None or cached[0] is not engine:
-                from repro.storage.residency import make_residency_probe
-
-                cached = (engine, make_residency_probe(engine))
-                self._residency_probe = cached
-            adm.residency_probe = cached[1]
-        elif getattr(self, "_residency_probe", None) is not None:
-            # flag flipped off: uninstall, so polls stop paying the peek and
-            # resident launches stop firing
-            self._residency_probe = None
-            adm.residency_probe = None
+        self._install_admission_probes(engine, adm)
         done: list[ExemplarRequest] = []
         while True:
             # one wave at a time: if a wave's engine call fails, the waves
@@ -309,3 +510,291 @@ class ServeEngine:
                 return done
             self._run_exemplar_wave(engine, wave)
             done.extend(wave)
+
+    # ------------------------------------------------- continuous batching
+    def exemplar_tick(
+        self, engine, now: float | None = None, drain: bool = False
+    ) -> list[ExemplarRequest]:
+        """One round of the continuous exemplar loop.
+
+        The slot-level replacement for :meth:`pump_exemplar_requests`'s
+        drain-the-wave: freed slots are refilled from the admission queue
+        **mid-wave** (``AdmissionController.claim(mid_wave=True)`` — a round
+        is already running, freed slots are pure capacity), joiners enter
+        the device-resident wave between rounds via one batched scatter
+        (:class:`repro.core.multi_query.DeviceWave`), exactly ONE refill
+        round executes, and every slot whose k rows are satisfied leaves
+        immediately with its :class:`~repro.core.engine.QueryResult`.  An
+        idle pool claims under the normal launch policy
+        (full/deadline/cheap/resident), so small waves still accumulate;
+        ``drain=True`` makes an idle claim unconditional (flush barrier
+        semantics for :meth:`run_continuous`).
+
+        Byte-identity: slot rows plan independently, so each request's
+        refill trajectory — and therefore its rows — is identical to a solo
+        ``any_k`` run against the same store/cost state; batching moves I/O,
+        never bytes.  ``last_wave_stats`` carries this round's ledger
+        (``slot_occupancy``, transfer count, tier deltas,
+        ``modeled_store_io_s`` of demand reads, prefetch stats).  Returns
+        the requests completed this tick.
+        """
+        from repro.core.multi_query import (
+            BatchQuery, _execute_wave, finalize_query_result, new_query_state,
+            plan_round_host,
+        )
+
+        adm = self._exemplar_admission()
+        self._install_admission_probes(engine, adm)
+        mesh = getattr(self, "exemplar_mesh", None)
+        if mesh is not None and getattr(engine, "distributed", None) is None:
+            engine.attach_mesh(mesh)
+        loop = self._exemplar_loop
+        if (
+            loop is None
+            or loop.engine is not engine
+            or loop.sched.n_slots != self.max_slots
+            or loop.device != bool(getattr(self, "exemplar_device", False))
+        ):
+            loop = _ExemplarLoop(
+                engine, self.max_slots, bool(getattr(self, "exemplar_device", False))
+            )
+            self._exemplar_loop = loop
+        loop.sync_store()
+        sched = loop.sched
+        done: list[ExemplarRequest] = []
+        free = sched.free_slots()
+        if free and adm.pending:
+            if sched.busy:
+                wave = adm.claim(len(free), now, mid_wave=True)
+            elif drain:
+                wave = adm.claim(len(free), now, force=True)
+            else:
+                wave = adm.claim(len(free), now)
+            for req in wave:
+                st = new_query_state(BatchQuery(req.predicates, req.k, req.op))
+                if st.done:  # k <= 0: satisfied with zero rows, never seats
+                    req.result = finalize_query_result(engine, st)
+                    req.done = True
+                    done.append(req)
+                    continue
+                slot = sched.join((req, st))
+                if loop.dwave is not None:
+                    loop.dwave.join(slot, st)
+        # prefetch overlap: predict the STILL-PENDING requests' round-0
+        # union (they are the next wave) and start warming it now, while
+        # this round plans/executes — its reads land on this tick, OUTSIDE
+        # the demand window below, so the predicted wave's first fetch is a
+        # pure tier hit and its priced I/O is 0
+        pf = self._tier_prefetcher(engine)
+        if pf is not None:
+            pf.drain()
+            pf.kick(adm.peek_pending(self.max_slots))
+        if not sched.busy:
+            return done
+        cache = engine.block_cache
+        hits0 = cache.stats.hits
+        store0 = cache.stats.store_blocks_fetched
+        tier_fn = getattr(cache, "tier_counters", None)
+        tier0 = tier_fn() if tier_fn is not None else None
+        transfers0 = loop.dwave.transfers if loop.dwave is not None else 0
+        touched0 = len(loop.touched)
+        missed: list[np.ndarray] = []  # DEMAND reads only (prefetch ran above)
+        prev_log, cache.fetch_log = cache.fetch_log, missed
+        try:
+            if loop.dwave is not None:
+                active, wave_blocks = loop.dwave.plan_round()
+            else:
+                active = [sched.slots[s][1] for s in sched.busy_slots()]
+                wave_blocks = plan_round_host(
+                    engine, active, "auto", getattr(engine, "distributed", None)
+                )
+            _execute_wave(
+                engine, cache, active, wave_blocks, loop.touched, loop.touched_set
+            )
+        finally:
+            cache.fetch_log = prev_log
+        sched.tick()
+        for slot in sched.busy_slots():
+            req, st = sched.slots[slot]
+            # a state at the refill cap leaves with what it has — exactly
+            # where the solo loop would have stopped (waves < max_refills)
+            if st.done or st.rounds >= engine.max_refills:
+                req.result = finalize_query_result(engine, st)
+                req.done = True
+                sched.leave(slot)
+                if loop.dwave is not None:
+                    loop.dwave.leave(slot)
+                done.append(req)
+        union = (
+            np.unique(np.concatenate(wave_blocks))
+            if any(b.size for b in wave_blocks)
+            else np.asarray([], dtype=np.int64)
+        )
+        if pf is not None:
+            pf.observe_wave(union)
+        self.last_wave_stats = {
+            "wave_size": len(active),
+            "rounds": 1,
+            "device_transfers": (
+                (loop.dwave.transfers - transfers0) if loop.dwave is not None else 0
+            ),
+            "store_blocks_fetched": int(cache.stats.store_blocks_fetched - store0),
+            "cache_hits": int(cache.stats.hits - hits0),
+            "unique_blocks": len(loop.touched) - touched0,
+            "tiers": (
+                {k: v - tier0[k] for k, v in tier_fn().items()}
+                if tier0 is not None
+                else None
+            ),
+            "slot_occupancy": sched.occupancy,
+            "modeled_store_io_s": sum(engine.cost.io_time(m) for m in missed),
+            "pending": adm.pending,
+            "prefetch": pf.stats.snapshot() if pf is not None else None,
+        }
+        return done
+
+    def lm_tick(self) -> list[Request]:
+        """One tick of the continuous LM decode loop.
+
+        First tick of an empty pool prefills a fresh wave exactly like
+        :meth:`_run_wave` (same left-padding, same first argmax token — the
+        token streams are byte-identical to the wave path).  Every later
+        tick first seats eligible queued joiners — a joiner's prompt must
+        fit the shared position counter (``len(prompt) <= pos``): it is
+        left-padded to exactly ``pos``, prefilled as its own batch, and its
+        cache rows grafted into the live wave's (:func:`_merge_lm_cache_rows`
+        — batch rows are independent, so the graft changes nothing for
+        incumbents and gives the joiner the same state a solo run at that
+        padding would) — then decodes ONE step and retires slots on
+        EOS/``max_new_tokens`` immediately, freeing them for the next tick's
+        joiners.  Returns the requests completed this tick.
+        """
+        if self._prefill is None:
+            return []
+        done: list[Request] = []
+        if self._lm is None:
+            if not self.queue:
+                return []
+            wave = self._next_wave()
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.full((self.max_slots, plen), self.pad_id, np.int32)
+            for b, r in enumerate(wave):  # left-pad: align last prompt token
+                toks[b, plen - len(r.prompt):] = r.prompt
+            last, cache = self._prefill(self.params, jnp.asarray(toks))
+            nxt = np.asarray(jnp.argmax(last, axis=-1))
+            slots: list[Request | None] = [None] * self.max_slots
+            for b, r in enumerate(wave):
+                r.out_tokens.append(int(nxt[b]))
+                slots[b] = r
+            self._lm = {"cache": cache, "pos": plen, "slots": slots}
+            return done  # prefill is the tick; first decode lands next tick
+        lm = self._lm
+        pos = int(lm["pos"])
+        slots: list[Request | None] = lm["slots"]
+        free = [b for b, s in enumerate(slots) if s is None]
+        joiners: list[tuple[int, Request]] = []
+        while free and self.queue and len(self.queue[0].prompt) <= pos:
+            req = self.queue.popleft()
+            b = free.pop(0)
+            slots[b] = req
+            joiners.append((b, req))
+        if joiners:
+            toks = np.full((self.max_slots, pos), self.pad_id, np.int32)
+            for b, r in joiners:
+                toks[b, pos - len(r.prompt):] = r.prompt
+            last, cache_j = self._prefill(self.params, jnp.asarray(toks))
+            mask = np.zeros(self.max_slots, bool)
+            for b, _ in joiners:
+                mask[b] = True
+            lm["cache"] = _merge_lm_cache_rows(lm["cache"], cache_j, mask)
+            nxt = np.asarray(jnp.argmax(last, axis=-1))
+            for b, r in joiners:
+                r.out_tokens.append(int(nxt[b]))
+        active = [b for b, s in enumerate(slots) if s is not None]
+        if not active or pos >= self.max_seq - 1:
+            for b in active:  # sequence budget exhausted: retire as-is
+                slots[b].done = True
+                done.append(slots[b])
+                slots[b] = None
+            self._lm = None
+            return done
+        cur = np.full(self.max_slots, self.pad_id, np.int32)
+        for b in active:
+            cur[b] = slots[b].out_tokens[-1]
+        logits, cache = self._decode(
+            self.params, lm["cache"], jnp.asarray(cur), jnp.int32(pos)
+        )
+        lm["cache"] = cache
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        lm["pos"] = pos + 1
+        for b in active:
+            r = slots[b]
+            tok = int(nxt[b])
+            r.out_tokens.append(tok)
+            # retire check only AFTER the decode append — mirrors _run_wave
+            # (max_new_tokens=1 still yields 2 tokens), so the continuous
+            # and wave paths emit identical streams
+            if (self.eos_id is not None and tok == self.eos_id) or len(
+                r.out_tokens
+            ) >= r.max_new_tokens:
+                r.done = True
+                slots[b] = None
+                done.append(r)
+        if all(s is None for s in slots):
+            self._lm = None
+        return done
+
+    def step(
+        self, engine=None, now: float | None = None, drain: bool = False
+    ) -> dict:
+        """One continuous-batching tick over BOTH request kinds: the LM
+        decode pool advances one token (joiners seated first) and, when an
+        any-k `engine` is given, the exemplar pool runs one refill round
+        (freed slots refilled mid-wave).  Returns
+        ``{"lm": [completed Requests], "exemplar": [completed
+        ExemplarRequests]}``."""
+        out = {"lm": [], "exemplar": []}
+        if self._prefill is not None and (self.queue or self._lm is not None):
+            out["lm"] = self.lm_tick()
+        if engine is not None:
+            out["exemplar"] = self.exemplar_tick(engine, now=now, drain=drain)
+        return out
+
+    def run_continuous(self, engine=None, max_ticks: int = 100_000,
+                       drain: bool = True) -> dict:
+        """Tick :meth:`step` until both pools and queues are empty (or the
+        loop stalls — ``drain=False`` with a holding admission policy).
+        The continuous counterpart of :meth:`run_until_drained` +
+        :meth:`drain_exemplar_requests`; returns all completions keyed like
+        :meth:`step`."""
+        lm_done: list[Request] = []
+        ex_done: list[ExemplarRequest] = []
+        adm = self._exemplar_admission() if engine is not None else None
+
+        def signature():
+            loop = self._exemplar_loop
+            return (
+                adm.pending if adm is not None else 0,
+                loop.sched.rounds if loop is not None else 0,
+                len(self.queue),
+                int(self._lm["pos"]) if self._lm is not None else -1,
+            )
+
+        for _ in range(max_ticks):
+            lm_busy = self._prefill is not None and (
+                bool(self.queue) or self._lm is not None
+            )
+            loop = self._exemplar_loop
+            ex_busy = engine is not None and (
+                adm.pending > 0
+                or (loop is not None and loop.engine is engine and loop.sched.busy > 0)
+            )
+            if not lm_busy and not ex_busy:
+                break
+            sig = signature()
+            out = self.step(engine, drain=drain)
+            lm_done.extend(out["lm"])
+            ex_done.extend(out["exemplar"])
+            if not out["lm"] and not out["exemplar"] and signature() == sig:
+                break  # stalled: nothing moved and nothing finished
+        return {"lm": lm_done, "exemplar": ex_done}

@@ -11,8 +11,15 @@ Public surface:
 * :func:`~repro.storage.residency.wave_is_resident` /
   :func:`~repro.storage.residency.make_residency_probe` — the stat-free
   residency peek behind admission's early launch of fully-resident waves.
+* :class:`~repro.storage.prefetch.TierPrefetcher` /
+  :func:`~repro.storage.prefetch.predicted_wave_blocks` /
+  :func:`~repro.storage.prefetch.make_missed_cost_probe` — memo-driven
+  next-wave prefetch into tier 0 and the cost-fed admission probe.
 """
 from repro.storage.policy import CostAwarePolicy, PlacementPolicy, RecencyPolicy
+from repro.storage.prefetch import (
+    PrefetchStats, TierPrefetcher, make_missed_cost_probe, predicted_wave_blocks,
+)
 from repro.storage.residency import make_residency_probe, wave_is_resident
 from repro.storage.tiers import Tier, TierStack, TierStats, make_tier_stack
 
@@ -25,5 +32,9 @@ __all__ = [
     "TierStats",
     "make_tier_stack",
     "make_residency_probe",
+    "make_missed_cost_probe",
+    "predicted_wave_blocks",
+    "PrefetchStats",
+    "TierPrefetcher",
     "wave_is_resident",
 ]

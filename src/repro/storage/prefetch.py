@@ -1,0 +1,329 @@
+"""Memo-driven tier prefetch: warm the predicted next wave while the
+current one is still planning.
+
+The serving loop knows who is waiting (``AdmissionController.peek_pending``)
+long before their wave launches, and the :class:`~repro.core.block_cache.
+PlanOrderCache` memo can often say *which blocks* that wave's round 0 will
+read — the same stat-free peek residency admission uses
+(:func:`repro.storage.residency._round0_plan_from_memo`).  The
+:class:`TierPrefetcher` closes the loop: each serving tick it predicts the
+pending requests' round-0 block union, subtracts what is already resident at
+the target tier, and promotes the rest into tier 0 — so by the time those
+requests claim slots, their first fetch is a pure tier hit and the wave
+reads **zero backing-store blocks** on round 0.
+
+Two modes:
+
+* **synchronous** (default): ``kick`` promotes inline via
+  :meth:`TierStack.prefetch` — deterministic, what simulations and tests
+  drive.  The overlap is still real in the modeled-cost sense: prefetch
+  reads happen on ticks *before* the predicted wave runs, outside the
+  priced demand window.
+* **asynchronous** (``async_fetch=True``): ``kick`` hands the backing-store
+  read to a daemon thread (the only threaded part — it touches nothing but
+  ``store.fetch``) and ``drain`` admits completed reads on a later tick, so
+  wall-clock store latency overlaps device planning.
+
+Correctness under appends: the prefetcher registers an invalidation
+listener (:meth:`~repro.data.block_store.BlockStore.
+register_invalidation_listener`), so blocks dirtied by ``append_records``
+are forgotten — both the speculative hit ledger and any in-flight reads —
+exactly as :class:`~repro.storage.tiers.TierStack` drops its own residents.
+A prediction is only ever a *plan* peek; a wrong or stale one costs
+bandwidth, never correctness (demand reads re-fetch whatever is missing).
+
+Cost-fed admission rides the same memo: :func:`make_missed_cost_probe`
+prices a pending wave by ``TierStack.effective_io_time`` of its predicted
+blocks that are NOT resident, feeding
+``AdmissionPolicy.cheap_cost_s`` (see ``repro.serving.admission``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.storage.residency import _ROW_CACHE_MAX, _round0_plan_from_memo
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    kicks: int = 0  # prediction passes that found at least one request
+    predicted_requests: int = 0  # pending requests whose plan was memoized
+    issued: int = 0  # blocks handed to the fetch/promote stage
+    fetched: int = 0  # blocks physically read from the backing store
+    hits: int = 0  # prefetched blocks later touched by a demand wave
+    invalidated: int = 0  # prefetched blocks dirtied by append before use
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.issued if self.issued else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "kicks": self.kicks,
+            "predicted_requests": self.predicted_requests,
+            "issued": self.issued,
+            "fetched": self.fetched,
+            "hits": self.hits,
+            "invalidated": self.invalidated,
+            "hit_rate": self.hit_rate,
+        }
+
+
+def predicted_wave_blocks(
+    engine, requests: Sequence, row_cache: dict | None = None
+) -> tuple[np.ndarray, int]:
+    """The union of round-0 blocks the plan memo predicts for `requests`.
+
+    Returns ``(ids ascending int64, n_predicted)`` where ``n_predicted``
+    counts the requests whose plan was actually memoized — unpredicted
+    requests simply contribute nothing (partial predictions still warm the
+    blocks we do know about).  Stat-free and side-effect-free, same
+    contract as the residency probe.
+    """
+    union: list[np.ndarray] = []
+    n_pred = 0
+    for r in requests:
+        plan = _round0_plan_from_memo(
+            engine, r.predicates, r.k, getattr(r, "op", "and"), row_cache
+        )
+        if plan is None:
+            continue
+        n_pred += 1
+        if plan.size:
+            union.append(np.asarray(plan, dtype=np.int64))
+    if not union:
+        return np.asarray([], dtype=np.int64), n_pred
+    return np.unique(np.concatenate(union)), n_pred
+
+
+def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
+    """Bind a cost probe for ``AdmissionController(cost_probe=...)``: price a
+    pending wave by the effective I/O time of its *missed* predicted blocks.
+
+    Returns ``None`` (unpriceable) unless EVERY request's round-0 plan is
+    memoized — a partial prediction would under-price the wave and launch
+    it early on missing information.  With a
+    :class:`~repro.storage.tiers.TierStack` attached the price is
+    ``effective_io_time`` of the blocks not resident in any tier (backed by
+    the engine's cost model); with a flat LRU it is ``cost.io_time`` of the
+    non-cached blocks.  A fully-resident wave prices at 0.0 — the cost gate
+    then subsumes the residency probe whenever ``cheap_cost_s >= 0``.
+
+    Keep ONE probe per engine alive across polls (it memoizes template row
+    bytes like :func:`~repro.storage.residency.make_residency_probe`).
+    """
+    row_cache: dict = {}
+
+    def probe(requests: Sequence) -> float | None:
+        reqs = list(requests)
+        if not reqs:
+            return None
+        union, n_pred = predicted_wave_blocks(engine, reqs, row_cache)
+        if n_pred < len(reqs):
+            return None
+        cache = engine.block_cache
+        if hasattr(cache, "effective_io_time") and hasattr(cache, "residency_tier"):
+            if union.size == 0:
+                return 0.0
+            missed = union[cache.residency_tier(union) >= len(cache.tiers)]
+            return float(cache.effective_io_time(missed, backing=engine.cost))
+        missed = np.asarray(
+            [int(b) for b in union if int(b) not in cache], dtype=np.int64
+        )
+        return float(engine.cost.io_time(missed))
+
+    return probe
+
+
+class _InflightFetch:
+    """One async backing-store read owned by the daemon fetch thread."""
+
+    def __init__(self, ids: np.ndarray):
+        self.ids = ids
+        self.done = threading.Event()
+        self.slabs: dict[int, tuple] | None = None
+        self.stale: set[int] = set()  # ids invalidated while in flight
+
+
+class TierPrefetcher:
+    """Promote the predicted next wave's block union into a cache tier.
+
+    Parameters
+    ----------
+    engine : repro.core.engine.NeedleTailEngine
+        Predictions peek its ``plan_cache``; promotions go through its
+        ``block_cache`` (a :class:`~repro.storage.tiers.TierStack` — a flat
+        LRU degrades to plain ``ensure``, still a useful warm-up).
+    tier : int
+        Target tier for promoted blocks (0 = hottest).
+    max_blocks : int
+        Per-kick cap on issued blocks — a mispredicted giant wave must not
+        flush the hot tier.
+    async_fetch : bool
+        Fetch misses on a daemon thread (see module docstring).  Default
+        synchronous for determinism.
+
+    The prefetcher registers itself as a store invalidation listener; keep
+    it alive as long as the serving loop (``ServeEngine`` owns one).
+    ``append_records`` carries listeners over to the grown store, so append
+    invalidation keeps working without re-registration.
+    """
+
+    def __init__(self, engine, tier: int = 0, max_blocks: int = 512,
+                 async_fetch: bool = False):
+        self.engine = engine
+        self.tier = tier
+        self.max_blocks = max_blocks
+        self.async_fetch = async_fetch
+        self.stats = PrefetchStats()
+        self.prefetched: set[int] = set()  # issued, not yet demand-touched
+        self._inflight: list[_InflightFetch] = []
+        self._row_cache: dict = {}
+        self._store = None
+        self._sync_store()
+
+    # ------------------------------------------------------------ invalidation
+    def _sync_store(self) -> None:
+        """Track the engine's current store: (re)register our invalidation
+        listener when the engine swapped to a store we are not wired to
+        (wholesale replace; plain ``append`` carries listeners over)."""
+        store = self.engine.store
+        if store is self._store:
+            return
+        if self._store is not None:
+            unreg = getattr(self._store, "unregister_invalidation_listener", None)
+            if unreg is not None:
+                unreg(self._on_invalidate)
+        store.register_invalidation_listener(self._on_invalidate)
+        self._store = store
+        # a different store means different bytes: all speculation is stale
+        self.prefetched.clear()
+        self._row_cache.clear()
+
+    def _on_invalidate(self, block_ids: np.ndarray) -> None:
+        """Append dirtied `block_ids`: forget speculative state for them —
+        the TierStack drops its own residents through its own listener."""
+        dirty = {int(b) for b in np.asarray(block_ids).ravel()}
+        gone = self.prefetched & dirty
+        self.stats.invalidated += len(gone)
+        self.prefetched -= dirty
+        for rec in self._inflight:
+            rec.stale |= dirty
+
+    # ------------------------------------------------------------------- kick
+    def kick(self, requests: Sequence) -> int:
+        """Predict `requests`' round-0 union and start warming it.  Returns
+        the number of blocks issued this kick (0 when nothing is predicted
+        or everything is already warm)."""
+        self._sync_store()
+        if not requests:
+            return 0
+        engine = self.engine
+        if len(self._row_cache) >= _ROW_CACHE_MAX:
+            self._row_cache.clear()
+        union, n_pred = predicted_wave_blocks(engine, requests, self._row_cache)
+        if n_pred:
+            self.stats.kicks += 1
+            self.stats.predicted_requests += n_pred
+        if union.size == 0:
+            return 0
+        cache = engine.block_cache
+        inflight = set()
+        for rec in self._inflight:
+            inflight.update(int(b) for b in rec.ids)
+        tiered = hasattr(cache, "residency_tier")
+        if tiered:
+            tiers = cache.residency_tier(union)
+            want = [
+                int(b) for b, t in zip(union, tiers)
+                if int(t) > self.tier and int(b) not in inflight
+            ]
+        else:
+            want = [int(b) for b in union
+                    if int(b) not in cache and int(b) not in inflight]
+        want = want[: self.max_blocks]
+        if not want:
+            return 0
+        ids = np.asarray(sorted(want), dtype=np.int64)
+        self.stats.issued += int(ids.size)
+        self.prefetched.update(int(b) for b in ids)
+        if self.async_fetch:
+            self._issue_async(ids, tiered)
+        elif tiered:
+            fetched0 = cache.stats.store_blocks_fetched
+            cache.prefetch(self._store, ids, self.tier)
+            self.stats.fetched += int(cache.stats.store_blocks_fetched - fetched0)
+        else:
+            fetched0 = cache.stats.store_blocks_fetched
+            cache.ensure(self._store, ids)
+            self.stats.fetched += int(cache.stats.store_blocks_fetched - fetched0)
+        return int(ids.size)
+
+    def _issue_async(self, ids: np.ndarray, tiered: bool) -> None:
+        if tiered:
+            resident = [int(b) for b, t in zip(ids, self.engine.block_cache
+                        .residency_tier(ids)) if int(t) < len(self.engine
+                        .block_cache.tiers)]
+        else:
+            resident = [int(b) for b in ids if int(b) in self.engine.block_cache]
+        miss = np.asarray(sorted(set(int(b) for b in ids) - set(resident)),
+                          dtype=np.int64)
+        rec = _InflightFetch(ids)
+        self._inflight.append(rec)
+        store = self._store
+
+        def worker():
+            slabs: dict[int, tuple] = {}
+            if miss.size:
+                bd, bm, bv = store.fetch(miss)
+                for off, b in enumerate(miss):
+                    slabs[int(b)] = (
+                        np.array(bd[off]), np.array(bm[off]), np.array(bv[off])
+                    )
+            rec.slabs = slabs
+            rec.done.set()
+
+        threading.Thread(target=worker, daemon=True).start()
+
+    def drain(self, wait: bool = False) -> int:
+        """Admit completed async reads into the tier (promoting residents
+        too); in-flight reads stay queued for a later drain unless `wait`.
+        Returns the number of blocks admitted/promoted this call."""
+        self._sync_store()
+        moved = 0
+        still: list[_InflightFetch] = []
+        cache = self.engine.block_cache
+        for rec in self._inflight:
+            if wait:
+                rec.done.wait()
+            if not rec.done.is_set():
+                still.append(rec)
+                continue
+            live = np.asarray(
+                [int(b) for b in rec.ids if int(b) not in rec.stale],
+                dtype=np.int64,
+            )
+            slabs = {b: s for b, s in (rec.slabs or {}).items()
+                     if b not in rec.stale}
+            self.stats.fetched += len(slabs)
+            if live.size and hasattr(cache, "prefetch"):
+                moved += cache.prefetch(self._store, live, self.tier, slabs=slabs)
+            elif live.size:
+                moved += int(cache.ensure(self._store, live))
+        self._inflight = still
+        return moved
+
+    # ------------------------------------------------------------------ credit
+    def observe_wave(self, block_ids) -> int:
+        """Credit speculative hits: `block_ids` a demand wave just touched.
+        Each prefetched block is credited once (one-shot: it is removed from
+        the outstanding set).  Returns hits credited this wave."""
+        ids = {int(b) for b in np.asarray(block_ids, dtype=np.int64).ravel()}
+        hit = self.prefetched & ids
+        self.stats.hits += len(hit)
+        self.prefetched -= hit
+        return len(hit)

@@ -594,6 +594,61 @@ class TierStack:
         self._fetch_and_admit(store, miss)
         return int(miss.size)
 
+    def prefetch(self, store: "BlockStore", block_ids, tier: int = 0,
+                 slabs: dict | None = None) -> int:
+        """Speculatively promote `block_ids` into `tier` ahead of demand
+        (the serving loop's next-wave warm-up: ``repro.storage.prefetch``).
+
+        Blocks already resident at or above `tier` are untouched; residents
+        below it are promoted (``promotions_in`` on the landing tier);
+        misses are read from the backing store — or taken from `slabs`
+        (``block_id -> (dims, meas, valid)`` host arrays, the async
+        prefetch thread's completed reads) without touching the store — and
+        admitted at `tier` (normal victim/demotion cascade applies, so a
+        too-hot prefetch can never wedge the tier).  Speculative by design:
+        **no hit/miss accounting** — demand counters stay meaningful, only
+        ``store_fetch_calls`` / ``store_blocks_fetched`` and the
+        ``fetch_log`` record the physical reads.  Returns how many blocks
+        are resident anywhere in the stack afterwards (a slab the budget
+        immediately re-evicted does not count).
+        """
+        if not (0 <= tier < len(self.tiers)):
+            raise ValueError(f"tier {tier} out of range")
+        ids = np.asarray(block_ids, dtype=np.int64).ravel()
+        todo: list[int] = []
+        seen: set[int] = set()
+        for b in ids:
+            b = int(b)
+            if b not in seen:
+                seen.add(b)
+                todo.append(b)
+        miss: list[int] = []
+        for b in todo:
+            at = self._find(b)
+            if at is None:
+                miss.append(b)
+            elif at > tier:
+                entry = self.tiers[at].pop(b)
+                self._place(tier, b, entry, how="promote")
+        if miss:
+            have = {b: slabs[b] for b in miss if slabs and b in slabs}
+            need = np.asarray(sorted(set(miss) - set(have)), dtype=np.int64)
+            if need.size:
+                if self.fetch_log is not None:
+                    self.fetch_log.append(need)
+                bd, bm, bv = store.fetch(need)  # ascending §4.1 order
+                self.stats.store_fetch_calls += 1
+                self.stats.store_blocks_fetched += int(need.size)
+                for off, b in enumerate(need):
+                    have[int(b)] = (
+                        np.array(bd[off]), np.array(bm[off]), np.array(bv[off])
+                    )
+            for b in sorted(have):
+                slab = have[b]
+                nbytes = sum(int(np.asarray(a).nbytes) for a in slab)
+                self._place(tier, int(b), (*slab, nbytes), how="admit")
+        return sum(1 for b in todo if self._find(b) is not None)
+
     def get_many(
         self, store: "BlockStore", block_ids
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -1,0 +1,364 @@
+"""Continuous-batching serving loop: slot-level join/leave, byte-identity to
+the solo oracle, mid-wave refill under queue pressure, prefetch invalidation
+on append, and the cost-fed admission gate.
+
+The loop under test is ``ServeEngine.exemplar_tick`` (one refill round per
+tick, freed slots refilled from the admission queue between rounds) plus its
+admission/prefetch plumbing: ``AdmissionController.claim`` (mid-wave pops and
+per-request requeue rollback), ``repro.storage.prefetch.TierPrefetcher``
+(memo-predicted tier warming with append invalidation), and the
+``cheap_cost_s`` cost gate fed by ``make_missed_cost_probe``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.data.block_store import Table, build_block_store
+from repro.data.synthetic import make_clustered_table
+from repro.serving.admission import AdmissionController, AdmissionPolicy
+from repro.serving.engine import ServeEngine, SlotScheduler
+
+pytestmark = pytest.mark.serving
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _underdelivery_table():
+    """30 decoy blocks where A0/A1 alternate rows (estimated AND density
+    0.25, actual 0) and 10 tail blocks holding the real joint matches —
+    the joint query under-delivers round 0 and must refill."""
+    rng = np.random.default_rng(0)
+    rpb = 100
+    n = 40 * rpb
+    a0 = np.zeros(n, np.int32)
+    a1 = np.zeros(n, np.int32)
+    for b in range(30):
+        lo = b * rpb
+        a0[lo : lo + rpb : 2] = 1
+        a1[lo + 1 : lo + rpb : 2] = 1
+    for b in range(30, 40):
+        lo = b * rpb
+        a0[lo : lo + 30] = 1
+        a1[lo : lo + 30] = 1
+    return Table(
+        dims=np.stack([a0, a1], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    ), rpb
+
+
+@pytest.fixture(scope="module")
+def clustered_store():
+    t = make_clustered_table(num_records=12_000, num_dims=4, density=0.15,
+                             seed=5)
+    return build_block_store(t, records_per_block=64)
+
+
+def _serve(max_slots, clock=None, **kw):
+    """Exemplar-only serving engine (no LM) around a fixed slot pool."""
+    return ServeEngine(
+        None, None, max_slots=max_slots,
+        exemplar_policy=AdmissionPolicy(slo_s=10.0, max_wave=max_slots),
+        clock=clock or FakeClock(), **kw,
+    )
+
+
+def _drive(serve, eng, reqs, max_ticks=64):
+    """Tick until every request completes; returns ticks executed."""
+    ticks = 0
+    while not all(r.done for r in reqs):
+        serve.exemplar_tick(eng, drain=True)
+        ticks += 1
+        assert ticks <= max_ticks, "continuous loop did not converge"
+    return ticks
+
+
+def _assert_solo_identical(store, reqs):
+    """Every request's rows byte-identical to a fresh cache-less solo
+    ``any_k`` — continuous scheduling moves I/O and time, never bytes."""
+    ref = NeedleTailEngine(store, cache_bytes=0)
+    for r in reqs:
+        solo = ref.any_k(r.predicates, r.k, op=r.op, algo="auto")
+        np.testing.assert_array_equal(r.result.record_block, solo.record_block)
+        np.testing.assert_array_equal(r.result.record_row, solo.record_row)
+        np.testing.assert_array_equal(r.result.measures, solo.measures)
+        assert r.result.plan_rounds == solo.plan_rounds
+
+
+# ------------------------------------------------- (a) oracle byte-identity
+
+
+@pytest.mark.parametrize("device", (False, True))
+def test_continuous_rows_byte_identical_to_solo_anyk(device):
+    """Mixed wave with a multi-round under-deliverer, more requests than
+    slots: every completion matches the solo oracle byte for byte, on both
+    the host and the device plan path (which must also keep the ≤1
+    device→host transfer per tick ledger)."""
+    t, rpb = _underdelivery_table()
+    store = build_block_store(t, records_per_block=rpb)
+    eng = NeedleTailEngine(store)
+    serve = _serve(2, exemplar_device=device)
+    reqs = [
+        serve.submit_exemplar_request([(0, 1), (1, 1)], 250),  # refills
+        serve.submit_exemplar_request([(0, 1)], 100),
+        serve.submit_exemplar_request([(1, 1)], 100),
+        serve.submit_exemplar_request([(0, 1)], 40),
+    ]
+    while not all(r.done for r in reqs):
+        serve.exemplar_tick(eng, drain=True)
+        st = serve.last_wave_stats
+        if st is not None:
+            assert st["device_transfers"] <= 1
+    _assert_solo_identical(store, reqs)
+    assert reqs[0].result.plan_rounds > 1  # the adversarial one really refilled
+    assert reqs[0].result.num_records >= 250
+
+
+def test_continuous_matches_solo_on_clustered(clustered_store):
+    eng = NeedleTailEngine(clustered_store)
+    serve = _serve(3)
+    reqs = [
+        serve.submit_exemplar_request([(0, 1), (2, 1)], 300),
+        serve.submit_exemplar_request([(0, 1)], 50),
+        serve.submit_exemplar_request([(1, 1), (3, 1)], 200, op="or"),
+        serve.submit_exemplar_request([(2, 1)], 64),
+        serve.submit_exemplar_request([(3, 1)], 16),
+    ]
+    _drive(serve, eng, reqs)
+    _assert_solo_identical(clustered_store, reqs)
+
+
+# ------------------------------------------- (b) mid-wave refill of freed slots
+
+
+def test_freed_slot_reoccupied_next_round_under_pressure():
+    """With a straggler holding one slot, a slot freed at round r must be
+    re-occupied at round r+1 while the queue is non-empty: the planned wave
+    size stays at max_slots, and the controller books the pops as
+    ``refill_waves`` (mid-wave claims, not policy launches)."""
+    t, rpb = _underdelivery_table()
+    eng = NeedleTailEngine(build_block_store(t, records_per_block=rpb))
+    serve = _serve(2)
+    adm = serve.exemplar_admission
+    straggler = serve.submit_exemplar_request([(0, 1), (1, 1)], 250)
+    shorts = [serve.submit_exemplar_request([(0, 1)], 60) for _ in range(3)]
+    wave_sizes = []
+    while not all(r.done for r in [straggler, *shorts]):
+        backlog_before = adm.pending
+        serve.exemplar_tick(eng, drain=True)
+        wave_sizes.append(serve.last_wave_stats["wave_size"])
+        if backlog_before > 0:
+            # queue pressure: the freed slot was refilled before planning
+            assert serve.last_wave_stats["wave_size"] == 2
+    assert adm.stats.refill_waves >= 1  # pops happened mid-wave
+    assert wave_sizes[0] == 2
+    # the straggler outlived every short request, so slots turned over
+    assert straggler.result.plan_rounds > 1
+    _assert_solo_identical(eng.store, [straggler, *shorts])
+
+
+def test_slot_scheduler_occupancy_ledger():
+    sched = SlotScheduler(2)
+    s0 = sched.join("a")
+    sched.tick()  # one round with 1/2 busy
+    s1 = sched.join("b")
+    sched.tick()  # one round with 2/2 busy
+    assert sched.leave(s0) == "a"
+    assert sched.busy == 1 and sched.free_slots() == [s0]
+    assert sched.joins == 2 and sched.leaves == 1 and sched.rounds == 2
+    assert sched.occupancy == pytest.approx(3 / 4)
+    assert sched.join("c") == s0  # freed slot is immediately reusable
+    assert s1 in sched.busy_slots()
+
+
+# -------------------------------------------- (c) prefetch append invalidation
+
+
+def test_prefetched_blocks_invalidated_by_append_like_residents():
+    """A store append dirties the partial tail block; the prefetcher's
+    speculation ledger must drop it exactly like the tiers drop their
+    resident copy — stale speculative blocks never count as warm."""
+    from repro.storage import make_tier_stack
+    from repro.storage.prefetch import TierPrefetcher
+
+    rng = np.random.default_rng(3)
+    rpb = 64
+    n = 6 * rpb - 10  # partial tail block: the append dirties it
+    t = Table(
+        dims=np.stack([np.ones(n, np.int32),
+                       rng.integers(0, 2, n).astype(np.int32)], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    store = build_block_store(t, records_per_block=rpb)
+    stack = make_tier_stack(None, None)
+    eng = NeedleTailEngine(store, tiers=stack)
+    # memoize the round-0 plan over every block (k spans the whole table),
+    # then clear the tiers so the prefetcher has real warming to do
+    eng.any_k_batch([BatchQuery([(0, 1)], n)], algo="auto")
+    stack.clear()
+    pf = TierPrefetcher(eng)
+    pf.kick([BatchQuery([(0, 1)], n)])
+    tail = store.num_blocks - 1
+    assert tail in pf.prefetched and 0 in pf.prefetched
+    assert int(stack.residency_tier(np.asarray([tail]))[0]) < len(stack.tiers)
+
+    extra = Table(dims=np.ones((rpb, 2), np.int32),
+                  measures=rng.normal(size=(rpb, 1)).astype(np.float32),
+                  cards=t.cards)
+    eng.append(extra)  # dirties the tail block, notifies every listener
+    assert tail not in pf.prefetched  # speculation pruned like residency
+    assert pf.stats.invalidated >= 1
+    assert 0 in pf.prefetched  # untouched blocks stay warm
+    assert int(stack.residency_tier(np.asarray([tail]))[0]) == len(stack.tiers)
+    assert int(stack.residency_tier(np.asarray([0]))[0]) < len(stack.tiers)
+
+
+# ------------------------------------------------- (d) cost-fed admission gate
+
+
+def test_cost_fed_policy_launches_cheap_wave_holds_cold_one():
+    """Two single-request waves under a lax deadline: the memoized,
+    tier-resident one prices at ~0 and launches immediately through the
+    ``cheap_cost_s`` gate; the cold (unmemoized) one holds until its SLO
+    deadline forces it out."""
+    from repro.storage import make_tier_stack
+
+    t = make_clustered_table(num_records=8_000, num_dims=4, density=0.2,
+                             seed=11)
+    store = build_block_store(t, records_per_block=64)
+    stack = make_tier_stack(None, None)
+    eng = NeedleTailEngine(store, tiers=stack)
+    clk = FakeClock()
+    serve = ServeEngine(
+        None, None, max_slots=4,
+        exemplar_policy=AdmissionPolicy(slo_s=5.0, max_wave=4,
+                                        cheap_cost_s=1e-4),
+        clock=clk,
+    )
+    adm = serve.exemplar_admission
+    # warm the memo AND the tiers for the hot template
+    eng.any_k_batch([BatchQuery([(0, 1)], 32)], algo="auto")
+
+    hot = serve.submit_exemplar_request([(0, 1)], 32)
+    serve.exemplar_tick(eng)  # idle claim, policy-gated: cheap fires
+    assert hot.done and adm.stats.cheap_waves == 1
+    assert adm.stats.deadline_waves == 0
+
+    cold = serve.submit_exemplar_request([(1, 1), (3, 1)], 500)  # no memo
+    serve.exemplar_tick(eng)
+    assert not cold.done and adm.pending == 1  # unpriceable: held back
+    clk.advance(5.0)  # ... until the SLO deadline comes due
+    while not cold.done:
+        serve.exemplar_tick(eng)
+    assert adm.stats.deadline_waves >= 1
+    _assert_solo_identical(store, [hot, cold])
+
+
+# ----------------------------------- satellite: admission stats requeue rollback
+
+
+def test_partial_requeue_rolls_back_per_request_stats():
+    """Requeuing part of a popped wave must not double-count the requeued
+    requests in served/wait stats while the successfully-served remainder
+    keeps its accounting; the wave itself unwinds only when every request
+    of the pop is returned."""
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=0.1, max_wave=3),
+                              clock=clk)
+    for name in ("a", "b", "c"):
+        adm.submit(name)
+    clk.advance(0.2)
+    wave = adm.poll()
+    assert wave == ["a", "b", "c"]
+    assert adm.stats.served == 3 and adm.stats.waves == 1
+    w3 = adm.stats.total_wait_s
+
+    adm.requeue_front(wave[1:])  # "a" succeeded, "b"/"c" go back
+    assert adm.stats.served == 1
+    assert adm.stats.waves == 1  # the wave still launched
+    assert adm.stats.total_wait_s == pytest.approx(w3 / 3)
+    assert adm.pending == 2
+
+    clk.advance(0.2)
+    wave2 = adm.poll()
+    assert wave2 == ["b", "c"]  # FIFO order survives the rollback
+    assert adm.stats.served == 3
+    # re-served requests count ONE wait each (from requeue time), so the
+    # failed attempt is neither double-counted nor silently dropped
+    assert adm.stats.total_wait_s == pytest.approx(w3 / 3 + 2 * 0.2)
+    assert adm.stats.mean_wait_s == pytest.approx(adm.stats.total_wait_s / 3)
+
+
+def test_full_requeue_unwinds_the_wave():
+    clk = FakeClock()
+    adm = AdmissionController(AdmissionPolicy(slo_s=0.1, max_wave=2),
+                              clock=clk)
+    adm.submit("a"), adm.submit("b")
+    wave = adm.poll()
+    assert adm.stats.waves == 1 and adm.stats.full_waves == 1
+    adm.requeue_front(wave)
+    assert adm.stats.served == 0 and adm.stats.waves == 0
+    assert adm.stats.full_waves == 0 and adm.stats.total_wait_s == 0.0
+    assert adm.poll() == ["a", "b"]
+
+
+# --------------------------------------- satellite: classic-path slot_occupancy
+
+
+def test_wave_drain_surfaces_slot_occupancy(clustered_store):
+    """The classic drain path reports per-round busy-slot occupancy — the
+    number the continuous loop exists to push toward 1.0 (a satisfied query
+    parks its slot for the wave's remaining rounds)."""
+    eng = NeedleTailEngine(clustered_store)
+    serve = _serve(4)
+    for k in (300, 50, 200, 16):
+        serve.submit_exemplar_request([(0, 1)], k)
+    done = serve.drain_exemplar_requests(eng)
+    assert len(done) == 4
+    occ = serve.last_wave_stats["slot_occupancy"]
+    assert 0.0 < occ <= 1.0
+    assert serve.last_wave_stats["modeled_store_io_s"] >= 0.0
+
+
+# --------------------------------------------------- continuous LM slot joins
+
+
+def test_lm_continuous_join_byte_exact_vs_solo():
+    """A prompt joining the live LM wave mid-decode (left-padded to the
+    shared position counter, cache rows grafted) must emit exactly the
+    tokens a solo wave run would — batch rows are independent."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("qwen1.5-4b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pa = np.arange(6, dtype=np.int32) + 3
+    pb = np.arange(6, dtype=np.int32) + 11  # same length: joins at pos
+
+    solo = ServeEngine(cfg, params, max_slots=2, max_seq=32)
+    solo.submit(pb, max_new_tokens=5)
+    want = solo.run_until_drained()[0].out_tokens
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=32)
+    ra = eng.submit(pa, max_new_tokens=8)
+    eng.lm_tick()  # prefill tick seats A; pos == len(pa)
+    rb = eng.submit(pb, max_new_tokens=5)
+    for _ in range(16):
+        if ra.done and rb.done:
+            break
+        eng.lm_tick()
+    assert rb.done and rb.out_tokens == want
