@@ -400,6 +400,141 @@ def tiered_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
     return rows
 
 
+def peer_sweep(store, algo: str = "auto", q: int = 64,
+               seeds=(0, 1, 2)) -> tuple[list[dict], dict]:
+    """The Q=`q` wave on the cooperative peer-memory tier: a 4-shard
+    :class:`~repro.storage.peer.PeerGroup` with the working set resident
+    ONLY on the remote shards, then heat-driven ownership migration pulls
+    it to the engine shard (``repro.storage.rebalance``).
+
+    Asserts (the peer CI hook, raises on any regression):
+
+    * every phase is byte-identical per query to the cache-less sequential
+      baseline (a peer hop changes the medium, never the bytes);
+    * the cross-shard warm wave reads **0 blocks from the backing store**
+      and ≥ 50% of its block touches are served over the ici hop (the
+      rest from local DRAM once a block was migrated/admitted);
+    * :class:`~repro.storage.rebalance.OwnershipRebalancer` migrates every
+      working-set block to the engine shard within the run (bytes moved,
+      never re-read);
+    * the post-migration wave runs entirely local: 0 store reads AND 0
+      remote fetches.
+    """
+    from benchmarks.common import trimmed_mean, write_bench_json
+    from repro.storage import OwnershipRebalancer, make_peer_group
+
+    n_shards = 4
+    rows: list[dict] = []
+    per_seed: list[dict] = []
+    for seed in seeds:
+        queries = overlapping_queries(q, seed=100 + seed)
+        ref = NeedleTailEngine(store, cache_bytes=0)
+        seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo=algo)
+               for bq in queries]
+        union = sorted(
+            int(b) for b in NeedleTailEngine(store)
+            .any_k_batch(queries, algo=algo).unique_blocks_fetched
+        )
+        group = make_peer_group(store, n_shards=n_shards)
+        eng = NeedleTailEngine(store, tiers=group.stacks[0])
+        # the whole working set lives on the OTHER shards: nothing local
+        group.warm(store, {s: union[s - 1 :: n_shards - 1]
+                           for s in range(1, n_shards)})
+
+        t0 = time.perf_counter()
+        batch = eng.any_k_batch(queries, algo=algo)
+        remote_ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        ts = batch.tier_stats
+        peer_hits, dram_hits = ts["peer.hits"], ts["dram.hits"]
+        peer_frac = peer_hits / max(peer_hits + dram_hits, 1)
+        if batch.store_blocks_fetched != 0:
+            raise AssertionError(
+                f"peer warm regression: cross-shard wave read "
+                f"{batch.store_blocks_fetched} blocks from the backing store "
+                "(expected 0: served from local + peer DRAM)"
+            )
+        if peer_frac < 0.5:
+            raise AssertionError(
+                f"peer serving regression: only {peer_frac:.2f} of the warm "
+                "wave came over the ici hop (expected >= 0.5 with the whole "
+                "working set remote)"
+            )
+        rows.append(dict(
+            phase="remote", seed=seed, Q=q, algo=algo,
+            batch_ms=round(remote_ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            peer_hits=peer_hits, dram_hits=dram_hits,
+            peer_frac=round(peer_frac, 3),
+            remote_fetches=ts["peer.remote_fetches"],
+            migrations=0,
+        ))
+
+        moved = OwnershipRebalancer(group, hysteresis=1.2,
+                                    min_heat=0.5).rebalance()
+        if moved == 0 or group.stats.migrations == 0:
+            raise AssertionError(
+                "ownership regression: rebalance moved nothing toward the "
+                "hot shard (expected the whole working set to migrate)"
+            )
+        strays = [b for b in union if group.owner_of(b) != 0]
+        if strays:
+            raise AssertionError(
+                f"ownership regression: {len(strays)} working-set blocks "
+                "still owned remotely after rebalance"
+            )
+
+        t0 = time.perf_counter()
+        batch = eng.any_k_batch(queries, algo=algo)
+        local_ms = (time.perf_counter() - t0) * 1e3
+        _assert_byte_identical(seq, batch)
+        ts = batch.tier_stats
+        if batch.store_blocks_fetched != 0 or ts["peer.remote_fetches"] != 0:
+            raise AssertionError(
+                f"migration regression: post-migration wave read "
+                f"{batch.store_blocks_fetched} store blocks and "
+                f"{ts['peer.remote_fetches']} remote blocks (expected 0/0: "
+                "the migrated copies serve locally)"
+            )
+        rows.append(dict(
+            phase="local", seed=seed, Q=q, algo=algo,
+            batch_ms=round(local_ms, 2),
+            store_blocks=batch.store_blocks_fetched,
+            peer_hits=ts["peer.hits"], dram_hits=ts["dram.hits"],
+            peer_frac=0.0, remote_fetches=ts["peer.remote_fetches"],
+            migrations=moved,
+        ))
+        per_seed.append(dict(
+            remote_ms=remote_ms, local_ms=local_ms, peer_frac=peer_frac,
+            remote_fetches=rows[-2]["remote_fetches"], migrations=moved,
+            union_blocks=len(union),
+            remote_mb=group.stats.remote_bytes / 2**20,
+        ))
+
+    payload = dict(
+        config=dict(Q=q, algo=algo, n_shards=n_shards, seeds=len(seeds),
+                    num_records=store.num_blocks * store.records_per_block),
+        remote_wave=dict(
+            batch_ms=round(trimmed_mean([m["remote_ms"] for m in per_seed]), 2),
+            peer_frac=round(trimmed_mean([m["peer_frac"] for m in per_seed]), 4),
+            remote_fetches=round(
+                trimmed_mean([m["remote_fetches"] for m in per_seed]), 1),
+            remote_mb=round(trimmed_mean([m["remote_mb"] for m in per_seed]), 2),
+            store_blocks=0,
+        ),
+        local_wave=dict(
+            batch_ms=round(trimmed_mean([m["local_ms"] for m in per_seed]), 2),
+            remote_fetches=0, store_blocks=0,
+        ),
+        migrations=round(trimmed_mean([m["migrations"] for m in per_seed]), 1),
+        union_blocks=round(
+            trimmed_mean([m["union_blocks"] for m in per_seed]), 1),
+    )
+    path = write_bench_json("peer", payload)
+    print(f"# wrote {path}")
+    return rows, payload
+
+
 class _SimClock:
     def __init__(self):
         self.t = 0.0
@@ -885,6 +1020,16 @@ def main(argv=None):
                          "set) and assert 0 warm backing-store reads, "
                          "demote-not-drop placement, and flat-oracle "
                          "byte-identity on host AND device plan paths")
+    ap.add_argument("--peer", action="store_true",
+                    help="also run the cooperative peer-memory sweep: a "
+                         "4-shard PeerGroup with the working set resident "
+                         "only on remote shards; asserts the warm cross-shard "
+                         "wave reads 0 backing-store blocks with >= 50% of "
+                         "touches served over the ici hop, heat-driven "
+                         "ownership migration pulls every block to the hot "
+                         "shard, and the post-migration wave is fully local "
+                         "(0 store reads, 0 remote fetches) — byte-identical "
+                         "throughout; emits BENCH_peer.json")
     ap.add_argument("--serving", action="store_true",
                     help="also run the sustained-traffic serving sweep: the "
                          "continuous-batching loop vs drain-the-wave at equal "
@@ -956,6 +1101,22 @@ def main(argv=None):
               f"tier 0 holds {host_warm['hbm_blocks']} / "
               f"{host_warm['hbm_blocks'] + host_warm['dram_blocks']} "
               "resident blocks")
+
+    if args.peer:
+        print("\n# --- cooperative peer-memory sweep (DRAM as one cache) ---")
+        prows, ppayload = peer_sweep(
+            store, algo=args.algo, q=64,
+            seeds=(0, 1, 2) if args.smoke else (0, 1, 2, 3, 4))
+        emit(prows, ["phase", "seed", "Q", "algo", "batch_ms", "store_blocks",
+                     "peer_hits", "dram_hits", "peer_frac", "remote_fetches",
+                     "migrations"])
+        rw, lw = ppayload["remote_wave"], ppayload["local_wave"]
+        print(f"# cross-shard warm wave: 0 store reads, "
+              f"{rw['peer_frac']:.2f} of touches over the ici hop "
+              f"({rw['remote_mb']:.1f} MB moved); ownership migration "
+              f"relocated {ppayload['migrations']:.0f} blocks, post-migration "
+              f"wave fully local ({rw['batch_ms']:.1f} -> "
+              f"{lw['batch_ms']:.1f} ms)")
 
     if args.serving:
         print("\n# --- sustained-traffic serving (continuous vs wave drain) ---")

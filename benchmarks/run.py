@@ -27,6 +27,9 @@ SECTIONS = {
                "benchmarks.bench_multi_query", ["--tiered", "--smoke"]),
     "serving": ("Sustained-traffic serving: continuous batching vs wave drain",
                 "benchmarks.bench_multi_query", ["--serving", "--smoke"]),
+    "peer": ("Cooperative peer-memory tier: 0-store-read cross-shard waves + "
+             "heat-driven ownership migration",
+             "benchmarks.bench_multi_query", ["--peer", "--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 

@@ -51,8 +51,11 @@ class CostModel:
 
     def io_time(self, block_ids: Sequence[int]) -> float:
         """Total modeled I/O time for fetching `block_ids` after the fetch
-        optimization of §4.1 (sort ascending to minimize seeks)."""
-        ids = np.sort(np.asarray(list(block_ids), dtype=np.int64))
+        optimization of §4.1 (sort ascending to minimize seeks).  Ids are
+        deduplicated first: every physical fetch path reads a block at most
+        once per pass, so a duplicate across a wave's per-query plans must
+        not charge an extra ``rand_io(b, b)`` seek."""
+        ids = np.unique(np.asarray(list(block_ids), dtype=np.int64))
         if ids.size == 0:
             return 0.0
         t = self.first_block_cost

@@ -256,6 +256,12 @@ class NeedleTailEngine:
             block_cache=self.block_cache,
             **kwargs,
         )
+        # cooperative peer tier: when the stack has a PeerTier and the
+        # planner carries a peer group (peer_group=...), remote block
+        # requests route through the planner's fetch_remote hook
+        peer_tier = getattr(self.block_cache, "peer_tier", None)
+        if peer_tier is not None and getattr(self.distributed, "peer_group", None) is not None:
+            peer_tier.route_through(self.distributed)
         return self.distributed
 
     def detach_mesh(self) -> None:

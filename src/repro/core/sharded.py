@@ -621,12 +621,17 @@ class DistributedAnyK:
         it for you) so scalar, batched, and sharded fetches share one cache.
     two_prong_group : int
         G for the wave TWO-PRONG; the default 1 is exact (byte-identity).
+    peer_group : repro.storage.peer.PeerGroup | None
+        Cooperative peer-memory cluster; arms :meth:`fetch_remote` so block
+        requests are answered from other shards' resident host tiers over
+        the ``ici`` hop before falling through to the backing store.
     """
 
     def __init__(self, mesh: Mesh, axis="data", records_per_block: int = 8192,
                  candidates: int = 16, max_refills: int = 4,
                  bisect_above: int = 512, block_cache=None,
-                 two_prong_group: int = 1, remote_cost=None):
+                 two_prong_group: int = 1, remote_cost=None,
+                 peer_group=None):
         from repro.core.cost_model import make_cost_model
 
         self.mesh = mesh
@@ -651,6 +656,11 @@ class DistributedAnyK:
         self.remote_cost = remote_cost or make_cost_model("ici")
         self.price_fetches = True
         self.last_fetch_io_s = 0.0
+        # cooperative peer-memory tier (repro.storage.peer.PeerGroup): when
+        # set, fetch_remote answers block requests from other shards'
+        # resident host tiers — attach_mesh routes the engine stack's
+        # PeerTier through it so cross-shard reads go through the planner
+        self.peer_group = peer_group
         sz = 1
         for a in (axis if isinstance(axis, tuple) else (axis,)):
             sz *= mesh.shape[a]
@@ -681,6 +691,40 @@ class DistributedAnyK:
         if isinstance(plan, ShardedTwoProngResult):
             return np.arange(int(plan.start_block), int(plan.end_block), dtype=np.int64)
         raise TypeError(f"cannot materialize block ids from {type(plan).__name__}")
+
+    def fetch_remote(self, block_ids, requester: int | None = 0) -> dict:
+        """Answer block requests from the peer group's resident host tiers
+        (the remote side of the cooperative peer-memory tier,
+        ``repro.storage.peer``).
+
+        Parameters
+        ----------
+        block_ids : array-like of int
+            Blocks the requesting shard wants.
+        requester : int | None
+            Requesting shard id — its own host tier is excluded (a shard
+            never answers itself over the interconnect).
+
+        Returns
+        -------
+        dict
+            ``block_id -> (dims, meas, valid, nbytes)`` host slabs for every
+            id some peer's host tier could serve.  Ids absent from the dict
+            mean no shard holds the block (or its in-flight read was
+            invalidated by an append) — callers fall through to the backing
+            store.  ``{}`` when no peer group is attached.  A peer that is
+            down in ``"raise"`` mode propagates :class:`repro.storage.peer.
+            PeerUnavailable`; the requesting ``PeerTier`` catches it and
+            falls through.
+        """
+        if self.peer_group is None:
+            return {}
+        out: dict[int, tuple] = {}
+        for b in np.asarray(block_ids, dtype=np.int64).ravel():
+            slab = self.peer_group.fetch_block(int(b), requester=requester)
+            if slab is not None:
+                out[int(b)] = slab
+        return out
 
     def fetch_plan(self, store, plan):
         """Fetch a sharded plan's blocks through the shared engine-lifetime

@@ -1,4 +1,4 @@
-"""Tiered block-storage subsystem: HBM → host DRAM → backing store.
+"""Tiered block-storage subsystem: HBM → host DRAM → peer DRAM → backing store.
 
 Public surface:
 
@@ -8,6 +8,13 @@ Public surface:
 * :class:`~repro.storage.policy.CostAwarePolicy` /
   :class:`~repro.storage.policy.RecencyPolicy` — placement arbiters
   (io_time saved per byte vs pure recency).
+* :class:`~repro.storage.peer.PeerGroup` / :class:`~repro.storage.peer.PeerTier`
+  / :func:`~repro.storage.peer.make_peer_group` /
+  :func:`~repro.storage.peer.make_peer_stack` — the cooperative peer-memory
+  tier: the cluster's DRAM as one cache, served over the ``ici`` hop.
+* :class:`~repro.storage.rebalance.HeatTracker` /
+  :class:`~repro.storage.rebalance.OwnershipRebalancer` — heat × density
+  block-ownership migration toward the shards that touch each block.
 * :func:`~repro.storage.residency.wave_is_resident` /
   :func:`~repro.storage.residency.make_residency_probe` — the stat-free
   residency peek behind admission's early launch of fully-resident waves.
@@ -16,20 +23,33 @@ Public surface:
   :func:`~repro.storage.prefetch.make_missed_cost_probe` — memo-driven
   next-wave prefetch into tier 0 and the cost-fed admission probe.
 """
+from repro.storage.peer import (
+    PeerGroup, PeerGroupStats, PeerTier, PeerUnavailable, make_peer_group,
+    make_peer_stack,
+)
 from repro.storage.policy import CostAwarePolicy, PlacementPolicy, RecencyPolicy
 from repro.storage.prefetch import (
     PrefetchStats, TierPrefetcher, make_missed_cost_probe, predicted_wave_blocks,
 )
+from repro.storage.rebalance import HeatTracker, OwnershipRebalancer
 from repro.storage.residency import make_residency_probe, wave_is_resident
 from repro.storage.tiers import Tier, TierStack, TierStats, make_tier_stack
 
 __all__ = [
     "CostAwarePolicy",
+    "HeatTracker",
+    "OwnershipRebalancer",
+    "PeerGroup",
+    "PeerGroupStats",
+    "PeerTier",
+    "PeerUnavailable",
     "PlacementPolicy",
     "RecencyPolicy",
     "Tier",
     "TierStack",
     "TierStats",
+    "make_peer_group",
+    "make_peer_stack",
     "make_tier_stack",
     "make_residency_probe",
     "make_missed_cost_probe",

@@ -142,7 +142,13 @@ class CostAwarePolicy(PlacementPolicy):
                 continue
             if tier.has_room(nbytes):
                 return t
-        return len(stack.tiers) - 1
+        # bottom-most tier that owns local capacity: a zero-capacity view
+        # tier (repro.storage.peer.PeerTier) can never admit anything
+        for t in range(len(stack.tiers) - 1, -1, -1):
+            cap = stack.tiers[t].capacity_bytes
+            if cap is None or cap > 0:
+                return t
+        return 0
 
     def promote_tier(self, stack: "TierStack", block_id: int, tier_idx: int) -> int:
         if tier_idx == 0:

@@ -53,9 +53,10 @@ class PrefetchStats:
     kicks: int = 0  # prediction passes that found at least one request
     predicted_requests: int = 0  # pending requests whose plan was memoized
     issued: int = 0  # blocks handed to the fetch/promote stage
-    fetched: int = 0  # blocks physically read from the backing store
+    fetched: int = 0  # blocks the cache actually read/admitted for us
     hits: int = 0  # prefetched blocks later touched by a demand wave
     invalidated: int = 0  # prefetched blocks dirtied by append before use
+    truncated: int = 0  # predicted blocks dropped by the per-kick cap
 
     @property
     def hit_rate(self) -> float:
@@ -69,6 +70,7 @@ class PrefetchStats:
             "fetched": self.fetched,
             "hits": self.hits,
             "invalidated": self.invalidated,
+            "truncated": self.truncated,
             "hit_rate": self.hit_rate,
         }
 
@@ -140,11 +142,19 @@ def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
 
 
 class _InflightFetch:
-    """One async backing-store read owned by the daemon fetch thread."""
+    """One async backing-store read owned by the daemon fetch thread.
+
+    ``lock`` serializes the three parties that touch mutable state: the
+    worker publishing ``slabs``, the invalidation listener growing
+    ``stale``, and ``drain`` snapshotting both.  Without it an append
+    landing between drain's stale check and its slab handoff could admit a
+    block whose bytes predate the append.
+    """
 
     def __init__(self, ids: np.ndarray):
         self.ids = ids
         self.done = threading.Event()
+        self.lock = threading.Lock()
         self.slabs: dict[int, tuple] | None = None
         self.stale: set[int] = set()  # ids invalidated while in flight
 
@@ -212,7 +222,8 @@ class TierPrefetcher:
         self.stats.invalidated += len(gone)
         self.prefetched -= dirty
         for rec in self._inflight:
-            rec.stale |= dirty
+            with rec.lock:
+                rec.stale |= dirty
 
     # ------------------------------------------------------------------- kick
     def kick(self, requests: Sequence) -> int:
@@ -245,10 +256,15 @@ class TierPrefetcher:
         else:
             want = [int(b) for b in union
                     if int(b) not in cache and int(b) not in inflight]
-        want = want[: self.max_blocks]
         if not want:
             return 0
-        ids = np.asarray(sorted(want), dtype=np.int64)
+        # Cap AFTER sorting: the §4.1 ascending fetch order means the kept
+        # prefix is the locality-dense one, and the drop is never silent.
+        want = sorted(want)
+        if len(want) > self.max_blocks:
+            self.stats.truncated += len(want) - self.max_blocks
+            want = want[: self.max_blocks]
+        ids = np.asarray(want, dtype=np.int64)
         self.stats.issued += int(ids.size)
         self.prefetched.update(int(b) for b in ids)
         if self.async_fetch:
@@ -284,7 +300,8 @@ class TierPrefetcher:
                     slabs[int(b)] = (
                         np.array(bd[off]), np.array(bm[off]), np.array(bv[off])
                     )
-            rec.slabs = slabs
+            with rec.lock:
+                rec.slabs = slabs
             rec.done.set()
 
         threading.Thread(target=worker, daemon=True).start()
@@ -303,17 +320,26 @@ class TierPrefetcher:
             if not rec.done.is_set():
                 still.append(rec)
                 continue
+            # Snapshot under the lock so an append racing this drain cannot
+            # grow rec.stale between the filter and the slab handoff.
+            with rec.lock:
+                stale = set(rec.stale)
+                slabs = dict(rec.slabs or {})
             live = np.asarray(
-                [int(b) for b in rec.ids if int(b) not in rec.stale],
+                [int(b) for b in rec.ids if int(b) not in stale],
                 dtype=np.int64,
             )
-            slabs = {b: s for b, s in (rec.slabs or {}).items()
-                     if b not in rec.stale}
-            self.stats.fetched += len(slabs)
+            slabs = {b: s for b, s in slabs.items() if b not in stale}
+            got = 0
             if live.size and hasattr(cache, "prefetch"):
-                moved += cache.prefetch(self._store, live, self.tier, slabs=slabs)
+                got = int(cache.prefetch(self._store, live, self.tier,
+                                         slabs=slabs))
             elif live.size:
-                moved += int(cache.ensure(self._store, live))
+                got = int(cache.ensure(self._store, live))
+            # Credit only what the cache reports moved/admitted — a stale
+            # or budget-rejected read is wasted bandwidth, not a fetch.
+            self.stats.fetched += got
+            moved += got
         self._inflight = still
         return moved
 

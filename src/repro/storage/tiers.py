@@ -306,6 +306,11 @@ class TierStack:
         """Logical access count of `block_id` (policy scoring input)."""
         return self._accesses.get(int(block_id), 0)
 
+    def access_counts(self) -> dict[int, int]:
+        """Copy of the per-block logical-access ledger — the heat input
+        :class:`repro.storage.rebalance.HeatTracker` samples per shard."""
+        return dict(self._accesses)
+
     def _find(self, block_id: int) -> int | None:
         for t, tier in enumerate(self.tiers):
             if block_id in tier:
@@ -431,7 +436,22 @@ class TierStack:
                     continue
                 # resident lower: pull up on demand (upload, no residency move)
                 t = self._find(b)
-                entry = _to_tier(self.tiers[t].peek(b), device=True)
+                raw = self.tiers[t].peek(b) if t is not None else None
+                if raw is None and t is not None:
+                    # view tiers (peer) serve copies through host_view only
+                    raw = self.tiers[t].host_view(b)
+                if raw is None:
+                    # residency vanished mid-gather (peer died/evicted): one
+                    # accounted re-read keeps the gather byte-identical
+                    one = np.asarray([b], dtype=np.int64)
+                    self.stats.store_fetch_calls += 1
+                    self.stats.store_blocks_fetched += 1
+                    if self.fetch_log is not None:
+                        self.fetch_log.append(one)
+                    d1, m1, v1 = store.fetch_device(one)
+                    out_d.append(d1[0]); out_m.append(m1[0]); out_v.append(v1[0])
+                    continue
+                entry = _to_tier(raw, device=True)
             out_d.append(entry[0]); out_m.append(entry[1]); out_v.append(entry[2])
         return jnp.stack(out_d), jnp.stack(out_m), jnp.stack(out_v)
 
@@ -629,7 +649,10 @@ class TierStack:
                 miss.append(b)
             elif at > tier:
                 entry = self.tiers[at].pop(b)
-                self._place(tier, b, entry, how="promote")
+                # a view tier (repro.storage.peer.PeerTier) owns no slab to
+                # move: the block stays remote and still counts as resident
+                if entry is not None:
+                    self._place(tier, b, entry, how="promote")
         if miss:
             have = {b: slabs[b] for b in miss if slabs and b in slabs}
             need = np.asarray(sorted(set(miss) - set(have)), dtype=np.int64)
@@ -719,6 +742,10 @@ class TierStack:
             for k in ("hits", "admissions", "promotions_in", "demotions_in",
                       "demotions_out", "evictions", "invalidations"):
                 out[f"{tier.name}.{k}"] = getattr(s, k)
+            extra = getattr(tier, "extra_counters", None)
+            if extra is not None:  # e.g. peer.remote_fetches / peer.migrations
+                for k, v in extra().items():
+                    out[f"{tier.name}.{k}"] = int(v)
         return out
 
     def snapshot(self) -> dict:

@@ -1,0 +1,334 @@
+"""Cooperative peer-memory tier: equivalence, failure, and ownership suites.
+
+The contract under test (see ``src/repro/storage/peer.py``): a shard's
+:class:`~repro.storage.tiers.TierStack` extended with a
+:class:`~repro.storage.peer.PeerTier` — HBM → host DRAM → peer DRAM →
+backing store — returns *byte-identical* results to the flat-cache oracle
+under ANY warm/ownership schedule, with warm cross-shard waves served from
+the cluster's DRAM (zero backing-store reads).  Failure modes fall through
+to the store (a dead peer costs I/O, never correctness or a wedged wave);
+an append racing an in-flight remote read aborts it through the epoch
+guard, exactly like :class:`~repro.storage.prefetch.TierPrefetcher`
+speculation; and :class:`~repro.storage.rebalance.OwnershipRebalancer`
+migrates block ownership toward observed heat without re-reading a byte.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.data.block_store import Table, build_block_store
+from repro.storage import (
+    HeatTracker, OwnershipRebalancer, PeerTier, PeerUnavailable,
+    make_peer_group,
+)
+
+pytestmark = pytest.mark.serving
+
+RPB = 64
+NB = RPB * (4 * 4 + 2 * 4 + 1)  # slab bytes of the 4-dim/2-measure tables
+
+
+def _make_table(seed: int, n: int = 6_000) -> Table:
+    rng = np.random.default_rng(seed)
+    return Table(
+        dims=rng.integers(0, 3, (n, 4)).astype(np.int32),
+        measures=rng.normal(size=(n, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3, 3]),
+    )
+
+
+_STORES: dict = {}
+
+
+def _store(seed: int):
+    if seed not in _STORES:
+        _STORES[seed] = build_block_store(_make_table(seed), RPB)
+    return _STORES[seed]
+
+
+QUERY_POOL = [
+    ([(0, 1)], 40, "and"),
+    ([(0, 1), (1, 1)], 120, "and"),
+    ([(1, 1), (2, 1)], 60, "or"),
+    ([(2, 0)], 25, "and"),
+    ([(0, 1), (2, 1), (3, 1)], 200, "and"),
+]
+
+
+def _queries(spec=QUERY_POOL) -> list[BatchQuery]:
+    return [BatchQuery(p, k, op) for (p, k, op) in spec]
+
+
+def _assert_batch_equal(a, b):
+    assert len(a.results) == len(b.results)
+    for ra, rb in zip(a.results, b.results):
+        np.testing.assert_array_equal(ra.record_block, rb.record_block)
+        np.testing.assert_array_equal(ra.record_row, rb.record_row)
+        np.testing.assert_array_equal(ra.measures, rb.measures)
+        np.testing.assert_array_equal(ra.blocks_fetched, rb.blocks_fetched)
+
+
+def _union_blocks(store, queries) -> list[int]:
+    """The flat-oracle working set of `queries` (and the oracle batch)."""
+    ref = NeedleTailEngine(store).any_k_batch(queries)
+    return sorted({int(b) for r in ref.results for b in r.blocks_fetched}), ref
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: warm peers serve the whole wave, byte-identical, 0 store reads.
+# ---------------------------------------------------------------------------
+def test_warm_peer_wave_is_byte_identical_and_store_free():
+    store = _store(0)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+
+    # spread the working set over the OTHER shards: nothing local, all remote
+    half = len(union) // 2
+    group.warm(store, {1: union[:half], 2: union[half:]})
+
+    stack = group.stacks[0]
+    sf0 = stack.stats.store_blocks_fetched
+    batch = eng.any_k_batch(queries)
+    _assert_batch_equal(batch, ref)
+    # every block came over the ici hop, none from the backing store
+    assert stack.stats.store_blocks_fetched == sf0
+    assert group.stats.remote_fetches > 0
+    counters = stack.tier_counters()
+    assert counters["peer.hits"] > 0
+    assert counters["peer.remote_fetches"] == group.stats.remote_fetches
+
+
+def test_peer_tier_is_skipped_by_placement():
+    """Fresh store reads never land in the capacity-0 view tier, and a
+    cold run (no peer holds anything) is a plain miss-to-store run."""
+    store = _store(1)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=2, dram_bytes=3 * NB)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    batch = eng.any_k_batch(queries)
+    _assert_batch_equal(batch, ref)
+    stack = group.stacks[0]
+    peer = stack.peer_tier
+    assert isinstance(peer, PeerTier)
+    assert len(peer) == 0 and peer.stats.admissions == 0
+    assert group.stats.remote_fetches == 0  # nothing was ever remote
+    # eviction pressure demoted through dram; nothing tried to enter peer
+    assert peer.stats.demotions_in == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 3),
+    st.integers(1, 9),
+    st.lists(st.integers(0, 10_000), max_size=6),
+)
+def test_equivalence_under_any_ownership_schedule(seed, split_tenths, migrations):
+    """Byte-identity holds under ANY warm spread and ANY (adversarial)
+    mid-run ownership-migration schedule."""
+    store = _store(seed)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    cut = len(union) * split_tenths // 10
+    group.warm(store, {1: union[:cut], 2: union[cut:]})
+
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    for m in migrations:  # adversarial migration between waves
+        b = union[m % len(union)]
+        group.migrate(b, (group.owner_of(b) + 1) % group.n_shards)
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+
+
+# ---------------------------------------------------------------------------
+# Failure modes: a dead peer is a miss, never a wedged wave.
+# ---------------------------------------------------------------------------
+def test_raising_peer_falls_through_to_store():
+    store = _store(2)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    group.warm(store, {1: union})
+    group.fail_shard(1, mode="raise")
+
+    stack = group.stacks[0]
+    sf0 = stack.stats.store_blocks_fetched
+    batch = eng.any_k_batch(queries)  # must not raise or wedge
+    _assert_batch_equal(batch, ref)
+    assert stack.peer_tier.failures > 0  # fetches really were refused...
+    assert group.stats.failed_fetches > 0
+    assert stack.stats.store_blocks_fetched > sf0  # ...and the store served
+    # the raise is still reachable directly — the TIER swallows it, not the group
+    with pytest.raises(PeerUnavailable):
+        group.fetch_block(union[0], requester=0)
+
+
+def test_missing_peer_is_a_clean_miss():
+    store = _store(3)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    group.warm(store, {1: union})
+    group.fail_shard(1, mode="miss")  # silently vanishes from the directory
+
+    stack = group.stacks[0]
+    sf0 = stack.stats.store_blocks_fetched
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    assert stack.peer_tier.failures == 0  # no exception path taken
+    assert group.stats.remote_fetches == 0
+    assert stack.stats.store_blocks_fetched > sf0
+    group.heal_shard(1)  # back up: remote serving resumes
+    stack.clear()  # drop the local copies the miss wave admitted
+    eng.any_k_batch(queries)
+    assert group.stats.remote_fetches > 0
+
+
+# ---------------------------------------------------------------------------
+# Append racing a peer fetch: the epoch guard aborts the in-flight read.
+# ---------------------------------------------------------------------------
+def _fresh_append_fixture():
+    """Fresh (non-memoized) store + group: the append mutates the store."""
+    store = build_block_store(_make_table(7), RPB)
+    group = make_peer_group(store, n_shards=2)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    extra = _make_table(99, n=40)
+    return store, group, eng, extra
+
+
+def test_append_racing_peer_fetch_aborts_in_flight_read():
+    store, group, eng, extra = _fresh_append_fixture()
+    tail = store.num_blocks - 1  # the block the append will dirty
+    group.warm(store, {1: [tail]})
+
+    fired = []
+
+    def hook(b):  # fires between the epoch snapshot and the slab copy
+        if not fired:
+            fired.append(b)
+            eng.append(extra)
+
+    group.mid_fetch_hook = hook
+    out = group.fetch_block(tail, requester=0)
+    assert fired, "hook never fired: fetch did not reach the race window"
+    assert out is None  # the stale copy was NOT served
+    assert group.stats.stale_aborts == 1
+    # the append's invalidation listener also dropped the peer resident
+    assert group.locate(tail) is None
+
+
+def test_append_invalidates_peer_residents_like_local_tiers():
+    store, group, eng, extra = _fresh_append_fixture()
+    queries = _queries(QUERY_POOL[:2])
+    union, _ = _union_blocks(store, queries)
+    tail = store.num_blocks - 1
+    group.warm(store, {1: sorted(set(union) | {tail})})
+
+    grown = eng.append(extra)
+    assert group.locate(tail) is None  # dirtied tail evicted on shard 1
+    survivors = [b for b in union if b != tail]
+    assert all(group.locate(b) == 1 for b in survivors)  # surgical, not flush
+    # post-append waves run against the grown store, byte-identical
+    ref = NeedleTailEngine(grown).any_k_batch(queries)
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+
+
+# ---------------------------------------------------------------------------
+# Ownership migration: heat moves blocks toward the shard that touches them.
+# ---------------------------------------------------------------------------
+def test_ownership_migrates_toward_hot_shard():
+    store = _store(4)
+    queries = _queries()
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    half = len(union) // 2
+    group.warm(store, {1: union[:half], 2: union[half:]})
+
+    # shard 0 hammers the working set: two waves of heat
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+
+    reb = OwnershipRebalancer(group, hysteresis=1.2, min_heat=0.5)
+    moved = reb.rebalance()
+    assert moved > 0 and reb.moves_applied == moved
+    assert group.stats.migrations > 0  # resident slabs moved, not re-read
+    # ownership followed the heat: every union block now owned by shard 0
+    assert all(group.owner_of(b) == 0 for b in union)
+
+    # post-migration wave: local DRAM serves, the ici hop goes quiet
+    stack = group.stacks[0]
+    sf0 = stack.stats.store_blocks_fetched
+    rf0 = group.stats.remote_fetches
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    assert stack.stats.store_blocks_fetched == sf0  # bytes moved, not re-read
+    assert group.stats.remote_fetches == rf0  # no cross-shard traffic left
+
+
+def test_rebalancer_hysteresis_and_cadence():
+    store = _store(5)
+    queries = _queries(QUERY_POOL[:2])
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=2)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    group.warm(store, {1: union})
+    ids = np.asarray(union, dtype=np.int64)
+    group.stacks[1].get_many(store, ids)  # the owner touches its blocks too
+
+    # an absurd hysteresis gate freezes ownership no matter the heat
+    frozen = OwnershipRebalancer(group, hysteresis=1e9, min_heat=0.5)
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    assert frozen.rebalance() == 0
+    assert all(group.owner_of(b) == 1 for b in union)
+
+    # tick() honors the cadence: only every `every`-th call rebalances
+    for _ in range(4):  # shard 0's heat now dwarfs the owner's single touch
+        _assert_batch_equal(eng.any_k_batch(queries), ref)
+    reb = OwnershipRebalancer(group, hysteresis=1.2, min_heat=0.5, every=3)
+    assert reb.tick() == 0 and reb.tick() == 0
+    assert reb.tick() > 0  # third tick fires and migrates toward shard 0
+
+
+def test_heat_tracker_decay_and_eviction_reset():
+    store = _store(6)
+    group = make_peer_group(store, n_shards=2)
+    tracker = HeatTracker(group, decay=0.5)
+    stack = group.stacks[0]
+    stack.get_many(store, np.asarray([0, 1], dtype=np.int64))
+    tracker.sample()
+    h0 = tracker.heat[0][0]
+    assert h0 > 0
+    tracker.sample()  # no new touches: heat decays toward zero
+    assert tracker.heat[0][0] == pytest.approx(h0 * 0.5)
+    # a cleared ledger (eviction reset) clamps the delta, never negative
+    stack.clear()
+    tracker.sample()
+    assert all(h >= 0 for h in tracker.heat[0].values())
+
+
+# ---------------------------------------------------------------------------
+# Mesh routing: remote reads answered through DistributedAnyK.fetch_remote.
+# ---------------------------------------------------------------------------
+def test_mesh_routes_peer_fetches_through_distributed_planner():
+    jax = pytest.importorskip("jax")
+    store = _store(0)
+    queries = _queries(QUERY_POOL[:3])
+    union, ref = _union_blocks(store, queries)
+    group = make_peer_group(store, n_shards=3)
+    eng = NeedleTailEngine(store, tiers=group.stacks[0])
+    dist = eng.attach_mesh(jax.make_mesh((1,), ("data",)), peer_group=group)
+    assert dist.peer_group is group  # attach_mesh wired route_through
+    group.warm(store, {1: union})
+
+    out = dist.fetch_remote(union[:3], requester=0)
+    assert sorted(out) == sorted(int(b) for b in union[:3])
+    rf0 = group.stats.remote_fetches
+    _assert_batch_equal(eng.any_k_batch(queries), ref)
+    assert group.stats.remote_fetches >= rf0  # served through the planner

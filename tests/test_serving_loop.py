@@ -225,6 +225,66 @@ def test_prefetched_blocks_invalidated_by_append_like_residents():
     assert int(stack.residency_tier(np.asarray([0]))[0]) < len(stack.tiers)
 
 
+def _prefetch_fixture(hbm_bytes=None, dram_bytes=None):
+    """Engine + tier stack + a memoized whole-table plan, tiers cleared —
+    the prefetcher has the full block union to warm."""
+    from repro.storage import make_tier_stack
+
+    rng = np.random.default_rng(5)
+    rpb = 64
+    n = 8 * rpb
+    t = Table(
+        dims=np.stack([np.ones(n, np.int32),
+                       rng.integers(0, 2, n).astype(np.int32)], axis=1),
+        measures=rng.normal(size=(n, 1)).astype(np.float32),
+        cards=np.asarray([2, 2]),
+    )
+    store = build_block_store(t, records_per_block=rpb)
+    stack = make_tier_stack(hbm_bytes, dram_bytes)
+    eng = NeedleTailEngine(store, tiers=stack)
+    req = [BatchQuery([(0, 1)], n)]
+    eng.any_k_batch(req, algo="auto")
+    stack.clear()
+    return eng, stack, req
+
+
+def test_prefetch_kick_truncates_after_sorting():
+    """The per-kick cap keeps the ascending §4.1 *prefix* of the predicted
+    union — the locality-dense end — and counts the drop (never silent)."""
+    from repro.storage.prefetch import TierPrefetcher, predicted_wave_blocks
+
+    eng, stack, req = _prefetch_fixture()
+    union, _ = predicted_wave_blocks(eng, req, {})
+    assert union.size > 3  # the cap below really bites
+    pf = TierPrefetcher(eng, max_blocks=3)
+    issued = pf.kick(req)
+    assert issued == 3 and pf.stats.issued == 3
+    assert pf.stats.truncated == int(union.size) - 3
+    # kept the 3 LOWEST block ids: the sorted prefix, not arrival order
+    assert pf.prefetched == set(sorted(int(b) for b in union)[:3])
+
+
+def test_async_drain_credits_only_admitted_blocks():
+    """`fetched` counts blocks the cache reports moved — an async read the
+    budget rejects (or an append staled) is wasted bandwidth, not a fetch."""
+    from repro.storage.prefetch import TierPrefetcher
+
+    # budgets too small for even one slab: every admission is rejected
+    eng, stack, req = _prefetch_fixture(hbm_bytes=8, dram_bytes=8)
+    pf = TierPrefetcher(eng, async_fetch=True)
+    issued = pf.kick(req)
+    assert issued > 0
+    moved = pf.drain(wait=True)
+    assert moved == 0 and pf.stats.fetched == 0  # nothing actually landed
+
+    # control: a roomy stack credits exactly what the drain admitted
+    eng2, stack2, req2 = _prefetch_fixture()
+    pf2 = TierPrefetcher(eng2, async_fetch=True)
+    issued2 = pf2.kick(req2)
+    moved2 = pf2.drain(wait=True)
+    assert moved2 == issued2 and pf2.stats.fetched == issued2
+
+
 # ------------------------------------------------- (d) cost-fed admission gate
 
 

@@ -178,6 +178,19 @@ def test_profile_and_fit_and_io_time():
     assert hdd.rand_io(0, 1) < hdd.rand_io(0, 1000)
 
 
+def test_io_time_deduplicates_block_ids():
+    """A block id repeated across a wave's per-query plans is one physical
+    fetch — io_time must not charge the duplicate an extra rand_io seek."""
+    cm = make_cost_model("hdd")
+    assert cm.io_time([5, 5, 5]) == cm.io_time([5])
+    assert cm.io_time([1, 7, 1, 7, 3]) == cm.io_time([1, 3, 7])
+    # transitively: the residency-aware stack price dedupes too
+    from repro.storage import make_tier_stack
+
+    stack = make_tier_stack(None, None)
+    assert stack.effective_io_time([9, 9, 2]) == stack.effective_io_time([2, 9])
+
+
 # ------------------------------------------------------------------- serving
 
 
