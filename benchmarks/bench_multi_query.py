@@ -999,6 +999,63 @@ def serving_sweep(smoke: bool, max_slots: int = 8,
     return rows, payload
 
 
+def aggregate_sweep(smoke: bool) -> tuple[list[dict], dict]:
+    """Online-aggregation serving on a tiered engine: a cold standalone run
+    warms the tiers, then the SAME design (same seed ⇒ same pinned chosen
+    arm + random-arm permutation) is answered through the ServeEngine slot
+    loop.  Asserts the warm error-SLO wave answers within its CI while
+    reading 0 backing-store blocks — every design block is tier-resident, so
+    the ``effective_block_cost``-priced rounds are pure tier traffic."""
+    from repro.core.online_agg import AggregateQuery, run_online_aggregate
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.engine import ServeEngine
+
+    n = 60_000 if smoke else 200_000
+    rpb = 256
+    table = make_clustered_table(num_records=n, num_dims=4, density=0.15,
+                                 seed=5, correlated_measure=True)
+    eng, stack = _serving_engine(table, rpb)
+    preds, measure, k, slo, seed = ((0, 1),), 0, 800, 5.0, 0
+    rows = []
+    # cold: standalone driver pulls the design through the tier stack
+    cold0 = int(stack.stats.store_blocks_fetched)
+    cold = run_online_aggregate(
+        eng, AggregateQuery(predicates=preds, measure=measure, k=k,
+                            alpha=0.3, estimator="ratio", seed=seed),
+        error_slo=slo,
+    )
+    cold_reads = int(stack.stats.store_blocks_fetched) - cold0
+    rows.append(dict(phase="cold", rounds=cold.rounds, reason=cold.reason,
+                     store_blocks=cold_reads,
+                     halfwidth=round(cold.estimate.ci_halfwidth(), 3),
+                     io_s=round(cold.spent_io_s, 4)))
+    # warm: same request through the continuous serving loop
+    serve = ServeEngine(
+        None, None, max_slots=2,
+        aggregate_policy=AdmissionPolicy(slo_s=10.0, max_wave=2),
+    )
+    req = serve.submit_aggregate_request(
+        preds, measure, k, error_slo=slo, seed=seed)
+    warm0 = int(stack.stats.store_blocks_fetched)
+    ticks = 0
+    while not req.done:
+        serve.aggregate_tick(eng, drain=True)
+        ticks += 1
+        assert ticks < 256, "aggregate serving loop did not converge"
+    warm_reads = int(stack.stats.store_blocks_fetched) - warm0
+    hw = req.result.ci_halfwidth()
+    rows.append(dict(phase="warm", rounds=req.rounds, reason=req.reason,
+                     store_blocks=warm_reads, halfwidth=round(hw, 3),
+                     io_s=round(req.spent_io_s, 4)))
+    assert warm_reads == 0, (
+        f"warm error-SLO wave read {warm_reads} backing-store blocks")
+    assert req.reason == "ci" and hw <= slo, (req.reason, hw)
+    assert serve.last_wave_stats["kind"] == "aggregate"
+    payload = dict(cold=rows[0], warm=rows[1], error_slo=slo,
+                   num_records=n, records_per_block=rpb)
+    return rows, payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1041,6 +1098,13 @@ def main(argv=None):
                          "steady-state slot occupancy (smoke), and 0 "
                          "backing-store reads for prefetch-predicted waves; "
                          "emits BENCH_serving.json")
+    ap.add_argument("--aggregate", action="store_true",
+                    help="also run the online-aggregation serving smoke: a "
+                         "cold error-SLO run warms the tier stack, then the "
+                         "same seeded design is answered through the "
+                         "ServeEngine aggregate slot loop; asserts the warm "
+                         "wave closes its CI (reason 'ci', half-width within "
+                         "the SLO) while reading 0 backing-store blocks")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
 
@@ -1135,6 +1199,17 @@ def main(argv=None):
         print(f"# prefetch: {z['issued']} blocks warmed ahead, predicted "
               f"wave read {z['predicted_wave_store_reads']} store blocks "
               "(asserted 0)")
+
+    if args.aggregate:
+        print("\n# --- online-aggregation serving (error-SLO waves on tiers) ---")
+        grows, gpayload = aggregate_sweep(args.smoke)
+        emit(grows, ["phase", "rounds", "reason", "store_blocks", "halfwidth",
+                     "io_s"])
+        c, w = gpayload["cold"], gpayload["warm"]
+        print(f"# warm error-SLO wave: reason {w['reason']!r} in "
+              f"{w['rounds']} round(s), CI half-width {w['halfwidth']} <= "
+              f"{gpayload['error_slo']}, {w['store_blocks']} store reads "
+              f"(asserted 0); cold paid {c['store_blocks']} store reads")
 
     if args.sharded:
         print("\n# --- sharded-planning sweep (one collective per plan wave) ---")

@@ -30,6 +30,10 @@ SECTIONS = {
     "peer": ("Cooperative peer-memory tier: 0-store-read cross-shard waves + "
              "heat-driven ownership migration",
              "benchmarks.bench_multi_query", ["--peer", "--smoke"]),
+    "time_error": ("Online aggregation: error-vs-time frontier (online vs offline)",
+                   "benchmarks.bench_time_error", ["--frontier", "--smoke"]),
+    "aggregate": ("Online-aggregation serving: warm error-SLO waves read 0 store blocks",
+                  "benchmarks.bench_multi_query", ["--aggregate", "--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 

@@ -29,6 +29,11 @@ class GroupByResult:
     record_group: np.ndarray
     modeled_io_s: float
     rounds: int
+    # streaming per-group CIs (measure != None): final snapshot + one
+    # snapshot per round, each a {group: Estimate} dict from the incremental
+    # fold (repro.core.online_agg.OnlineGroupFold)
+    group_estimates: dict | None = None
+    estimate_stream: list | None = None
 
 
 def groupby_any_k(
@@ -39,8 +44,15 @@ def groupby_any_k(
     op: str = AND,
     psi: int = 8,
     max_rounds: int = 64,
+    measure: int | None = None,
 ) -> GroupByResult:
-    """Algorithm 4 with the Eq. 10 priority."""
+    """Algorithm 4 with the Eq. 10 priority.
+
+    With ``measure`` set, every fetched block additionally folds per-group
+    (τ_g, L_g) partials through :class:`repro.core.online_agg.
+    OnlineGroupFold`, and the result streams a per-round ``{group:
+    Estimate}`` snapshot (per-group mean of the measure with a design-based
+    CI) — the group-by face of the online-aggregation serving mode."""
     store = engine.store
     vocab = store.index.vocab
     rpb = store.records_per_block
@@ -58,6 +70,13 @@ def groupby_any_k(
     )
     d_g = dens[g_rows]  # [G, lam]
     f_g = np.maximum(d_g.mean(axis=1), 1e-12)  # group frequencies (Appendix A.1)
+
+    fold = None
+    stream: list[dict] = []
+    if measure is not None:
+        from repro.core.online_agg import OnlineGroupFold
+
+        fold = OnlineGroupFold(d_g, rpb)
 
     r_g = np.zeros(num_groups, dtype=np.int64)  # samples retrieved per group
     seen = np.zeros(lam, dtype=bool)
@@ -79,7 +98,7 @@ def groupby_any_k(
         if top.size == 0:
             break
         top = np.sort(top)
-        bd, _, bv = store.fetch(top)
+        bd, bm, bv = store.fetch(top)
         pmask = (
             np.asarray(store.predicate_mask(bd, predicates, op))
             if predicates
@@ -87,6 +106,9 @@ def groupby_any_k(
         )
         mask = pmask & np.asarray(bv)
         gvals = np.asarray(bd)[..., group_attr]
+        if fold is not None:
+            fold.fold(top, gvals, np.asarray(bm)[..., measure], mask)
+            stream.append(fold.snapshot())
         bi, ri = np.nonzero(mask)
         gv = gvals[bi, ri]
         # admit records only for groups still short of k (cap at k per group)
@@ -110,6 +132,8 @@ def groupby_any_k(
         record_group=np.concatenate(rec_g) if rec_g else np.asarray([], np.int64),
         modeled_io_s=engine.cost.io_time(blocks),
         rounds=rounds,
+        group_estimates=stream[-1] if stream else ({} if fold is not None else None),
+        estimate_stream=stream if fold is not None else None,
     )
 
 

@@ -363,3 +363,49 @@ class AdmissionController:
         while self._pending:
             waves.append(self.flush_one(now))
         return waves
+
+
+def arbitrate_aggregate(
+    *,
+    halfwidth: float,
+    error_slo: float | None = None,
+    deadline_s: float | None = None,
+    spent_s: float = 0.0,
+    next_cost_s: float = 0.0,
+    predicted_halfwidth: float | None = None,
+    max_s_per_width: float | None = None,
+) -> str | None:
+    """The admission layer's third arbitration arm: **fetch more blocks** vs
+    **answer now within the CI** (online aggregation, ``repro.core.
+    online_agg``).  The first two arms decide when queued work *launches*
+    (full/deadline and the cheap-cost/residency probes); this one decides
+    when a seated aggregate *stops* — and it is priced in the same currency,
+    the modeled ``TierStack.effective_io_time`` of the next chunk
+    (:func:`repro.storage.prefetch.effective_block_cost`).
+
+    Called after every fold with the stream's current 95% CI half-width.
+    Returns the leave reason, or ``None`` to keep fetching:
+
+    * ``"ci"`` — the error SLO is met: the CI closed, the slot is released
+      the instant this fires (mid-wave, like a k-satisfied exemplar);
+    * ``"deadline"`` — a time-SLO request whose spent + next-chunk modeled
+      I/O would overrun ``deadline_s`` answers now with its best estimate
+      (the BlinkDB time-bound contract: never start a chunk you cannot
+      afford);
+    * ``"diminishing"`` — optional marginal-value cutoff: the next chunk's
+      modeled seconds per expected unit of CI-width reduction exceeds
+      ``max_s_per_width`` (fetching more is no longer worth its I/O).
+    """
+    if error_slo is not None and halfwidth <= error_slo:
+        return "ci"
+    if deadline_s is not None and spent_s + next_cost_s > deadline_s:
+        return "deadline"
+    if (
+        max_s_per_width is not None
+        and predicted_halfwidth is not None
+        and halfwidth != float("inf")
+    ):
+        gain = halfwidth - predicted_halfwidth
+        if gain <= 0.0 or next_cost_s / gain > max_s_per_width:
+            return "diminishing"
+    return None

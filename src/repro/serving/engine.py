@@ -90,6 +90,36 @@ class ExemplarRequest:
     done: bool = False
 
 
+@dataclasses.dataclass
+class AggregateRequest:
+    """Queued online aggregate (the BlinkDB contract): mean/total of
+    ``measure`` over the predicates, answered the moment its 95% CI
+    half-width closes under ``error_slo`` OR its modeled-I/O ``deadline_s``
+    budget would be overrun by the next chunk — whichever SLO the caller
+    set.  With neither, the request runs to ``max_rounds`` / design
+    exhaustion (best exact-ish answer)."""
+
+    rid: int
+    predicates: Any
+    measure: int
+    k: int  # design-split seed (chosen-arm size), not a row target
+    op: str = "and"
+    error_slo: float | None = None  # target CI half-width on the mean
+    deadline_s: float | None = None  # modeled demand-I/O budget
+    alpha: float = 0.3
+    estimator: str = "ratio"
+    algo: str = "threshold"
+    seed: int = 0
+    chunk_blocks: int = 8
+    max_rounds: int = 64
+    result: Any = None  # final Estimate once answered
+    stream: list = dataclasses.field(default_factory=list)  # per-round Estimates
+    reason: str | None = None  # "ci" | "deadline" | "exhausted" | "budget"
+    rounds: int = 0
+    spent_io_s: float = 0.0
+    done: bool = False
+
+
 def _merge_lm_cache_rows(cache, joined, row_mask: np.ndarray):
     """Graft joiner batch rows from `joined` (a freshly prefilled cache)
     into the live decode cache.  Every decode-cache leaf is laid out
@@ -216,6 +246,17 @@ class _ExemplarLoop:
         # re-read on demand; the first-touch ledger stays (accounting only)
 
 
+class _AggregateLoop:
+    """Mutable state of the continuous online-aggregation loop: one slot
+    pool whose items are ``(AggregateRequest, OnlineAggregator)`` pairs.
+    Rebuilt when the serving engine is pointed at a different any-k engine
+    (stranded aggregators finalize with what they have)."""
+
+    def __init__(self, engine, n_slots: int):
+        self.engine = engine
+        self.sched = SlotScheduler(n_slots)
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -232,6 +273,7 @@ class ServeEngine:
         exemplar_device: bool = False,
         exemplar_residency: bool = False,
         exemplar_prefetch: bool = False,
+        aggregate_policy: AdmissionPolicy | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -272,8 +314,16 @@ class ServeEngine:
         self.exemplar_admission = AdmissionController(
             exemplar_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
         )
+        self.aggregate_admission = AdmissionController(
+            aggregate_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
+        )
+        # optional marginal-value cutoff for the answer-now arbitration
+        # (modeled seconds per unit of expected CI-width reduction); None
+        # keeps only the request's own error/deadline SLOs in play
+        self.aggregate_max_s_per_width: float | None = None
         self._rid = itertools.count()
         self._exemplar_loop: _ExemplarLoop | None = None
+        self._aggregate_loop: _AggregateLoop | None = None
         self._prefetcher = None  # (engine, TierPrefetcher) cache
         self._lm: dict | None = None  # continuous LM wave: cache/pos/slots
         if cfg is None:
@@ -653,6 +703,183 @@ class ServeEngine:
         }
         return done
 
+    def _aggregate_admission(self) -> AdmissionController:
+        """The aggregate admission controller, created lazily for engines
+        built without ``__init__`` (test shims)."""
+        adm = getattr(self, "aggregate_admission", None)
+        if adm is None:
+            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots))
+            self.aggregate_admission = adm
+        return adm
+
+    def submit_aggregate_request(
+        self,
+        predicates,
+        measure: int,
+        k: int,
+        *,
+        op: str = "and",
+        error_slo: float | None = None,
+        deadline_s: float | None = None,
+        alpha: float = 0.3,
+        estimator: str = "ratio",
+        algo: str = "threshold",
+        seed: int = 0,
+        chunk_blocks: int = 8,
+        max_rounds: int = 64,
+    ) -> AggregateRequest:
+        """Admit an online aggregate under the SLO policy; it seats in the
+        continuous loop's aggregate pool and streams an Estimate per round
+        until its SLO answers it."""
+        req = AggregateRequest(
+            next(self._rid), predicates, measure, k, op,
+            error_slo=error_slo, deadline_s=deadline_s, alpha=alpha,
+            estimator=estimator, algo=algo, seed=seed,
+            chunk_blocks=chunk_blocks, max_rounds=max_rounds,
+        )
+        self._aggregate_admission().submit(req)
+        return req
+
+    def aggregate_tick(
+        self, engine, now: float | None = None, drain: bool = False
+    ) -> list[AggregateRequest]:
+        """One round of the continuous online-aggregation loop.
+
+        The aggregate counterpart of :meth:`exemplar_tick`: freed slots are
+        refilled from the aggregate admission queue mid-wave, every busy
+        slot stages its next chunk (one shared deduplicated ``ensure`` pays
+        the union fetch), folds it through its
+        :class:`~repro.core.online_agg.OnlineAggregator`, and then the
+        third arbitration arm (:func:`repro.serving.admission.
+        arbitrate_aggregate`) decides answer-now vs fetch-more per slot —
+        priced by :func:`repro.storage.prefetch.effective_block_cost`, the
+        same ``TierStack.effective_io_time`` probe cost-fed admission uses.
+        An error-SLO request whose CI closes leaves its slot THIS tick
+        (mid-wave, like a k-satisfied exemplar); ``last_wave_stats`` records
+        each leave under ``"answered"`` (rid / reason / rounds / halfwidth).
+        Returns the requests answered this tick.
+        """
+        from repro.core.online_agg import AggregateQuery, OnlineAggregator
+        from repro.serving.admission import arbitrate_aggregate
+        from repro.storage.prefetch import effective_block_cost
+
+        adm = self._aggregate_admission()
+        loop = self._aggregate_loop
+        if (
+            loop is None
+            or loop.engine is not engine
+            or loop.sched.n_slots != self.max_slots
+        ):
+            if loop is not None:  # stranded on a stale engine: answer as-is
+                for slot in loop.sched.busy_slots():
+                    req, agg = loop.sched.slots[slot]
+                    if agg.estimates:
+                        req.result = agg.estimates[-1]
+                    req.reason, req.done = "budget", True
+                    agg.close()
+            loop = _AggregateLoop(engine, self.max_slots)
+            self._aggregate_loop = loop
+        sched = loop.sched
+        done: list[AggregateRequest] = []
+        free = sched.free_slots()
+        if free and adm.pending:
+            if sched.busy:
+                wave = adm.claim(len(free), now, mid_wave=True)
+            elif drain:
+                wave = adm.claim(len(free), now, force=True)
+            else:
+                wave = adm.claim(len(free), now)
+            for req in wave:
+                q = AggregateQuery(
+                    req.predicates, req.measure, req.k, alpha=req.alpha,
+                    op=req.op, estimator=req.estimator, algo=req.algo,
+                    seed=req.seed,
+                )
+                agg = OnlineAggregator(engine, q, chunk_blocks=req.chunk_blocks)
+                sched.join((req, agg))
+        if not sched.busy:
+            return done
+        cache = engine.block_cache
+        hits0 = cache.stats.hits
+        store0 = cache.stats.store_blocks_fetched
+        tier_fn = getattr(cache, "tier_counters", None)
+        tier0 = tier_fn() if tier_fn is not None else None
+        # stage every slot's chunk and price it BEFORE the shared fetch —
+        # the demand price a solo run would have paid for that chunk
+        staged: dict[int, tuple[np.ndarray, float]] = {}
+        for slot in sched.busy_slots():
+            _, agg = sched.slots[slot]
+            chunk = agg.next_blocks()
+            staged[slot] = (chunk, effective_block_cost(engine, chunk))
+        union = (
+            np.unique(np.concatenate([c for c, _ in staged.values()]))
+            if any(c.size for c, _ in staged.values())
+            else np.asarray([], dtype=np.int64)
+        )
+        missed: list[np.ndarray] = []
+        prev_log, cache.fetch_log = cache.fetch_log, missed
+        try:
+            if union.size:
+                cache.ensure(engine.store, union)
+            for slot in sorted(staged):
+                req, agg = sched.slots[slot]
+                e = agg.fold()
+                agg.spent_io_s += staged[slot][1]
+                req.stream.append(e)
+                req.rounds = agg.rounds
+                req.spent_io_s = agg.spent_io_s
+        finally:
+            cache.fetch_log = prev_log
+        sched.tick()
+        answered: list[dict] = []
+        for slot in sched.busy_slots():
+            req, agg = sched.slots[slot]
+            nxt = agg.next_blocks()  # peek the following chunk's price
+            verdict = arbitrate_aggregate(
+                halfwidth=agg.halfwidth(),
+                error_slo=req.error_slo,
+                deadline_s=req.deadline_s,
+                spent_s=agg.spent_io_s,
+                next_cost_s=effective_block_cost(engine, nxt),
+                predicted_halfwidth=agg.predicted_halfwidth(agg.chunk_blocks),
+                max_s_per_width=getattr(self, "aggregate_max_s_per_width", None),
+            )
+            if verdict is None and agg.exhausted:
+                verdict = "exhausted"
+            if verdict is None and agg.rounds >= req.max_rounds:
+                verdict = "budget"
+            if verdict is not None:
+                req.result = agg.estimates[-1]
+                req.reason = verdict
+                req.done = True
+                agg.close()
+                sched.leave(slot)
+                done.append(req)
+                answered.append({
+                    "rid": req.rid,
+                    "reason": verdict,
+                    "rounds": agg.rounds,
+                    "halfwidth": agg.halfwidth(),
+                })
+        self.last_wave_stats = {
+            "kind": "aggregate",
+            "wave_size": len(staged),
+            "rounds": 1,
+            "store_blocks_fetched": int(cache.stats.store_blocks_fetched - store0),
+            "cache_hits": int(cache.stats.hits - hits0),
+            "unique_blocks": int(union.size),
+            "tiers": (
+                {k: v - tier0[k] for k, v in tier_fn().items()}
+                if tier0 is not None
+                else None
+            ),
+            "slot_occupancy": sched.occupancy,
+            "modeled_store_io_s": sum(engine.cost.io_time(m) for m in missed),
+            "pending": adm.pending,
+            "answered": answered,
+        }
+        return done
+
     def lm_tick(self) -> list[Request]:
         """One tick of the continuous LM decode loop.
 
@@ -747,17 +974,21 @@ class ServeEngine:
     def step(
         self, engine=None, now: float | None = None, drain: bool = False
     ) -> dict:
-        """One continuous-batching tick over BOTH request kinds: the LM
+        """One continuous-batching tick over ALL request kinds: the LM
         decode pool advances one token (joiners seated first) and, when an
-        any-k `engine` is given, the exemplar pool runs one refill round
-        (freed slots refilled mid-wave).  Returns
-        ``{"lm": [completed Requests], "exemplar": [completed
-        ExemplarRequests]}``."""
-        out = {"lm": [], "exemplar": []}
+        any-k `engine` is given, the exemplar pool runs one refill round and
+        the online-aggregation pool one fold round (freed slots refilled
+        mid-wave in both).  Returns ``{"lm": [completed Requests],
+        "exemplar": [completed ExemplarRequests], "aggregate": [answered
+        AggregateRequests]}``.  ``last_wave_stats`` reflects the last pool
+        that actually ran a round this tick (the aggregate ledger carries
+        ``"kind": "aggregate"``)."""
+        out = {"lm": [], "exemplar": [], "aggregate": []}
         if self._prefill is not None and (self.queue or self._lm is not None):
             out["lm"] = self.lm_tick()
         if engine is not None:
             out["exemplar"] = self.exemplar_tick(engine, now=now, drain=drain)
+            out["aggregate"] = self.aggregate_tick(engine, now=now, drain=drain)
         return out
 
     def run_continuous(self, engine=None, max_ticks: int = 100_000,
@@ -769,13 +1000,18 @@ class ServeEngine:
         :meth:`step`."""
         lm_done: list[Request] = []
         ex_done: list[ExemplarRequest] = []
+        agg_done: list[AggregateRequest] = []
         adm = self._exemplar_admission() if engine is not None else None
+        agg_adm = self._aggregate_admission() if engine is not None else None
 
         def signature():
             loop = self._exemplar_loop
+            aloop = self._aggregate_loop
             return (
                 adm.pending if adm is not None else 0,
                 loop.sched.rounds if loop is not None else 0,
+                agg_adm.pending if agg_adm is not None else 0,
+                aloop.sched.rounds if aloop is not None else 0,
                 len(self.queue),
                 int(self._lm["pos"]) if self._lm is not None else -1,
             )
@@ -789,12 +1025,27 @@ class ServeEngine:
                 adm.pending > 0
                 or (loop is not None and loop.engine is engine and loop.sched.busy > 0)
             )
-            if not lm_busy and not ex_busy:
+            aloop = self._aggregate_loop
+            agg_busy = engine is not None and (
+                agg_adm.pending > 0
+                or (
+                    aloop is not None
+                    and aloop.engine is engine
+                    and aloop.sched.busy > 0
+                )
+            )
+            if not lm_busy and not ex_busy and not agg_busy:
                 break
             sig = signature()
             out = self.step(engine, drain=drain)
             lm_done.extend(out["lm"])
             ex_done.extend(out["exemplar"])
-            if not out["lm"] and not out["exemplar"] and signature() == sig:
+            agg_done.extend(out["aggregate"])
+            if (
+                not out["lm"]
+                and not out["exemplar"]
+                and not out["aggregate"]
+                and signature() == sig
+            ):
                 break  # stalled: nothing moved and nothing finished
-        return {"lm": lm_done, "exemplar": ex_done}
+        return {"lm": lm_done, "exemplar": ex_done, "aggregate": agg_done}

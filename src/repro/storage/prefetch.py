@@ -102,6 +102,35 @@ def predicted_wave_blocks(
     return np.unique(np.concatenate(union)), n_pred
 
 
+def effective_block_cost(
+    engine, block_ids, *, missed_only: bool = False
+) -> float:
+    """Modeled demand I/O for ``block_ids`` under the engine's cache state —
+    the shared pricing primitive behind BOTH admission arbitration arms.
+
+    With a :class:`~repro.storage.tiers.TierStack` attached, blocks are
+    priced by :meth:`~repro.storage.tiers.TierStack.effective_io_time`
+    (resident tiers at their own cost model, misses under the engine's
+    backing model); with a flat LRU, non-cached blocks under the backing
+    model.  ``missed_only=True`` drops tier-resident blocks entirely before
+    pricing — the cost-fed *launch* gate's semantics (a resident wave prices
+    at 0.0); the online-aggregation *answer-now* arm prices the full chunk
+    (tier hits still cost their tier's modeled time).
+    """
+    ids = np.asarray(block_ids, dtype=np.int64)
+    if ids.size == 0:
+        return 0.0
+    cache = engine.block_cache
+    if hasattr(cache, "effective_io_time") and hasattr(cache, "residency_tier"):
+        if missed_only:
+            ids = ids[cache.residency_tier(ids) >= len(cache.tiers)]
+        return float(cache.effective_io_time(ids, backing=engine.cost))
+    missed = np.asarray(
+        [int(b) for b in ids if int(b) not in cache], dtype=np.int64
+    )
+    return float(engine.cost.io_time(missed))
+
+
 def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
     """Bind a cost probe for ``AdmissionController(cost_probe=...)``: price a
     pending wave by the effective I/O time of its *missed* predicted blocks.
@@ -127,16 +156,7 @@ def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
         union, n_pred = predicted_wave_blocks(engine, reqs, row_cache)
         if n_pred < len(reqs):
             return None
-        cache = engine.block_cache
-        if hasattr(cache, "effective_io_time") and hasattr(cache, "residency_tier"):
-            if union.size == 0:
-                return 0.0
-            missed = union[cache.residency_tier(union) >= len(cache.tiers)]
-            return float(cache.effective_io_time(missed, backing=engine.cost))
-        missed = np.asarray(
-            [int(b) for b in union if int(b) not in cache], dtype=np.int64
-        )
-        return float(engine.cost.io_time(missed))
+        return effective_block_cost(engine, union, missed_only=True)
 
     return probe
 

@@ -93,3 +93,80 @@ def test_estimator_math_hand_example():
     r = ratio_estimator(tau, np.asarray([]), n, np.asarray([]), plan, 6.0)
     assert r.mean == pytest.approx(10.0)
     assert r.total == pytest.approx(60.0)
+
+
+# ------------------------------------------- degenerate-input guard rails
+# One regression test per guard in repro.core.estimators: these inputs used
+# to blow up through the 1e-12 π floor (totals inflated by ~1e12) or divide
+# by zero; each now has a pinned, defined result.
+
+
+def _plan(sc, sr, num_valid, pi_r):
+    from repro.core.hybrid import HybridPlan
+
+    return HybridPlan(
+        sc=np.asarray(sc, np.int64), sr=np.asarray(sr, np.int64),
+        num_valid_blocks=num_valid, pi_r=pi_r,
+    )
+
+
+def test_guard_zero_valid_rows():
+    """A sample with no valid rows anywhere: ratio's L_hat is 0, so the mean
+    is defined as 0 (not a floored-division blow-up); HT agrees."""
+    empty = np.asarray([], np.float64)
+    tau_r = np.asarray([0.0, 0.0])
+    n_r = np.asarray([0.0, 0.0])
+    plan = _plan([], [3, 7], 10, 0.2)
+    r = ratio_estimator(empty, tau_r, empty, n_r, plan, 100.0)
+    assert r.mean == 0.0 and r.total == 0.0
+    assert r.var_mean == 0.0 and r.num_samples == 0
+    h = horvitz_thompson(empty, tau_r, empty, n_r, plan, 100.0)
+    assert h.total == 0.0 and h.mean == 0.0 and np.isfinite(h.var_total)
+
+
+def test_guard_single_sampled_block():
+    """One random-arm block: no joint-inclusion pairs exist, so the pairwise
+    variance term is 0 by the nr<2 early-out and everything stays finite."""
+    empty = np.asarray([], np.float64)
+    r = horvitz_thompson(
+        empty, np.asarray([12.0]), empty, np.asarray([4.0]),
+        _plan([], [2], 8, 1.0 / 8.0), 64.0,
+    )
+    assert r.total == pytest.approx(12.0 * 8.0)
+    assert np.isfinite(r.var_total) and r.var_total >= 0.0
+    rr = ratio_estimator(
+        empty, np.asarray([12.0]), empty, np.asarray([4.0]),
+        _plan([], [2], 8, 1.0 / 8.0), 64.0,
+    )
+    assert rr.mean == pytest.approx(3.0)  # self-weighted: 12/4
+    assert np.isfinite(rr.var_mean) and rr.var_mean >= 0.0
+
+
+def test_guard_pi_r_zero_with_nonempty_arm():
+    """An inconsistent plan (pi_r == 0 but sampled blocks exist) floors π at
+    the SRSWOR-consistent nr/rem instead of 1e-12: a 2-of-8 sample weights
+    each block by 4, never by 1e12."""
+    empty = np.asarray([], np.float64)
+    tau_r = np.asarray([10.0, 14.0])
+    n_r = np.asarray([2.0, 2.0])
+    plan = _plan([], [1, 5], 10, 0.0)  # rem = 10 - 0 = 10, nr = 2
+    h = horvitz_thompson(empty, tau_r, empty, n_r, plan, 100.0)
+    assert h.total == pytest.approx((10.0 + 14.0) * (10.0 / 2.0))
+    assert h.total < 1e6  # regression: the old floor gave ~2.4e13
+    r = ratio_estimator(empty, tau_r, empty, n_r, plan, 100.0)
+    assert r.mean == pytest.approx(24.0 / 4.0)
+
+
+def test_guard_nonpositive_population():
+    """population_size <= 0 (no predicated mass in the density map): the
+    mean of an empty population is 0 with zero variance, not tau/1e-12."""
+    empty = np.asarray([], np.float64)
+    tau_r = np.asarray([5.0])
+    n_r = np.asarray([1.0])
+    plan = _plan([], [0], 4, 0.25)
+    h = horvitz_thompson(empty, tau_r, empty, n_r, plan, 0.0)
+    assert h.mean == 0.0 and h.var_mean == 0.0
+    assert h.total == pytest.approx(20.0)  # the HT total is still defined
+    r = ratio_estimator(empty, tau_r, empty, n_r, plan, 0.0)
+    assert r.total == 0.0 and r.var_mean == 0.0
+    assert r.mean == pytest.approx(5.0)  # ratio mean survives: tau_hat/L_hat

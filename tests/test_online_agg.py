@@ -1,0 +1,387 @@
+"""Online-aggregation statistical suite (the tests that lock PR 8).
+
+Three contracts, in rising order of machinery:
+
+1. **Fold identity** — the incremental per-round fold of
+   ``repro.core.online_agg.OnlineAggregator`` is not an approximation of the
+   offline §5 estimators: its final-round ``Estimate`` must be
+   **float-identical** (``==``, not ``allclose``) to running
+   ``horvitz_thompson`` / ``ratio_estimator`` offline on the same fetched
+   block set, across clustered/uniform/skewed layouts, AND/OR predicates,
+   both estimators, and appends landing mid-stream.
+2. **Statistical calibration** — over ≥200 seeded independent designs the
+   95% CI must actually cover the true population mean at ~nominal rate
+   (empirical coverage in [0.90, 0.99]), and the mean CI half-width per
+   round must shrink monotonically as blocks arrive.  This is the test that
+   caught (and now pins) the variance-estimator form: the leading term must
+   be the (1-π)/π² *estimator* weight, not the (1-π)/π theoretical-variance
+   weight evaluated over the sample.
+3. **Serving semantics** — an error-SLO request leaves its slot the tick
+   its CI closes (mid-wave, recorded in ``last_wave_stats["answered"]``),
+   the freed slot is refilled from the admission queue mid-wave, and every
+   chunk is priced through ``repro.storage.prefetch.effective_block_cost``
+   (``TierStack.effective_io_time`` when tiers are attached).
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import estimators as est
+from repro.core.engine import NeedleTailEngine
+from repro.core.groupby import groupby_any_k
+from repro.core.online_agg import (
+    AggregateQuery,
+    OnlineAggregator,
+    run_online_aggregate,
+)
+from repro.data.block_store import Table, build_block_store
+from repro.data.synthetic import make_clustered_table
+from repro.serving.admission import AdmissionPolicy, arbitrate_aggregate
+from repro.serving.engine import ServeEngine
+from repro.storage.prefetch import effective_block_cost
+from repro.storage.tiers import make_tier_stack
+
+pytestmark = pytest.mark.aggregation
+
+RPB = 64
+LAYOUTS = ("clustered", "uniform", "skewed")
+# predicate menu: single-attr, joint AND, joint OR — all over binary dims
+PREDSETS = (
+    (((0, 1),), "and"),
+    (((0, 1), (1, 1)), "and"),
+    (((0, 1), (2, 1)), "or"),
+)
+
+# Module-level workload cache instead of fixtures: the offline-container
+# hypothesis shim (tests/conftest.py) wraps @given tests into zero-argument
+# runners, so property tests cannot take pytest fixtures.
+_ENGINES: dict[str, NeedleTailEngine] = {}
+
+
+def _layout_table(layout: str) -> Table:
+    if layout == "clustered":
+        return make_clustered_table(
+            12_000, num_dims=4, density=0.15, seed=5, correlated_measure=True
+        )
+    if layout == "skewed":
+        # denser, tighter clusters: a few blocks carry most of the mass
+        return make_clustered_table(
+            12_000, num_dims=4, density=0.3, seed=7, mean_cluster=16,
+            correlated_measure=True,
+        )
+    # uniform: destroy the clustering of the base table by a global row
+    # shuffle — every block then holds an SRS of the population
+    t = _layout_table("clustered")
+    perm = np.random.default_rng(11).permutation(t.dims.shape[0])
+    return Table(dims=t.dims[perm], measures=t.measures[perm], cards=t.cards)
+
+
+def _engine(layout: str) -> NeedleTailEngine:
+    eng = _ENGINES.get(layout)
+    if eng is None:
+        eng = NeedleTailEngine(build_block_store(_layout_table(layout), RPB))
+        _ENGINES[layout] = eng
+    return eng
+
+
+def _offline_estimate(engine, query, plan, population_size):
+    """The offline §5 path (NeedleTailEngine.aggregate's extraction +
+    estimator call) run one-shot on an explicit design — the oracle the
+    incremental fold must match bit for bit."""
+    blocks = np.sort(plan.blocks)
+    bd, bm, bv = engine.block_cache.get_many(engine.store, blocks)
+    mask = np.asarray(engine._mask(bd, query.predicates, query.op) & bv)
+    vals = np.asarray(bm)[..., query.measure]
+    tau_i = np.sum(np.where(mask, vals, 0.0), axis=1)
+    n_i = np.sum(mask, axis=1).astype(np.float64)
+    in_sc = np.isin(blocks, plan.sc)
+    fn = est.horvitz_thompson if query.estimator == "ht" else est.ratio_estimator
+    return fn(
+        tau_i[in_sc], tau_i[~in_sc], n_i[in_sc], n_i[~in_sc],
+        plan, population_size,
+    )
+
+
+def _assert_float_identical(a: est.Estimate, b: est.Estimate) -> None:
+    assert a.total == b.total
+    assert a.mean == b.mean
+    assert a.var_total == b.var_total
+    assert a.var_mean == b.var_mean
+    assert a.num_samples == b.num_samples
+
+
+# --------------------------------------------------- (1) fold identity
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.sampled_from(LAYOUTS),
+    st.sampled_from(PREDSETS),
+    st.sampled_from(("ht", "ratio")),
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=1, max_value=6),
+)
+def test_incremental_fold_float_identical_to_offline(
+    layout, predset, estimator, seed, rounds
+):
+    """Stop the stream after any number of rounds: the last Estimate equals
+    the offline estimator on the fetched set — total, mean, both variances —
+    under ``==``, for every layout x predicate-op x estimator combination."""
+    engine = _engine(layout)
+    preds, op = predset
+    query = AggregateQuery(
+        predicates=preds, measure=0, k=300, alpha=0.4, op=op,
+        estimator=estimator, seed=seed,
+    )
+    res = run_online_aggregate(engine, query, chunk_blocks=8, max_rounds=rounds)
+    assert len(res.stream) == res.rounds >= 1
+    offline = _offline_estimate(engine, query, res.plan, res.population_size)
+    _assert_float_identical(res.estimate, offline)
+    # the design snapshot must be internally consistent: fetched random-arm
+    # prefix at its evolving inclusion probability
+    assert res.plan.pi_r == pytest.approx(
+        len(res.plan.sr) / max(res.plan.num_valid_blocks - len(res.plan.sc), 1)
+    )
+
+
+def test_fold_identity_survives_append_mid_stream():
+    """Rows appended between rounds dirty the trailing block; the aggregator
+    re-fetches and re-folds it, so the final fold still equals the offline
+    estimator reading the *current* bytes of the same pinned design."""
+    # dedicated engine: the append grows this store only
+    table = _layout_table("clustered")
+    engine = NeedleTailEngine(build_block_store(table, RPB))
+    query = AggregateQuery(
+        predicates=((0, 1),), measure=0, k=300, alpha=0.4, estimator="ratio",
+        seed=3,
+    )
+    agg = OnlineAggregator(engine, query, chunk_blocks=8)
+    agg.next_blocks()
+    agg.fold()
+    agg.next_blocks()
+    agg.fold()
+    # append mid-stream: rewrites the trailing partial block (in the pinned
+    # design — the population estimate predates these rows, but the folded
+    # bytes must not go stale)
+    rng = np.random.default_rng(99)
+    new = Table(
+        dims=np.column_stack(
+            [rng.integers(0, c, size=50).astype(np.int32) for c in table.cards]
+        ),
+        measures=rng.normal(200.0, 5.0, size=(50, table.measures.shape[1])).astype(
+            np.float32
+        ),
+        cards=table.cards,
+    )
+    engine.append(new)
+    assert agg._dirty, "append did not notify the aggregator"
+    while not agg.exhausted:
+        agg.next_blocks()
+        agg.fold()
+    # every folded block has been re-read since the append; only blocks the
+    # append CREATED (outside the pinned design, never folded) may stay dirty
+    assert not (agg._dirty & set(agg._tau)), "dirtied folded blocks not re-read"
+    assert all(b >= agg.num_valid_blocks for b in agg._dirty)
+    final = agg.estimates[-1]
+    plan = agg.design_snapshot()
+    offline = _offline_estimate(engine, query, plan, agg.population_size)
+    agg.close()
+    _assert_float_identical(final, offline)
+    # full coverage of the pinned design: the random arm is exhaustive
+    assert plan.pi_r == 1.0
+
+
+# ------------------------------------------- (2) statistical calibration
+
+
+def test_ci_coverage_nominal_and_halfwidth_shrinks():
+    """≥200 independent seeded designs: the 95% CI covers the true
+    population mean at close to nominal rate, and the per-round mean CI
+    half-width is monotonically non-increasing (the trend over trial
+    means)."""
+    table = _layout_table("clustered")
+    engine = _engine("clustered")
+    preds = ((0, 1),)
+    true_mean = float(table.measures[table.dims[:, 0] == 1, 0].mean())
+    trials, rounds = 220, 4
+    covered = 0
+    halfwidths = np.zeros((trials, rounds))
+    for t in range(trials):
+        query = AggregateQuery(
+            predicates=preds, measure=0, k=300, alpha=0.5, estimator="ratio",
+            seed=t,
+        )
+        res = run_online_aggregate(engine, query, chunk_blocks=8, max_rounds=rounds)
+        assert res.rounds == rounds
+        e = res.estimate
+        if abs(e.mean - true_mean) <= e.ci_halfwidth():
+            covered += 1
+        halfwidths[t] = [s.ci_halfwidth() for s in res.stream]
+    coverage = covered / trials
+    assert 0.90 <= coverage <= 0.99, f"empirical coverage {coverage}"
+    mean_hw = halfwidths.mean(axis=0)
+    assert np.all(np.diff(mean_hw) <= 1e-9), f"half-widths not shrinking: {mean_hw}"
+    # the CI is actually informative by the last round, not just shrinking
+    assert mean_hw[-1] < 0.6 * mean_hw[0]
+
+
+def test_groupby_streaming_cis_are_fold_snapshots():
+    """groupby_any_k with a measure streams per-group Estimates; each
+    group's final CI is finite, its mean matches the plain mean of the
+    group's retrieved valid records (the self-weighted design), and the
+    snapshot stream grows one entry per round."""
+    engine = _engine("clustered")
+    res = groupby_any_k(engine, ((0, 1),), group_attr=1, k=150, measure=0)
+    assert res.estimate_stream is not None
+    assert len(res.estimate_stream) == res.rounds
+    assert res.group_estimates, "no group reached a snapshot"
+    store = engine.store
+    for g, e in res.group_estimates.items():
+        assert math.isfinite(e.ci_halfwidth())
+        assert e.var_mean >= 0.0
+        # self-weighting: ratio mean over equal-π blocks == mean over the
+        # folded blocks' matching records
+        blocks = np.unique(res.blocks_fetched)
+        bd, bm, bv = store.fetch(blocks)
+        mask = (
+            np.asarray(store.predicate_mask(bd, ((0, 1),), "and"))
+            & np.asarray(bv)
+            & (np.asarray(bd)[..., 1] == g)
+        )
+        if mask.any():
+            want = float(np.asarray(bm)[..., 0][mask].mean())
+            assert e.mean == pytest.approx(want)
+    # measure=None keeps the legacy result shape
+    legacy = groupby_any_k(engine, ((0, 1),), group_attr=1, k=150)
+    assert legacy.group_estimates is None and legacy.estimate_stream is None
+
+
+# ------------------------------------------------ (3) serving semantics
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _serve(max_slots=2):
+    return ServeEngine(
+        None, None, max_slots=max_slots,
+        aggregate_policy=AdmissionPolicy(slo_s=10.0, max_wave=max_slots),
+        clock=_Clock(),
+    )
+
+
+def test_error_slo_releases_slot_mid_wave():
+    """Three error-SLO requests on two slots: CI-closing requests leave
+    their slot the same tick (``last_wave_stats["answered"]`` records the
+    rid/reason), and the queued request seats into the freed slot mid-wave
+    (refill_waves ticks up) without waiting for the other occupant."""
+    engine = NeedleTailEngine(build_block_store(_layout_table("clustered"), RPB))
+    serve = _serve(max_slots=2)
+    # req 0: generous SLO, closes after the first arbitrated round; req 1:
+    # tight SLO, stays seated for several rounds; req 2 queues behind them
+    slos = (15.0, 3.0, 15.0)
+    reqs = [
+        serve.submit_aggregate_request(
+            ((0, 1),), 0, 300, error_slo=slo, seed=s, chunk_blocks=8
+        )
+        for s, slo in enumerate(slos)
+    ]
+    done1 = serve.aggregate_tick(engine)
+    stats = serve.last_wave_stats
+    assert stats["kind"] == "aggregate"
+    assert stats["wave_size"] == 2 and stats["pending"] == 1
+    assert [r.rid for r in done1] == [reqs[0].rid]
+    assert [a["rid"] for a in stats["answered"]] == [reqs[0].rid]
+    a = stats["answered"][0]
+    assert a["reason"] == "ci" and a["halfwidth"] <= slos[0]
+    assert reqs[0].done and reqs[0].reason == "ci"
+    assert reqs[0].result.ci_halfwidth() <= slos[0]
+    assert reqs[0].stream and reqs[0].stream[-1] is reqs[0].result
+    assert not reqs[1].done, "tight-SLO occupant should still be seated"
+    # the freed slot(s) seat the queued request mid-wave on the next tick
+    serve.aggregate_tick(engine)
+    assert serve.aggregate_admission.stats.refill_waves >= 1
+    assert serve.aggregate_admission.pending == 0
+    # drive to completion; everyone answers within the SLO
+    ticks = 0
+    while not all(r.done for r in reqs):
+        serve.aggregate_tick(engine, drain=True)
+        ticks += 1
+        assert ticks < 64
+    assert all(r.reason == "ci" for r in reqs)
+    assert all(r.result.ci_halfwidth() <= s for r, s in zip(reqs, slos))
+
+
+def test_deadline_priced_by_effective_io_time():
+    """Deadline arbitration runs in ``effective_block_cost`` currency: on a
+    tiered engine a round's charged I/O equals the TierStack's
+    ``effective_io_time`` of that round's chunk, and a deadline request
+    stops the moment the next chunk would overrun the budget."""
+    store = build_block_store(_layout_table("clustered"), RPB)
+    engine = NeedleTailEngine(store, tiers=make_tier_stack(None, None))
+    query = AggregateQuery(
+        predicates=((0, 1),), measure=0, k=300, alpha=0.4, estimator="ratio",
+        seed=1,
+    )
+    # oracle price of round 1: an identical cold aggregator's first chunk
+    # through the same probe
+    ref_engine = NeedleTailEngine(store, tiers=make_tier_stack(None, None))
+    ref = OnlineAggregator(ref_engine, query, chunk_blocks=8)
+    first_chunk = ref.next_blocks()
+    ref.close()
+    want = effective_block_cost(ref_engine, first_chunk)
+    assert want > 0.0
+    res1 = run_online_aggregate(engine, query, chunk_blocks=8, max_rounds=1)
+    assert res1.spent_io_s == want
+    # deadline ~1.5 rounds of backing I/O: the run must answer with reason
+    # "deadline" BEFORE overrunning (spent stays within budget; the skipped
+    # next chunk would have overrun it)
+    engine2 = NeedleTailEngine(store, tiers=make_tier_stack(None, None))
+    res = run_online_aggregate(
+        engine2, query, deadline_s=1.5 * want, chunk_blocks=8, max_rounds=32
+    )
+    assert res.reason == "deadline"
+    assert res.spent_io_s <= 1.5 * want
+
+
+def test_arbitrate_aggregate_arm_order():
+    """Unit contract of the third arbitration arm: CI-closure wins over
+    deadline, deadline fires on would-overrun, diminishing-returns needs the
+    explicit knob, and no SLO means keep fetching."""
+    assert arbitrate_aggregate(halfwidth=0.5, error_slo=1.0) == "ci"
+    assert (
+        arbitrate_aggregate(
+            halfwidth=0.5, error_slo=1.0, deadline_s=1.0, spent_s=2.0,
+            next_cost_s=1.0,
+        )
+        == "ci"
+    )
+    assert (
+        arbitrate_aggregate(
+            halfwidth=2.0, error_slo=1.0, deadline_s=1.0, spent_s=0.8,
+            next_cost_s=0.3,
+        )
+        == "deadline"
+    )
+    assert (
+        arbitrate_aggregate(
+            halfwidth=2.0, deadline_s=1.0, spent_s=0.5, next_cost_s=0.3
+        )
+        is None
+    )
+    assert (
+        arbitrate_aggregate(
+            halfwidth=2.0, next_cost_s=5.0, predicted_halfwidth=1.99,
+            max_s_per_width=1.0,
+        )
+        == "diminishing"
+    )
+    assert arbitrate_aggregate(halfwidth=math.inf, error_slo=1.0) is None
