@@ -54,6 +54,21 @@ wave re-reads the same dense blocks.  Sections:
       blocks** after the prefetcher warmed its round-0 union — the serving
       CI guard (driver key ``serving``).  Emits ``BENCH_serving.json``.
 
+  calibration sweep (``--calibration``) — a store whose deterministic
+      measured timings (:class:`repro.storage.SyntheticTimingBackend`)
+      deviate ≥4x from the engine's cost-model presets, run as two arms:
+      static presets (``PlanLedger(feedback=False)``, audit only) vs
+      ``NeedleTailEngine.recalibrate()`` after the first wave.  Asserts the
+      calibrated arm's per-wave q-error shrinks monotonically below 1.5
+      while the static arm stays ≥4, that recalibration flips ≥1 §7.2
+      arbitration decision (agreeing with the truth-model plan) and ≥1
+      placement decision (the measured-slow tier stops admitting), that
+      every wave stays byte-identical to the model-sharing sequential
+      oracle, and that after append + density-restoring tail compaction
+      (:class:`repro.storage.TailCompactor`) the warm wave reads **0
+      backing-store blocks** — the calibration CI guard (driver key
+      ``calibration``).  Emits ``BENCH_calibration.json``.
+
 ``--smoke`` runs a reduced workload (<60 s) that still executes every
 selected section and hard-fails on cache-stat regressions — the CI hook.
 ``--sharded`` (standalone entry point only) forces an 8-way host-device mesh
@@ -401,7 +416,7 @@ def tiered_sweep(store, algo: str = "auto", q: int = 64) -> list[dict]:
 
 
 def peer_sweep(store, algo: str = "auto", q: int = 64,
-               seeds=(0, 1, 2)) -> tuple[list[dict], dict]:
+               seeds=(0, 1, 2), argv=None) -> tuple[list[dict], dict]:
     """The Q=`q` wave on the cooperative peer-memory tier: a 4-shard
     :class:`~repro.storage.peer.PeerGroup` with the working set resident
     ONLY on the remote shards, then heat-driven ownership migration pulls
@@ -530,7 +545,7 @@ def peer_sweep(store, algo: str = "auto", q: int = 64,
         union_blocks=round(
             trimmed_mean([m["union_blocks"] for m in per_seed]), 1),
     )
-    path = write_bench_json("peer", payload)
+    path = write_bench_json("peer", payload, argv=argv, seeds=seeds)
     print(f"# wrote {path}")
     return rows, payload
 
@@ -879,7 +894,7 @@ def _prefetch_zero_read_check(table, rpb) -> dict:
 
 
 def serving_sweep(smoke: bool, max_slots: int = 8,
-                  seeds=(0, 1, 2, 3, 4)) -> tuple[list[dict], dict]:
+                  seeds=(0, 1, 2, 3, 4), argv=None) -> tuple[list[dict], dict]:
     """Sustained-traffic serving comparison: the continuous-batching loop vs
     the drain-the-wave baseline at equal ``max_slots``, on seeded traces with
     skewed templates, mixed deadlines, and appends racing queries.
@@ -994,7 +1009,7 @@ def serving_sweep(smoke: bool, max_slots: int = 8,
             max_transfers_per_tick=dev["max_tick_transfers"]),
         prefetch_zero_read=zero,
     )
-    path = write_bench_json("serving", payload)
+    path = write_bench_json("serving", payload, argv=argv, seeds=seeds)
     print(f"# wrote {path}")
     return rows, payload
 
@@ -1056,6 +1071,208 @@ def aggregate_sweep(smoke: bool) -> tuple[list[dict], dict]:
     return rows, payload
 
 
+def calibration_sweep(smoke: bool, argv=None) -> tuple[list[dict], dict]:
+    """Calibrated cost model + q-error plan ledger on a mis-preset store.
+
+    The engine believes its backing store is an SSD and its device tier is
+    HBM; the deterministic timing truth
+    (:class:`repro.storage.SyntheticTimingBackend`) says the backing store
+    behaves like the paper's HDD (≥4x off the preset) and the "HBM" tier is
+    2x *slower* than that.  Two arms run the same seeded waves:
+
+    * **static** — ``PlanLedger(feedback=False)``, never recalibrated: the
+      audit trail shows the per-wave q-error staying ≥4 forever;
+    * **calibrated** — after wave 0, ``NeedleTailEngine.recalibrate()``
+      refits every level from the backend (§4.3.1 fit); the per-wave
+      q-error series must shrink monotonically below 1.5.
+
+    Asserts (the calibration CI hook, raises on any regression):
+
+    * every wave in BOTH arms is byte-identical per query to the cache-less
+      sequential oracle sharing the engine's planning model (corrections
+      are uniform per comparison, so they never flip the §7.2 argmin);
+    * the calibrated arm's per-wave q-error series is non-increasing and
+      ends < 1.5, while ``max_qerror`` ≥ 4 (the mis-preset really was ≥4x
+      off) and the static arm stays ≥ 4;
+    * ≥1 §7.2 arbitration decision flips after recalibration, and every
+      flipped decision agrees with an engine planning on the truth model;
+    * ≥1 placement decision flips: pre-calibration misses are admitted to
+      the mis-preset "fast" tier, post-calibration re-admissions of the
+      same blocks all land in the host tier (the measured-slow tier admits
+      nothing);
+    * append → :class:`repro.storage.TailCompactor` rewrites exactly the
+      dirtied tail, and the post-compaction warm wave reads **0 blocks
+      from the backing store**.
+
+    Emits ``BENCH_calibration.json`` (deterministic counts only — reruns
+    are byte-identical).
+    """
+    from benchmarks.common import write_bench_json
+    from repro.core.cost_model import CostModel, _linear_curve, make_cost_model
+    from repro.core.plan_ledger import PlanLedger
+    from repro.data.block_store import Table
+    from repro.storage import SyntheticTimingBackend, TailCompactor, Tier, TierStack
+
+    num_records, rpb, q = 40_000, 256, 64
+    n_waves = 3 if smoke else 4
+    table = make_clustered_table(num_records=num_records, num_dims=8,
+                                 density=0.1, seed=0, mean_cluster=128)
+    store = build_block_store(table, rpb)
+    nb = TierStack.block_nbytes(store)
+
+    # ground truth: backing "ssd" is really an HDD; the "hbm" tier is really
+    # 2x slower than even that; host dram is 5x off its preset
+    hdd = make_cost_model("hdd")
+    slow_hbm = CostModel(
+        "hbm-truth", hdd.seq_cost * 2, hdd.max_dist, hdd.far_cost * 2,
+        _linear_curve(hdd.seq_cost * 2, hdd.far_cost * 2, hdd.max_dist),
+        hdd.first_block_cost * 2,
+    )
+    truth_models = {"ssd": hdd, "dram": make_cost_model("dram", nb * 5),
+                    "hbm": slow_hbm}
+
+    def make_arm(feedback: bool):
+        stack = TierStack(
+            [Tier("hbm", _ws * nb, make_cost_model("hbm", nb)),
+             Tier("dram", None, make_cost_model("dram", nb))],
+            backing=make_cost_model("ssd"),
+        )
+        return NeedleTailEngine(
+            store, make_cost_model("ssd"), tiers=stack,
+            ledger=PlanLedger(feedback=feedback),
+            timing_backend=SyntheticTimingBackend(truth_models),
+        )
+
+    def wave_queries(w: int):
+        return overlapping_queries(q, seed=200 + w)
+
+    _ws = int(NeedleTailEngine(store).any_k_batch(wave_queries(0), algo="auto")
+              .unique_blocks_fetched.size)
+    eng, eng_s = make_arm(feedback=True), make_arm(feedback=False)
+
+    rows: list[dict] = []
+    series: dict[str, list[float]] = {"calibrated": [], "static": []}
+    pre_adm = 0
+    for w in range(n_waves):
+        queries = wave_queries(w)
+        for arm, e in (("calibrated", eng), ("static", eng_s)):
+            # oracle shares the arm's CURRENT planning model: corrections and
+            # recalibration move plans, never bytes relative to this oracle
+            ref = NeedleTailEngine(store, e.cost, cache_bytes=0)
+            seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo="auto")
+                   for bq in queries]
+            batch = e.any_k_batch(queries, algo="auto")
+            _assert_byte_identical(seq, batch)
+            row = e.ledger.note_wave()
+            series[arm].append(row["qerror"])
+            rows.append(dict(arm=arm, wave=w, qerror=round(row["qerror"], 3),
+                             store_blocks=batch.store_blocks_fetched))
+        if w == 0:
+            pre_adm = eng.block_cache.tier_counters()["hbm.admissions"]
+            eng.recalibrate()
+
+    qs = series["calibrated"]
+    for a, b in zip(qs, qs[1:]):
+        if b > a * 1.05 + 1e-9:
+            raise AssertionError(
+                f"calibration regression: per-wave q-error series {qs} is "
+                "not monotonically shrinking")
+    if qs[-1] >= 1.5:
+        raise AssertionError(
+            f"calibration regression: final wave q-error {qs[-1]:.3f} >= 1.5")
+    if eng.ledger.max_qerror() < 4.0:
+        raise AssertionError(
+            "calibration smoke invalid: mis-preset store deviated "
+            f"{eng.ledger.max_qerror():.2f}x < the required 4x")
+    if series["static"][-1] < 4.0:
+        raise AssertionError(
+            "static control arm converged without calibration — the sweep "
+            f"no longer isolates the calibration effect: {series['static']}")
+
+    # --- §7.2 arbitration flips: preset vs recalibrated vs truth, flat path
+    pre = NeedleTailEngine(store, make_cost_model("ssd"), cache_bytes=0)
+    post = NeedleTailEngine(store, make_cost_model("ssd"), cache_bytes=0,
+                            timing_backend=SyntheticTimingBackend({"ssd": hdd}))
+    post.recalibrate()
+    tru = NeedleTailEngine(store, hdd, cache_bytes=0)
+    flips = agree = 0
+    for bq in wave_queries(0):
+        _, u_pre = pre.plan(bq.predicates, bq.k)
+        _, u_post = post.plan(bq.predicates, bq.k)
+        _, u_tru = tru.plan(bq.predicates, bq.k)
+        if u_pre != u_post:
+            flips += 1
+            agree += int(u_post == u_tru)
+    if flips < 1 or agree != flips:
+        raise AssertionError(
+            f"arbitration flip regression: {flips} flips, {agree} agreeing "
+            "with the truth-model plan (need >= 1, all agreeing)")
+
+    # --- placement flip: invalidate the warm union, re-fetch — the measured-
+    # slow "hbm" tier must admit nothing, everything lands in the host tier
+    c0 = eng.block_cache.tier_counters()
+    union = sorted(int(b) for b in
+                   eng.any_k_batch(wave_queries(0), algo="auto").unique_blocks_fetched)
+    eng.block_cache.invalidate(union)
+    eng.any_k_batch(wave_queries(0), algo="auto")
+    eng.ledger.note_wave()
+    c1 = eng.block_cache.tier_counters()
+    readmit_hbm = c1["hbm.admissions"] - c0["hbm.admissions"]
+    readmit_dram = c1["dram.admissions"] - c0["dram.admissions"]
+    if pre_adm < 1 or readmit_hbm != 0 or readmit_dram < 1:
+        raise AssertionError(
+            f"placement flip regression: {pre_adm} pre-calibration hbm "
+            f"admissions, post-calibration re-admissions hbm={readmit_hbm} "
+            f"dram={readmit_dram} (expected >0 / 0 / >0)")
+
+    # --- density-restoring compaction, then the 0-store-read warm guard
+    tc = TailCompactor(eng)
+    rng = np.random.default_rng(42)
+    sel = rng.integers(0, table.dims.shape[0], size=4 * rpb)
+    eng.append(Table(dims=table.dims[sel][:, ::-1].copy(),
+                     measures=table.measures[sel].copy(), cards=table.cards))
+    pending = tc.pending_blocks()
+    rewritten = tc.compact()
+    if pending < 1 or rewritten != pending or tc.pending_blocks() != 0:
+        raise AssertionError(
+            f"compaction regression: {pending} dirty tail blocks, "
+            f"{rewritten} rewritten, {tc.pending_blocks()} still pending")
+    queries = wave_queries(n_waves)
+    ref = NeedleTailEngine(eng.store, eng.cost, cache_bytes=0)
+    seq = [ref.any_k(bq.predicates, bq.k, op=bq.op, algo="auto") for bq in queries]
+    cold = eng.any_k_batch(queries, algo="auto")
+    _assert_byte_identical(seq, cold)
+    warm = eng.any_k_batch(queries, algo="auto")
+    _assert_byte_identical(seq, warm)
+    if warm.store_blocks_fetched != 0:
+        raise AssertionError(
+            f"post-compaction warm wave read {warm.store_blocks_fetched} "
+            "backing-store blocks (expected 0)")
+    rows.append(dict(arm="compacted_cold", wave=n_waves, qerror=1.0,
+                     store_blocks=cold.store_blocks_fetched))
+    rows.append(dict(arm="compacted_warm", wave=n_waves, qerror=1.0,
+                     store_blocks=warm.store_blocks_fetched))
+
+    payload = dict(
+        config=dict(num_records=num_records, rpb=rpb, Q=q, waves=n_waves,
+                    smoke=bool(smoke)),
+        calibrated=dict(wave_qerrors=[round(v, 3) for v in qs],
+                        final_qerror=round(qs[-1], 3),
+                        max_qerror=round(eng.ledger.max_qerror(), 1)),
+        static=dict(wave_qerrors=[round(v, 3) for v in series["static"]],
+                    final_qerror=round(series["static"][-1], 3)),
+        flips=dict(arbitration=flips, arbitration_truth_agree=agree,
+                   hbm_admissions_precal=pre_adm,
+                   readmit_hbm=readmit_hbm, readmit_dram=readmit_dram),
+        compaction=dict(tail_blocks_rewritten=rewritten,
+                        cold_store_blocks=cold.store_blocks_fetched,
+                        warm_store_blocks=warm.store_blocks_fetched),
+    )
+    path = write_bench_json("calibration", payload, argv=argv, seeds=(0,))
+    print(f"# wrote {path}")
+    return rows, payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1098,6 +1315,17 @@ def main(argv=None):
                          "steady-state slot occupancy (smoke), and 0 "
                          "backing-store reads for prefetch-predicted waves; "
                          "emits BENCH_serving.json")
+    ap.add_argument("--calibration", action="store_true",
+                    help="also run the calibrated-cost smoke: a store whose "
+                         "measured timings deviate >=4x from the engine's "
+                         "presets, static vs calibrated arms; asserts the "
+                         "per-wave q-error shrinks monotonically below 1.5 "
+                         "after recalibration, >=1 arbitration and >=1 "
+                         "placement decision flip toward the measured "
+                         "optimum, byte-identity to the model-sharing "
+                         "oracle throughout, and the post-compaction warm "
+                         "wave reads 0 store blocks; emits "
+                         "BENCH_calibration.json")
     ap.add_argument("--aggregate", action="store_true",
                     help="also run the online-aggregation serving smoke: a "
                          "cold error-SLO run warms the tier stack, then the "
@@ -1107,6 +1335,7 @@ def main(argv=None):
                          "the SLO) while reading 0 backing-store blocks")
     ap.add_argument("--algo", default="auto")
     args, _ = ap.parse_known_args(argv)  # tolerate the benchmarks.run driver argv
+    section_argv = list(argv) if argv is not None else sys.argv[1:]
 
     num_records = 100_000 if args.smoke else 400_000
     sweep = (1, 8, 64) if args.smoke else Q_SWEEP
@@ -1170,7 +1399,8 @@ def main(argv=None):
         print("\n# --- cooperative peer-memory sweep (DRAM as one cache) ---")
         prows, ppayload = peer_sweep(
             store, algo=args.algo, q=64,
-            seeds=(0, 1, 2) if args.smoke else (0, 1, 2, 3, 4))
+            seeds=(0, 1, 2) if args.smoke else (0, 1, 2, 3, 4),
+            argv=section_argv)
         emit(prows, ["phase", "seed", "Q", "algo", "batch_ms", "store_blocks",
                      "peer_hits", "dram_hits", "peer_frac", "remote_fetches",
                      "migrations"])
@@ -1184,7 +1414,7 @@ def main(argv=None):
 
     if args.serving:
         print("\n# --- sustained-traffic serving (continuous vs wave drain) ---")
-        srows, spayload = serving_sweep(args.smoke)
+        srows, spayload = serving_sweep(args.smoke, argv=section_argv)
         emit(srows, ["mode", "seed", "p50_ms", "p99_ms", "slo_att",
                      "occupancy", "steady_occ", "rounds", "store_blocks",
                      "tier_hit", "prefetch_hit", "cheap", "refill"])
@@ -1199,6 +1429,24 @@ def main(argv=None):
         print(f"# prefetch: {z['issued']} blocks warmed ahead, predicted "
               f"wave read {z['predicted_wave_store_reads']} store blocks "
               "(asserted 0)")
+
+    if args.calibration:
+        print("\n# --- calibrated cost model (q-error ledger + compaction) ---")
+        crows, cpayload = calibration_sweep(args.smoke, argv=section_argv)
+        emit(crows, ["arm", "wave", "qerror", "store_blocks"])
+        cal, st = cpayload["calibrated"], cpayload["static"]
+        print(f"# q-error per wave: calibrated {cal['wave_qerrors']} vs "
+              f"static {st['wave_qerrors']} (mis-preset deviation "
+              f"{cal['max_qerror']}x, final {cal['final_qerror']} < 1.5)")
+        f = cpayload["flips"]
+        print(f"# decisions flipped toward measured optimum: "
+              f"{f['arbitration']} arbitration (all truth-agreeing), "
+              f"placement {f['hbm_admissions_precal']} hbm admissions -> "
+              f"{f['readmit_hbm']} hbm / {f['readmit_dram']} dram re-admissions")
+        c = cpayload["compaction"]
+        print(f"# compaction: {c['tail_blocks_rewritten']} tail blocks "
+              f"re-sorted; warm wave read {c['warm_store_blocks']} store "
+              "blocks (asserted 0)")
 
     if args.aggregate:
         print("\n# --- online-aggregation serving (error-SLO waves on tiers) ---")

@@ -18,6 +18,7 @@ trimmed means (3 under ``--smoke``), persisted as ``BENCH_time_error.json``.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -198,7 +199,10 @@ def main(argv=None):
         # online must actually deliver the SLO it answered against
         for row in rows:
             assert row["online_halfwidth"] <= row["error_slo"], row
-        print("wrote", write_bench_json("time_error", payload))
+        print("wrote", write_bench_json(
+            "time_error", payload,
+            argv=list(argv) if argv is not None else sys.argv[1:],
+            seeds=range(seeds)))
         return
     rows = run()
     emit(rows, ["workload", "scheme", "k", "mean_err_pct", "mean_time_ms", "mean_samples"])

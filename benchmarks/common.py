@@ -88,20 +88,63 @@ def trimmed_mean(values) -> float:
     return sum(vs) / len(vs) if vs else 0.0
 
 
-def write_bench_json(section: str, payload: dict) -> str:
+def _git_head_sha(root) -> str:
+    """Resolve the repo's HEAD commit sha without spawning a subprocess.
+
+    The driver can force the stamped sha via the ``BENCH_GIT_SHA``
+    environment variable (it knows the commit it is about to create);
+    otherwise ``.git/HEAD`` is followed through the loose ref file or
+    ``packed-refs``.  Returns ``"unknown"`` when nothing resolves — a bench
+    run outside a git checkout should still produce a valid JSON."""
+    import os
+
+    forced = os.environ.get("BENCH_GIT_SHA")
+    if forced:
+        return forced.strip()
+    git = root / ".git"
+    try:
+        head = (git / "HEAD").read_text().strip()
+        if not head.startswith("ref:"):
+            return head  # detached HEAD stores the sha directly
+        ref = head.split(None, 1)[1].strip()
+        loose = git / ref
+        if loose.exists():
+            return loose.read_text().strip()
+        for line in (git / "packed-refs").read_text().splitlines():
+            if line.endswith(" " + ref):
+                return line.split(None, 1)[0]
+    except OSError:
+        pass
+    return "unknown"
+
+
+def write_bench_json(section: str, payload: dict, *, argv=None, seeds=None) -> str:
     """Persist a benchmark section's headline numbers as
     ``BENCH_<section>.json`` at the repo root, so a perf trajectory exists
     across PRs (committed alongside the code that produced it).  Returns the
     path written.  Deterministic formatting: sorted keys, 2-space indent,
     trailing newline — reruns with identical numbers produce identical
-    bytes."""
+    bytes.
+
+    Every payload is stamped with a ``run_meta`` block (section name, git
+    sha — ``BENCH_GIT_SHA`` env override wins — seed count, and the section
+    argv) so ``tools/bench_compare.py`` can tell whether two trees' numbers
+    are comparable before diffing them.  ``run_meta`` itself is excluded
+    from numeric comparison."""
     import json
     import pathlib
 
     root = pathlib.Path(__file__).resolve().parent.parent
+    out = dict(payload)
+    out["run_meta"] = {
+        "section": section,
+        "git_sha": _git_head_sha(root),
+        "seed_count": len(list(seeds)) if seeds is not None else None,
+        "section_argv": list(argv) if argv is not None else None,
+    }
     path = root / f"BENCH_{section}.json"
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+        json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
     return str(path)
 

@@ -34,6 +34,11 @@ SECTIONS = {
                    "benchmarks.bench_time_error", ["--frontier", "--smoke"]),
     "aggregate": ("Online-aggregation serving: warm error-SLO waves read 0 store blocks",
                   "benchmarks.bench_multi_query", ["--aggregate", "--smoke"]),
+    "calibration": ("Calibrated cost model: q-error shrinks, decisions flip, "
+                    "post-compaction warm wave reads 0 store blocks",
+                    "benchmarks.bench_multi_query", ["--calibration", "--smoke"]),
+    "bench_compare": ("Bench trajectory diff: self-clean + injected regression flagged",
+                      "tools.bench_compare", ["--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),
 }
 

@@ -63,6 +63,9 @@ class NeedleTailEngine:
         plan_cache_entries: int = 4096,
         tiers=None,
         residency_aware: bool = False,
+        calibrated_cost: bool = False,
+        timing_backend=None,
+        ledger=None,
     ):
         from repro.core.block_cache import BlockLRUCache, PlanOrderCache
 
@@ -90,6 +93,29 @@ class NeedleTailEngine:
         # set by attach_mesh: a repro.core.sharded.DistributedAnyK that plans
         # any_k_batch waves with one shard_map collective per refill round
         self.distributed = None
+        # measured-cost feedback (repro.storage.calibration +
+        # repro.core.plan_ledger): the ledger records predicted-vs-observed
+        # io_time per decision site and serves price corrections; the timing
+        # backend answers "what does this fetch really cost".  Both are
+        # shared with a TierStack block cache so every pricing site agrees.
+        self.ledger = ledger
+        self.timing_backend = timing_backend
+        if hasattr(self.block_cache, "effective_io_time"):
+            if ledger is not None:
+                self.block_cache.ledger = ledger
+            if timing_backend is not None:
+                self.block_cache.timing_backend = timing_backend
+        if calibrated_cost:
+            # calibrate at engine start against real store fetches unless an
+            # explicit (e.g. synthetic) backend was injected
+            if self.timing_backend is None:
+                from repro.storage.calibration import StoreTimingBackend
+
+                self.timing_backend = StoreTimingBackend(
+                    store, levels={self.cost.name})
+                if hasattr(self.block_cache, "effective_io_time"):
+                    self.block_cache.timing_backend = self.timing_backend
+            self.recalibrate()
 
     # ------------------------------------------------------------------ store
     def replace_store(self, store: "BlockStore") -> None:
@@ -120,6 +146,55 @@ class NeedleTailEngine:
         self._dens_np = np.asarray(grown.index.densities)
         return grown
 
+    def compact(self, tail_start: int) -> "BlockStore":
+        """Re-sort the appended tail by dimension values into fresh blocks
+        (density-restoring compaction, :func:`repro.storage.compact.
+        compact_tail`) and adopt the compacted store.  The listener contract
+        mirrors :meth:`append`: the rewritten id range is invalidated from
+        the block cache surgically, untouched prefix blocks stay cached, and
+        plan-memo entries keyed on the changed density bytes can never be
+        hit.  The compacted store is a new store version — results match the
+        sequential oracle per version, like append."""
+        from repro.storage.compact import compact_tail
+
+        fresh = compact_tail(self.store, tail_start)  # notifies block_cache
+        self.store.unregister_invalidation_listener(self.block_cache.invalidate)
+        self.store = fresh
+        self._dens_np = np.asarray(fresh.index.densities)
+        return fresh
+
+    # ------------------------------------------------------------ calibration
+    def recalibrate(self, **fit_kw) -> dict:
+        """Refit cost models from the timing backend (engine start and
+        periodically thereafter — the serving loop's ``recalibrate_every``).
+
+        With a :class:`repro.storage.TierStack` block cache, every measurable
+        tier and the backing model are refit in place (``TierStack.
+        calibrate``) and the engine adopts the stack's fitted backing model
+        as its own planning cost; otherwise the engine's flat model is refit
+        directly.  Returns ``{level: fitted CostModel}`` (empty without a
+        backend — calibration is strictly opt-in)."""
+        be = self.timing_backend
+        if be is None:
+            return {}
+        from repro.storage.calibration import calibrate_model, measurable
+
+        fitted: dict = {}
+        cal = getattr(self.block_cache, "calibrate", None)
+        if cal is not None:
+            fitted = cal(be, **fit_kw)
+            if self.block_cache.backing.name == self.cost.name and fitted:
+                if self.cost.name in fitted:
+                    self.cost = fitted[self.cost.name]
+        if self.cost.name not in fitted and measurable(be, self.cost.name):
+            self.cost = calibrate_model(be, self.cost.name, base=self.cost, **fit_kw)
+            fitted[self.cost.name] = self.cost
+        lg = getattr(self, "ledger", None)
+        if lg is not None:
+            for level in fitted:  # refit models subsume the old corrections
+                lg.reset_correction(level)
+        return fitted
+
     # ------------------------------------------------------------------ plans
     def plan_cost(self, block_ids) -> float:
         """Modeled I/O cost of a candidate plan (the §7.2 auto comparison).
@@ -128,12 +203,21 @@ class NeedleTailEngine:
         attached, blocks resident in a tier are priced by THAT tier's cost
         model and only misses by the backing model
         (:meth:`repro.storage.tiers.TierStack.effective_io_time`); otherwise
-        the backing model prices everything (the paper's behavior)."""
+        the backing model prices everything (the paper's behavior).
+
+        A plan ledger scales the flat price by the running q-error
+        correction for the planning model's level.  The correction is
+        uniform across a plan comparison (``PlanLedger.correction`` is
+        idempotent between records), so it can never flip the §7.2 argmin —
+        flat-path plans stay byte-identical to an uncorrected oracle; only
+        full recalibration (curve-shape change) moves arbitration."""
         if getattr(self, "residency_aware", False):
             eff = getattr(self.block_cache, "effective_io_time", None)
             if eff is not None:
                 return eff(block_ids, backing=self.cost)
-        return self.cost.io_time(block_ids)
+        t = self.cost.io_time(block_ids)
+        lg = getattr(self, "ledger", None)
+        return t * lg.correction(self.cost.name) if lg is not None else t
 
     def combined_density(self, predicates, op: str = AND) -> np.ndarray:
         from repro.core.predicates import Predicate
@@ -186,8 +270,33 @@ class NeedleTailEngine:
             # (effective tier cost when the engine is residency-aware).
             bt, b2 = plan_threshold(), plan_two_prong()
             ct, c2 = self.plan_cost(bt), self.plan_cost(b2)
-            return (bt, "threshold") if ct <= c2 else (b2, "two_prong")
+            blocks, used = (bt, "threshold") if ct <= c2 else (b2, "two_prong")
+            self._record_arbitration(blocks, ct if used == "threshold" else c2)
+            return blocks, used
         raise ValueError(f"unknown algo {algo!r}")
+
+    def _record_arbitration(self, blocks: np.ndarray, predicted: float) -> None:
+        """Ledger the §7.2 auto decision: quoted plan cost vs the timing
+        backend's measured cost of the chosen blocks.  Recorded only for the
+        flat pricing path (mixed-residency truth would need per-tier
+        timings) when the backend can measure the planning model's level."""
+        lg = getattr(self, "ledger", None)
+        be = getattr(self, "timing_backend", None)
+        if lg is None or be is None or blocks.size == 0:
+            return
+        if getattr(self, "residency_aware", False) and \
+                hasattr(self.block_cache, "effective_io_time"):
+            return
+        if getattr(be, "store", None) is self.store:
+            # observing would mean a redundant physical fetch per plan; the
+            # wall-clocked demand fetch (TierStack._fetch_and_admit) already
+            # closes the loop for store-backed timing
+            return
+        from repro.storage.calibration import measurable
+
+        if measurable(be, self.cost.name):
+            lg.record("arbitration", self.cost.name, predicted,
+                      be.io_seconds(self.cost.name, blocks))
 
     # ------------------------------------------------------------------ query
     def any_k(

@@ -6,6 +6,11 @@ Only the trailing partial block and the newly created blocks have their
 density-map columns recomputed; untouched column prefixes are reused.  The
 per-row *sorted* density maps are re-sorted (argsort over λ — O(λ log λ) per
 touched row, still ≪ a rebuild which rescans all N records).
+
+:func:`rebuild_store` is the shared re-blocking core: append (this module)
+and tail compaction (:mod:`repro.storage.compact`) both hand it flattened
+valid rows plus the set of touched block ids and get back a successor store
+with listeners carried over — the caller decides what is dirty and notifies.
 """
 from __future__ import annotations
 
@@ -28,25 +33,21 @@ def dirtied_block_ids(store: BlockStore, num_new: int) -> np.ndarray:
     return np.arange(first_touched, lam_new, dtype=np.int64)
 
 
-def append_records(store: BlockStore, new: Table) -> BlockStore:
-    """Returns a new BlockStore with `new` rows appended (same schema).
+def rebuild_store(
+    store: BlockStore,
+    dims_flat: np.ndarray,
+    meas_flat: np.ndarray,
+    touched: np.ndarray,
+) -> BlockStore:
+    """Re-block flattened valid rows into a successor of ``store``.
 
-    Invalidation hook: listeners registered on ``store`` (see
-    :meth:`BlockStore.register_invalidation_listener`) are notified with the
-    dirtied tail block ids — only the trailing partial block and the newly
-    created blocks — and are carried over to the returned store, so an
-    engine-lifetime block cache survives the append with surgical eviction.
+    Same schema and records-per-block; density columns are recomputed only
+    for the ``touched`` block ids (column prefixes before the first touched
+    id are reused from ``store.index``), and invalidation listeners are
+    carried over.  Callers notify ``store``'s listeners with the dirtied id
+    set themselves — append and compaction decide what is dirty.
     """
     rpb = store.records_per_block
-    old_n = store.num_records
-    dims_flat = np.concatenate([
-        np.asarray(store.dims).reshape(-1, store.dims.shape[-1])[:old_n],
-        new.dims.astype(np.int32),
-    ])
-    meas_flat = np.concatenate([
-        np.asarray(store.measures).reshape(-1, store.measures.shape[-1])[:old_n],
-        new.measures.astype(np.float32),
-    ])
     n = dims_flat.shape[0]
     lam_new = -(-n // rpb)
     r, s_ = dims_flat.shape[1], meas_flat.shape[1]
@@ -58,7 +59,7 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
     # density columns: reuse untouched prefix, recompute only touched blocks
     idx = store.index
     old_dens = np.asarray(idx.densities)
-    touched = dirtied_block_ids(store, new.num_records)
+    touched = np.asarray(touched, dtype=np.int64)
     first_touched = int(touched[0]) if touched.size else lam_new
     dens = np.zeros((idx.vocab.num_rows, lam_new), np.float32)
     dens[:, :first_touched] = old_dens[:, :first_touched]
@@ -80,7 +81,7 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
         records_per_block=rpb,
         num_records=n,
     )
-    grown = BlockStore(
+    rebuilt = BlockStore(
         dims=jnp.asarray(dims_b),
         measures=jnp.asarray(meas_b),
         valid_rows=jnp.asarray(valid_b),
@@ -88,6 +89,29 @@ def append_records(store: BlockStore, new: Table) -> BlockStore:
         records_per_block=rpb,
         num_records=n,
     )
-    grown._invalidation_listeners = list(store._invalidation_listeners)
+    rebuilt._invalidation_listeners = list(store._invalidation_listeners)
+    return rebuilt
+
+
+def append_records(store: BlockStore, new: Table) -> BlockStore:
+    """Returns a new BlockStore with `new` rows appended (same schema).
+
+    Invalidation hook: listeners registered on ``store`` (see
+    :meth:`BlockStore.register_invalidation_listener`) are notified with the
+    dirtied tail block ids — only the trailing partial block and the newly
+    created blocks — and are carried over to the returned store, so an
+    engine-lifetime block cache survives the append with surgical eviction.
+    """
+    old_n = store.num_records
+    dims_flat = np.concatenate([
+        np.asarray(store.dims).reshape(-1, store.dims.shape[-1])[:old_n],
+        new.dims.astype(np.int32),
+    ])
+    meas_flat = np.concatenate([
+        np.asarray(store.measures).reshape(-1, store.measures.shape[-1])[:old_n],
+        new.measures.astype(np.float32),
+    ])
+    touched = dirtied_block_ids(store, new.num_records)
+    grown = rebuild_store(store, dims_flat, meas_flat, touched)
     store.notify_invalidated(touched)
     return grown

@@ -137,6 +137,9 @@ class AdmissionController:
         # reads over more sharers.  Probe returns None when unpriceable (memo
         # miss) — then only full/deadline/residency rules apply.
         self.cost_probe = cost_probe
+        # the cheap-gate's most recent quote (None until the probe has run /
+        # when unpriceable) — the plan-ledger audit trail reads it per tick
+        self.last_cost_price_s: float | None = None
         self._pending: "deque[tuple[Any, float]]" = deque()  # (request, t_submit)
         self._last_pop: dict | None = None  # rollback record for requeue_front
 
@@ -265,6 +268,11 @@ class AdmissionController:
             return None
         if self.cost_probe is not None and p.cheap_cost_s is not None:
             c = self.cost_probe(self.peek_pending(p.max_wave))
+            # the probe's quote is the cheap-gate's decision input — keep the
+            # last one visible for the plan ledger / bench audit trail (the
+            # probe itself records predicted-vs-observed when the engine
+            # carries a ledger; see repro.storage.prefetch)
+            self.last_cost_price_s = c
             if c is not None and c <= p.cheap_cost_s:
                 return "cheap_waves"
         if self.residency_probe is not None and self.residency_probe(

@@ -274,6 +274,7 @@ class ServeEngine:
         exemplar_residency: bool = False,
         exemplar_prefetch: bool = False,
         aggregate_policy: AdmissionPolicy | None = None,
+        recalibrate_every: int = 0,
     ):
         self.cfg = cfg
         self.params = params
@@ -306,6 +307,13 @@ class ServeEngine:
         # while the current round is still planning, so the predicted wave's
         # first fetch is a pure tier hit
         self.exemplar_prefetch = exemplar_prefetch
+        # when > 0, the continuous loop refits the any-k engine's cost
+        # models from its timing backend every N exemplar ticks
+        # (engine.recalibrate() — the "periodically thereafter" half of the
+        # calibration pass; engine start is NeedleTailEngine(
+        # calibrated_cost=True)).  No-op for engines without a backend.
+        self.recalibrate_every = int(recalibrate_every)
+        self._ticks_since_cal = 0
         # per-wave accounting of the most recent exemplar wave (transfer
         # ledger + BlockLRUCache residency feed); see pump_exemplar_requests
         self.last_wave_stats: dict | None = None
@@ -595,6 +603,12 @@ class ServeEngine:
 
         adm = self._exemplar_admission()
         self._install_admission_probes(engine, adm)
+        every = getattr(self, "recalibrate_every", 0)
+        if every and hasattr(engine, "recalibrate"):
+            self._ticks_since_cal = getattr(self, "_ticks_since_cal", 0) + 1
+            if self._ticks_since_cal >= every:
+                engine.recalibrate()
+                self._ticks_since_cal = 0
         mesh = getattr(self, "exemplar_mesh", None)
         if mesh is not None and getattr(engine, "distributed", None) is None:
             engine.attach_mesh(mesh)
@@ -701,6 +715,12 @@ class ServeEngine:
             "pending": adm.pending,
             "prefetch": pf.stats.snapshot() if pf is not None else None,
         }
+        # close the plan ledger's wave: per-tier predicted-vs-observed totals
+        # snapshot into its audit trail, running q-error surfaces per wave
+        lg = getattr(engine, "ledger", None)
+        if lg is not None:
+            lg.note_wave()
+            self.last_wave_stats["plan_qerror"] = lg.qerror(site="placement")
         return done
 
     def _aggregate_admission(self) -> AdmissionController:

@@ -22,7 +22,23 @@ Public surface:
   :func:`~repro.storage.prefetch.predicted_wave_blocks` /
   :func:`~repro.storage.prefetch.make_missed_cost_probe` — memo-driven
   next-wave prefetch into tier 0 and the cost-fed admission probe.
+* :func:`~repro.storage.calibration.calibrate_model` /
+  :func:`~repro.storage.calibration.calibrate_stack` /
+  :class:`~repro.storage.calibration.StoreTimingBackend` /
+  :class:`~repro.storage.calibration.SyntheticTimingBackend` — fit each
+  tier's ``CostModel`` to measured fetch timings (``TierStack.calibrate``,
+  ``NeedleTailEngine(calibrated_cost=True)``); pairs with the q-error
+  :class:`~repro.core.plan_ledger.PlanLedger`.
+* :func:`~repro.storage.compact.compact_tail` /
+  :class:`~repro.storage.compact.TailCompactor` — density-restoring
+  compaction of the appended tail between waves, through the standard
+  invalidation listener contract.
 """
+from repro.storage.calibration import (
+    StoreTimingBackend, SyntheticTimingBackend, calibrate_model,
+    calibrate_stack, measurable,
+)
+from repro.storage.compact import TailCompactor, compact_tail
 from repro.storage.peer import (
     PeerGroup, PeerGroupStats, PeerTier, PeerUnavailable, make_peer_group,
     make_peer_stack,
@@ -38,6 +54,13 @@ from repro.storage.tiers import Tier, TierStack, TierStats, make_tier_stack
 __all__ = [
     "CostAwarePolicy",
     "HeatTracker",
+    "StoreTimingBackend",
+    "SyntheticTimingBackend",
+    "TailCompactor",
+    "calibrate_model",
+    "calibrate_stack",
+    "compact_tail",
+    "measurable",
     "OwnershipRebalancer",
     "PeerGroup",
     "PeerGroupStats",

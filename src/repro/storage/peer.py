@@ -365,11 +365,17 @@ def make_peer_stack(
     block_bytes: int = 256 * 1024,
     policy: PlacementPolicy | None = None,
     device_fill: bool | None = None,
+    ici_cost: CostModel | None = None,
 ) -> TierStack:
     """One shard's stack: optional HBM → host DRAM → :class:`PeerTier` →
     backing store.  Registers the shard with `group` and tags the stack with
     ``peer_tier`` (the attribute ``attach_mesh`` wires through
-    ``DistributedAnyK.fetch_remote``)."""
+    ``DistributedAnyK.fetch_remote``).
+
+    ``ici_cost`` overrides the peer tier's ``ici`` preset — e.g. a model
+    fitted by :func:`repro.storage.calibration.calibrate_model` from measured
+    interconnect timings (``TierStack.calibrate`` refits the tier in place
+    too, keyed by its name ``"peer"``, when the backend measures it)."""
     if isinstance(backing, str):
         backing = make_cost_model(backing, block_bytes)
     tiers: list[Tier] = []
@@ -378,7 +384,7 @@ def make_peer_stack(
                           device=True))
     host_idx = len(tiers)
     tiers.append(Tier("dram", dram_bytes, make_cost_model("dram", block_bytes)))
-    peer = PeerTier(group, shard, block_bytes)
+    peer = PeerTier(group, shard, block_bytes, cost=ici_cost)
     tiers.append(peer)
     stack = TierStack(tiers, backing=backing, policy=policy,
                       device_fill=device_fill)

@@ -118,9 +118,18 @@ class CostAwarePolicy(PlacementPolicy):
 
     # ------------------------------------------------------------- scoring
     @staticmethod
-    def _saving(stack: "TierStack", tier_idx: int) -> float:
+    def _far_cost(stack: "TierStack", level_name: str, far: float) -> float:
+        """Model far_cost scaled by the stack's plan-ledger correction (if
+        any) — placement chases *observed* costs, not the preset's claim."""
+        lg = getattr(stack, "ledger", None)
+        return far * lg.correction(level_name) if lg is not None else far
+
+    @classmethod
+    def _saving(cls, stack: "TierStack", tier_idx: int) -> float:
         """io_time saved per access by residency at `tier_idx` vs backing."""
-        return stack.backing.far_cost - stack.tiers[tier_idx].cost.far_cost
+        tier = stack.tiers[tier_idx]
+        return cls._far_cost(stack, stack.backing.name, stack.backing.far_cost) - \
+            cls._far_cost(stack, tier.name, tier.cost.far_cost)
 
     def score(self, stack: "TierStack", block_id: int, tier_idx: int) -> float:
         """Modeled io_time saved per byte by this block's residency."""
@@ -153,9 +162,12 @@ class CostAwarePolicy(PlacementPolicy):
     def promote_tier(self, stack: "TierStack", block_id: int, tier_idx: int) -> int:
         if tier_idx == 0:
             return 0
-        up = stack.tiers[tier_idx - 1]
+        lo, up = stack.tiers[tier_idx], stack.tiers[tier_idx - 1]
         # marginal saving of the move: upper tier must really be faster
-        if stack.tiers[tier_idx].cost.far_cost <= up.cost.far_cost:
+        # (under corrected costs — a mis-preset "fast" tier measured slow
+        # stops attracting promotions once the ledger has seen it)
+        if self._far_cost(stack, lo.name, lo.cost.far_cost) <= \
+                self._far_cost(stack, up.name, up.cost.far_cost):
             return tier_idx
         acc = stack.accesses(block_id)
         if acc < self.promote_after:

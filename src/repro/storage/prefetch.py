@@ -128,7 +128,11 @@ def effective_block_cost(
     missed = np.asarray(
         [int(b) for b in ids if int(b) not in cache], dtype=np.int64
     )
-    return float(engine.cost.io_time(missed))
+    t = float(engine.cost.io_time(missed))
+    # flat-LRU engines carry the plan ledger themselves (a TierStack applies
+    # its corrections inside effective_io_time above)
+    lg = getattr(engine, "ledger", None)
+    return t * lg.correction(engine.cost.name) if lg is not None else t
 
 
 def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
@@ -156,9 +160,38 @@ def make_missed_cost_probe(engine) -> Callable[[Sequence], float | None]:
         union, n_pred = predicted_wave_blocks(engine, reqs, row_cache)
         if n_pred < len(reqs):
             return None
-        return effective_block_cost(engine, union, missed_only=True)
+        price = effective_block_cost(engine, union, missed_only=True)
+        _record_priced_decision(engine, "admission", union, price)
+        return price
 
     return probe
+
+
+def _record_priced_decision(engine, site: str, union: np.ndarray, price: float) -> None:
+    """Ledger a cost-fed decision (`admission` gate / `prefetch` kick): the
+    quoted price of the union's *missed* blocks vs the timing backend's
+    measured cost at the level that would serve them.  Skipped without a
+    ledger+backend, for unmeasurable levels, and for store-wrapping backends
+    (re-fetching to observe would double the physical I/O the quote is
+    about)."""
+    lg = getattr(engine, "ledger", None)
+    be = getattr(engine, "timing_backend", None)
+    if lg is None or be is None or union.size == 0:
+        return
+    if getattr(be, "store", None) is engine.store:
+        return
+    cache = engine.block_cache
+    if hasattr(cache, "residency_tier"):
+        missed = union[cache.residency_tier(union) >= len(cache.tiers)]
+        level = cache.backing.name
+    else:
+        missed = np.asarray(
+            [int(b) for b in union if int(b) not in cache], dtype=np.int64)
+        level = engine.cost.name
+    from repro.storage.calibration import measurable
+
+    if missed.size and measurable(be, level):
+        lg.record(site, level, price, be.io_seconds(level, missed))
 
 
 class _InflightFetch:
@@ -286,6 +319,11 @@ class TierPrefetcher:
             want = want[: self.max_blocks]
         ids = np.asarray(want, dtype=np.int64)
         self.stats.issued += int(ids.size)
+        # ledger the kick's pricing like the admission gate's: these are the
+        # blocks speculative I/O is about to pay for
+        _record_priced_decision(
+            engine, "prefetch", ids,
+            effective_block_cost(engine, ids, missed_only=True))
         self.prefetched.update(int(b) for b in ids)
         if self.async_fetch:
             self._issue_async(ids, tiered)

@@ -38,6 +38,14 @@ class HeatTracker:
 
     ``decay`` < 1 makes ownership follow the *recent* access pattern — a
     block hot last epoch but cold now cools toward zero.
+
+    Invalidation (append / compaction rewriting a block id's content) resets
+    BOTH the heat and the last-sample snapshot for the dirtied ids: the old
+    content's heat must not attribute to whatever is re-admitted under the
+    same id, and a stale snapshot would mis-delta the fresh content's counts
+    against the old ones (double-counting accesses the clamp path then folds
+    in twice).  The tracker registers its own listener on the group's store
+    — the same contract every cache layer uses.
     """
 
     def __init__(self, group: PeerGroup, decay: float = 0.5):
@@ -47,6 +55,15 @@ class HeatTracker:
         self.decay = float(decay)
         self._last: list[dict[int, int]] = [{} for _ in range(group.n_shards)]
         self.heat: list[dict[int, float]] = [{} for _ in range(group.n_shards)]
+        group._store.register_invalidation_listener(self._on_invalidate)
+
+    def _on_invalidate(self, block_ids) -> None:
+        """Forget dirtied ids everywhere: heat AND the delta baseline."""
+        for b in np.asarray(list(block_ids), dtype=np.int64).ravel():
+            b = int(b)
+            for sid in range(self.group.n_shards):
+                self.heat[sid].pop(b, None)
+                self._last[sid].pop(b, None)
 
     def sample(self) -> None:
         for sid, stack in enumerate(self.group.stacks):

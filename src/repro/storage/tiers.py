@@ -65,6 +65,7 @@ cold dense one.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Iterable, Sequence
 
@@ -290,6 +291,12 @@ class TierStack:
         # run_batch swaps in a list for exact per-batch physical-I/O logging
         self.fetch_log: list | None = None
         self._accesses: dict[int, int] = {}  # logical touches per block id
+        # measured-cost feedback (both optional; see repro.storage.calibration
+        # and repro.core.plan_ledger): the ledger supplies per-level price
+        # corrections and receives predicted-vs-observed placement records;
+        # the timing backend supplies observations and powers calibrate().
+        self.ledger = None
+        self.timing_backend = None
 
     # ------------------------------------------------------------------ admin
     def __contains__(self, block_id: int) -> bool:
@@ -358,13 +365,21 @@ class TierStack:
                 out[i] = t
         return out
 
+    def _corr(self, level: str) -> float:
+        """Plan-ledger price correction for tier/backing `level` (1.0 if none)."""
+        lg = self.ledger
+        return lg.correction(level) if lg is not None else 1.0
+
     def effective_io_time(self, block_ids, backing: CostModel | None = None) -> float:
         """Residency-aware modeled I/O time of fetching `block_ids`.
 
         Each tier's resident ids are priced as one §4.1 ascending pass under
         that tier's cost model; misses under `backing` (default: the stack's
         backing model).  This is the "effective tier cost" the residency-
-        aware §7.2 auto arbitration compares candidate plans with."""
+        aware §7.2 auto arbitration compares candidate plans with.  When a
+        plan ledger is attached, each component is scaled by that level's
+        running q-error correction — so repeated misprediction shifts the
+        price toward observed costs even between recalibrations."""
         backing = backing or self.backing
         ids = np.asarray(block_ids, dtype=np.int64).ravel()
         if ids.size == 0:
@@ -374,11 +389,23 @@ class TierStack:
         for t, tier in enumerate(self.tiers):
             sel = ids[where == t]
             if sel.size:
-                total += tier.cost.io_time(sel)
+                total += tier.cost.io_time(sel) * self._corr(tier.name)
         miss = ids[where == len(self.tiers)]
         if miss.size:
-            total += backing.io_time(miss)
+            total += backing.io_time(miss) * self._corr(backing.name)
         return total
+
+    def calibrate(self, backend=None, **fit_kw) -> dict:
+        """Refit every measurable tier/backing `CostModel` from `backend`
+        timings in place (see :func:`repro.storage.calibration.
+        calibrate_stack`); returns ``{level: fitted CostModel}``.  With no
+        argument, reuses the backend retained by a previous calibration."""
+        from repro.storage.calibration import calibrate_stack
+
+        be = backend if backend is not None else self.timing_backend
+        if be is None:
+            raise ValueError("TierStack.calibrate needs a timing backend")
+        return calibrate_stack(self, be, **fit_kw)
 
     def get_device(self, store: "BlockStore", block_ids) -> tuple:
         """Device-resident gather for device-side slab consumers (e.g.
@@ -557,6 +584,13 @@ class TierStack:
         device-admitted slab would be one wasted device→host transfer per
         cold block."""
         nb = self.block_nbytes(store)
+        # predicted price of this miss batch BEFORE fetching (corrected by the
+        # ledger like every other quote); the observation closes the loop below
+        pred = 0.0
+        t_wall = 0.0
+        if self.ledger is not None and miss.size:
+            pred = self.backing.io_time(miss) * self._corr(self.backing.name)
+            t_wall = time.perf_counter()
         # sequential admission decisions: reserve bytes as targets are chosen
         # so the policy sees the tier filling up across the miss batch
         targets: dict[int, int] = {}
@@ -600,6 +634,18 @@ class TierStack:
                 self._place(targets[int(b)], int(b), (*slab_dev, nbytes), how="admit")
         self.stats.store_fetch_calls += calls
         self.stats.store_blocks_fetched += int(miss.size)
+        if self.ledger is not None and miss.size:
+            from repro.storage.calibration import measurable
+
+            be = self.timing_backend
+            # a backend wrapping THIS store would re-fetch to answer — the
+            # demand fetch we just timed is already the observation there
+            if be is not None and measurable(be, self.backing.name) and \
+                    getattr(be, "store", None) is not store:
+                obs = be.io_seconds(self.backing.name, miss)
+            else:
+                obs = time.perf_counter() - t_wall
+            self.ledger.record("placement", self.backing.name, pred, obs)
         return inscope
 
     def ensure(self, store: "BlockStore", block_ids) -> int:
@@ -729,7 +775,28 @@ class TierStack:
                     self.fetch_log.append(one)
                 bd1, bm1, bv1 = store.fetch(one)
                 out_d.append(bd1[0]); out_m.append(bm1[0]); out_v.append(bv1[0])
+        if self.ledger is not None and self.timing_backend is not None:
+            self._record_hit_observations(ids, miss_set)
         return np.stack(out_d), np.stack(out_m), np.stack(out_v)
+
+    def _record_hit_observations(self, ids: np.ndarray, miss_set: set[int]) -> None:
+        """Close the pricing loop for resident hits: record each tier's quoted
+        vs backend-observed io_time for the ids this gather served from it.
+        Only meaningful with a timing backend (wall-clocking a cache hit is
+        noise); levels the backend cannot measure are skipped."""
+        from repro.storage.calibration import measurable
+
+        lg, be = self.ledger, self.timing_backend
+        res = np.unique(np.asarray(
+            [int(b) for b in ids if int(b) not in miss_set], dtype=np.int64))
+        if res.size == 0:
+            return
+        where = self.residency_tier(res)
+        for t, tier in enumerate(self.tiers):
+            sel = res[where == t]
+            if sel.size and measurable(be, tier.name):
+                pred = tier.cost.io_time(sel) * self._corr(tier.name)
+                lg.record("placement", tier.name, pred, be.io_seconds(tier.name, sel))
 
     # ------------------------------------------------------------- reporting
     def tier_counters(self) -> dict[str, int]:

@@ -1,0 +1,487 @@
+"""Calibrated cost models, the q-error plan ledger, and tail compaction.
+
+The contract under test (see ``src/repro/storage/calibration.py``,
+``src/repro/core/plan_ledger.py``, ``src/repro/storage/compact.py``):
+
+* :func:`calibrate_model` recovers a deviating level's true cost curve from
+  a timing backend (§4.3.1 fit: κ, plateau ladder, max-R² trend line), and
+  :meth:`TierStack.calibrate` / :meth:`NeedleTailEngine.recalibrate` swap
+  the fitted models in place, keyed stably by level name.
+* :class:`PlanLedger` tracks predicted-vs-observed q-error per (site, tier)
+  and serves bounded multiplicative corrections with hysteresis — no
+  oscillation, idempotent between records, audit-only when feedback is off.
+* Calibration flips placement and §7.2 arbitration decisions toward the
+  measured optimum, while every wave stays **byte-identical** to the
+  cache-less sequential oracle sharing the engine's planning model — under
+  ANY interleaving of waves, recalibrations, appends, and compactions
+  (results match the oracle per store version, as with append).
+* :func:`compact_tail` re-sorts the appended tail by dimension values and
+  drives the standard invalidation listener contract.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import CostModel, _linear_curve, make_cost_model
+from repro.core.engine import NeedleTailEngine
+from repro.core.multi_query import BatchQuery
+from repro.core.plan_ledger import PlanLedger
+from repro.data.block_store import Table, build_block_store
+from repro.storage import (
+    SyntheticTimingBackend, TailCompactor, Tier, TierStack, calibrate_model,
+    compact_tail, measurable,
+)
+
+pytestmark = pytest.mark.calibration
+
+RPB = 64
+
+
+def _make_table(seed: int, n: int = 6_000) -> Table:
+    rng = np.random.default_rng(seed)
+    return Table(
+        dims=rng.integers(0, 3, (n, 4)).astype(np.int32),
+        measures=rng.normal(size=(n, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3, 3]),
+    )
+
+
+_STORES: dict = {}
+
+
+def _store(seed: int):
+    if seed not in _STORES:
+        _STORES[seed] = build_block_store(_make_table(seed), RPB)
+    return _STORES[seed]
+
+
+QUERY_POOL = [
+    ([(0, 1)], 40, "and"),
+    ([(0, 1), (1, 1)], 120, "and"),
+    ([(1, 1), (2, 1)], 60, "or"),
+    ([(2, 0)], 25, "and"),
+    ([(0, 1), (2, 1), (3, 1)], 200, "and"),
+]
+
+
+def _queries(spec) -> list[BatchQuery]:
+    return [BatchQuery(p, k, op=op) for p, k, op in spec]
+
+
+def _slow_model(base: CostModel, factor: float, name: str) -> CostModel:
+    return CostModel(
+        name, base.seq_cost * factor, base.max_dist, base.far_cost * factor,
+        _linear_curve(base.seq_cost * factor, base.far_cost * factor, base.max_dist),
+        base.first_block_cost * factor,
+    )
+
+
+def _truth_backend(nb: int) -> SyntheticTimingBackend:
+    """Ground truth deviating from every preset: the 'ssd' backing really
+    behaves like the paper's HDD (≥4x off), 'hbm' is 2x slower than even
+    that, host dram is 5x off."""
+    hdd = make_cost_model("hdd")
+    return SyntheticTimingBackend({
+        "ssd": hdd,
+        "dram": make_cost_model("dram", nb * 5),
+        "hbm": _slow_model(hdd, 2.0, "hbm-truth"),
+    })
+
+
+def _mispreset_engine(store, feedback: bool = True) -> NeedleTailEngine:
+    nb = TierStack.block_nbytes(store)
+    stack = TierStack(
+        [Tier("hbm", 8 * nb, make_cost_model("hbm", nb)),
+         Tier("dram", None, make_cost_model("dram", nb))],
+        backing=make_cost_model("ssd"),
+    )
+    return NeedleTailEngine(
+        store, make_cost_model("ssd"), tiers=stack,
+        ledger=PlanLedger(feedback=feedback),
+        timing_backend=_truth_backend(nb),
+    )
+
+
+def _assert_result_equal(a, b) -> None:
+    np.testing.assert_array_equal(a.record_block, b.record_block)
+    np.testing.assert_array_equal(a.record_row, b.record_row)
+    np.testing.assert_array_equal(a.measures, b.measures)
+
+
+def _assert_oracle_identical(eng, queries) -> object:
+    """Run `queries` batched on `eng`; assert byte-identity per query to a
+    cache-less oracle sharing eng's CURRENT store and planning model."""
+    ref = NeedleTailEngine(eng.store, eng.cost, cache_bytes=0)
+    seq = [ref.any_k(q.predicates, q.k, op=q.op, algo="auto") for q in queries]
+    batch = eng.any_k_batch(queries, algo="auto")
+    for s, b in zip(seq, batch.results):
+        _assert_result_equal(s, b)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# calibrate_model: §4.3.1 refit from a timing backend.
+# ---------------------------------------------------------------------------
+def test_calibrate_model_recovers_deviating_truth():
+    """A backing preset claiming SSD while the backend times like an HDD:
+    the fitted model recovers the true plateau and prices within 1.5x."""
+    truth = make_cost_model("hdd")
+    be = SyntheticTimingBackend({"ssd": truth})
+    fitted = calibrate_model(be, "ssd", base=make_cost_model("ssd"))
+    assert fitted.name == "ssd"  # level-keyed: consumers stay stable
+    assert fitted.far_cost == pytest.approx(truth.far_cost, rel=0.05)
+    assert fitted.first_block_cost == pytest.approx(truth.first_block_cost, rel=0.05)
+    assert fitted.max_dist == pytest.approx(truth.max_dist, rel=0.5)
+    for ids in ([3], [0, 1, 2, 3], [0, 63, 200, 900], [5, 500]):
+        q = fitted.io_time(ids) / truth.io_time(ids)
+        assert max(q, 1.0 / q) < 1.5
+    # the preset was really >= 4x off
+    pre = make_cost_model("ssd").io_time([0, 63, 200, 900])
+    assert truth.io_time([0, 63, 200, 900]) / pre >= 4.0
+
+
+def test_calibrate_model_near_flat_truth():
+    """The opposite deviation: preset says HDD, truth is a near-flat SSD —
+    the plateau search must not hallucinate a long seek ramp."""
+    truth = make_cost_model("ssd")
+    be = SyntheticTimingBackend({"hdd": truth})
+    fitted = calibrate_model(be, "hdd", base=make_cost_model("hdd"))
+    for ids in ([0, 1, 2], [0, 100, 5000]):
+        q = fitted.io_time(ids) / truth.io_time(ids)
+        assert max(q, 1.0 / q) < 1.5
+
+
+def test_tier_stack_calibrate_refits_in_place():
+    store = _store(0)
+    nb = TierStack.block_nbytes(store)
+    stack = TierStack(
+        [Tier("dram", None, make_cost_model("dram", nb)),
+         Tier("peer", None, make_cost_model("ici", nb))],
+        backing=make_cost_model("ssd"),
+    )
+    be = SyntheticTimingBackend(
+        {"ssd": make_cost_model("hdd"), "dram": make_cost_model("dram", nb * 5)})
+    fitted = stack.calibrate(be)
+    assert set(fitted) == {"ssd", "dram"}  # "peer" is not measurable: kept
+    assert stack.backing is fitted["ssd"]
+    assert stack.tiers[0].cost is fitted["dram"]
+    assert stack.tiers[1].cost.name == "ici"  # preset survives
+    assert stack.timing_backend is be  # retained for the demand path
+    assert not measurable(be, "peer") and measurable(be, "dram")
+    # re-calibrate with no argument reuses the retained backend
+    assert set(stack.calibrate()) == {"ssd", "dram"}
+    with pytest.raises(ValueError):
+        TierStack([Tier("dram", None, make_cost_model("dram", nb))]).calibrate()
+
+
+# ---------------------------------------------------------------------------
+# PlanLedger: q-error accounting and correction hysteresis.
+# ---------------------------------------------------------------------------
+def test_ledger_qerror_and_sites():
+    lg = PlanLedger()
+    assert lg.qerror() == 1.0  # empty ledger is perfect
+    assert lg.record("placement", "ssd", 1.0, 8.0) == pytest.approx(8.0)
+    assert lg.record("placement", "ssd", 8.0, 1.0) == pytest.approx(8.0)
+    assert lg.qerror(site="placement", tier="ssd") == pytest.approx(8.0)
+    lg.record("arbitration", "ssd", 2.0, 2.0)
+    assert lg.qerror(site="arbitration") == pytest.approx(1.0)
+    assert lg.qerror() == pytest.approx(8.0)  # max over sites
+    assert lg.max_qerror() == pytest.approx(8.0)
+    # q-error is symmetric: under- and over-prediction weigh the same
+    a, b = PlanLedger(), PlanLedger()
+    a.record("placement", "t", 1.0, 4.0)
+    b.record("placement", "t", 4.0, 1.0)
+    assert a.qerror() == pytest.approx(b.qerror())
+
+
+def test_ledger_correction_hysteresis_and_idempotence():
+    lg = PlanLedger(hysteresis=0.15)
+    # consistent 4x underprediction: the correction chases it
+    lg.record("placement", "ssd", 1.0, 4.0)
+    c = lg.correction("ssd")
+    assert c == pytest.approx(4.0)
+    # idempotent between records: pricing two plan candidates in one §7.2
+    # comparison must see ONE consistent scale (argmin preservation)
+    assert lg.correction("ssd") == c and lg.correction("ssd") == c
+    # committing reset the residual: corrected predictions now match
+    lg.record("placement", "ssd", 4.0, 4.0)
+    assert lg.correction("ssd") == pytest.approx(c)
+    # small drift inside the dead band does not move the applied value
+    lg.record("placement", "ssd", 4.0, 4.2)
+    assert lg.correction("ssd") == pytest.approx(c)
+    # corrections are clamped to the configured bounds
+    wild = PlanLedger(correction_bounds=(0.5, 2.0))
+    wild.record("placement", "x", 1.0, 1000.0)
+    assert wild.correction("x") == 2.0
+    wild.record("placement", "y", 1000.0, 1.0)
+    assert wild.correction("y") == 0.5
+
+
+def test_ledger_no_oscillation_under_alternating_noise():
+    """Observations alternating ±10% around the committed correction stay
+    inside the hysteresis band: the applied value must never move."""
+    lg = PlanLedger(hysteresis=0.15)
+    lg.record("placement", "ssd", 1.0, 2.0)
+    committed = lg.correction("ssd")
+    seen = set()
+    for i in range(20):
+        obs = 2.0 * (1.1 if i % 2 else 0.9)
+        lg.record("placement", "ssd", 2.0, obs)
+        seen.add(lg.correction("ssd"))
+    assert seen == {committed}
+
+
+def test_ledger_feedback_off_and_reset():
+    audit = PlanLedger(feedback=False)
+    audit.record("placement", "ssd", 1.0, 100.0)
+    assert audit.correction("ssd") == 1.0  # audit-only arm never corrects
+    assert audit.qerror() == pytest.approx(100.0)  # ...but still accounts
+    lg = PlanLedger()
+    lg.record("placement", "ssd", 1.0, 8.0)
+    assert lg.correction("ssd") == pytest.approx(8.0)
+    lg.reset_correction("ssd")
+    # after a recalibration the refit model embodies the observed costs —
+    # keeping the old multiplier would double-apply the same error
+    assert lg.correction("ssd") == 1.0
+    assert lg.max_qerror() == pytest.approx(8.0)  # audit trail survives
+    st_ = lg.sites[("placement", "ssd")]
+    assert st_.ewma_log_ratio == 0.0  # residual measured vs old model: gone
+
+
+def test_ledger_wave_rows():
+    lg = PlanLedger()
+    lg.record("placement", "ssd", 1.0, 10.0)
+    row = lg.note_wave()
+    assert row["qerror"] == pytest.approx(10.0)
+    assert row["per_tier"]["ssd"] == pytest.approx(10.0)
+    # a wave with no placement observations reads as perfect, not stale
+    row2 = lg.note_wave()
+    assert row2["qerror"] == 1.0 and row2["per_tier"] == {}
+    assert row2["running"] == pytest.approx(10.0)
+    assert lg.wave_qerrors() == [pytest.approx(10.0), 1.0]
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: q-error shrinks, decisions flip, bytes never change.
+# ---------------------------------------------------------------------------
+def test_recalibration_shrinks_wave_qerror_monotonically():
+    store = _store(1)
+    eng = _mispreset_engine(store)
+    static = _mispreset_engine(store, feedback=False)
+    series, series_s = [], []
+    for w in range(3):
+        queries = _queries(QUERY_POOL[w % len(QUERY_POOL):] + QUERY_POOL[:w % len(QUERY_POOL)])
+        _assert_oracle_identical(eng, queries)
+        series.append(eng.ledger.note_wave()["qerror"])
+        _assert_oracle_identical(static, queries)
+        series_s.append(static.ledger.note_wave()["qerror"])
+        if w == 0:
+            fitted = eng.recalibrate()
+            assert {"ssd", "dram", "hbm"} <= set(fitted)
+            assert eng.cost is fitted["ssd"]  # engine adopts the backing fit
+    assert series[0] >= 4.0  # the preset really was >= 4x off
+    for a, b in zip(series, series[1:]):
+        assert b <= a * 1.05 + 1e-9
+    assert series[-1] < 1.5
+    assert eng.ledger.max_qerror() >= 4.0
+    assert series_s[-1] >= 4.0  # the static arm never converges
+
+
+def test_recalibration_resets_corrections_no_transient():
+    """The wave-0 feedback clamps the 'ssd' correction high; recalibration
+    must drop it with the refit, or the corrected fitted price would
+    transiently re-introduce a q-error equal to the old multiplier."""
+    store = _store(2)
+    eng = _mispreset_engine(store)
+    _assert_oracle_identical(eng, _queries(QUERY_POOL))
+    assert eng.ledger.correction("ssd") > 1.0
+    assert eng.ledger.note_wave()["qerror"] >= 4.0  # flush the cold wave
+    eng.recalibrate()
+    assert eng.ledger.corrections() == {}
+    _assert_oracle_identical(eng, _queries(QUERY_POOL[::-1]))
+    assert eng.ledger.note_wave()["qerror"] < 1.5
+
+
+def test_arbitration_flips_toward_truth_model():
+    """Recalibrating a flat engine off the ssd preset onto hdd-like truth
+    flips ≥1 §7.2 THRESHOLD/TWO-PRONG decision, and every flipped decision
+    agrees with an engine planning directly on the truth model."""
+    from repro.data.synthetic import make_clustered_table
+
+    table = make_clustered_table(num_records=40_000, num_dims=8, density=0.1,
+                                 seed=0, mean_cluster=128)
+    store = build_block_store(table, 256)
+    hdd = make_cost_model("hdd")
+    pre = NeedleTailEngine(store, make_cost_model("ssd"), cache_bytes=0)
+    post = NeedleTailEngine(store, make_cost_model("ssd"), cache_bytes=0,
+                            timing_backend=SyntheticTimingBackend({"ssd": hdd}))
+    post.recalibrate()
+    tru = NeedleTailEngine(store, hdd, cache_bytes=0)
+    flips = agree = 0
+    for preds in ([(0, 1)], [(2, 1), (3, 1)], [(4, 1), (5, 1)], [(6, 1), (7, 1)]):
+        for k in (64, 128, 256, 512):
+            _, u_pre = pre.plan(preds, k)
+            _, u_post = post.plan(preds, k)
+            _, u_tru = tru.plan(preds, k)
+            if u_pre != u_post:
+                flips += 1
+                agree += int(u_post == u_tru)
+    assert flips >= 1 and agree == flips
+
+
+def test_placement_flips_off_measured_slow_tier():
+    """Pre-calibration the mis-preset 'fast' hbm tier admits fresh reads;
+    post-calibration (its truth is slower than the backing store) the same
+    blocks re-admit exclusively to the host tier."""
+    store = _store(3)
+    eng = _mispreset_engine(store)
+    stack = eng.block_cache
+    queries = _queries(QUERY_POOL)
+    _assert_oracle_identical(eng, queries)
+    assert stack.tier_counters()["hbm.admissions"] > 0
+    eng.recalibrate()
+    c0 = stack.tier_counters()
+    union = sorted(
+        int(b) for b in eng.any_k_batch(queries, algo="auto").unique_blocks_fetched)
+    stack.invalidate(union)
+    _assert_oracle_identical(eng, queries)
+    c1 = stack.tier_counters()
+    assert c1["hbm.admissions"] - c0["hbm.admissions"] == 0
+    assert c1["dram.admissions"] - c0["dram.admissions"] >= len(union)
+
+
+def test_corrections_never_flip_flat_argmin():
+    """A committed correction scales both §7.2 candidates uniformly: the
+    flat-path plan must match the uncorrected oracle's for any query."""
+    store = _store(4)
+    eng = _mispreset_engine(store)
+    _assert_oracle_identical(eng, _queries(QUERY_POOL))  # commits a correction
+    assert eng.ledger.correction("ssd") > 1.0
+    bare = NeedleTailEngine(store, eng.cost, cache_bytes=0)
+    for preds, k, _ in QUERY_POOL:
+        b_eng, u_eng = eng.plan(preds, k)
+        b_ref, u_ref = bare.plan(preds, k)
+        assert u_eng == u_ref
+        np.testing.assert_array_equal(b_eng, b_ref)
+
+
+# ---------------------------------------------------------------------------
+# Tail compaction: density restored, listeners driven, bytes per version.
+# ---------------------------------------------------------------------------
+def test_compact_tail_sorts_rows_and_notifies_listeners():
+    store = build_block_store(_make_table(5, n=1_000), RPB)
+    rng = np.random.default_rng(9)
+    tail = Table(
+        dims=rng.integers(0, 3, (3 * RPB, 4)).astype(np.int32),
+        measures=rng.normal(size=(3 * RPB, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3, 3]),
+    )
+    from repro.data.append import append_records
+
+    grown = append_records(store, tail)
+    tail_start = store.num_blocks - 1  # append dirtied from the partial block
+    heard: list[np.ndarray] = []
+    listener = type("L", (), {})()
+    listener.invalidate = lambda ids: heard.append(np.asarray(ids))
+    grown.register_invalidation_listener(listener.invalidate)
+    fresh = compact_tail(grown, tail_start)
+    # listeners got exactly the rewritten id range
+    assert len(heard) == 1
+    np.testing.assert_array_equal(
+        heard[0], np.arange(tail_start, grown.num_blocks, dtype=np.int64))
+    # the prefix is untouched; the tail is lexicographically sorted (attr 0
+    # major) — equal values now sit in dense contiguous runs
+    lo = tail_start * RPB
+    old = np.asarray(grown.dims).reshape(-1, 4)[:grown.num_records]
+    new = np.asarray(fresh.dims).reshape(-1, 4)[:fresh.num_records]
+    np.testing.assert_array_equal(new[:lo], old[:lo])
+    expect = old[lo:][np.lexsort(old[lo:].T[::-1])]
+    np.testing.assert_array_equal(new[lo:], expect)
+    assert fresh.num_records == grown.num_records
+    with pytest.raises(ValueError):
+        compact_tail(fresh, fresh.num_blocks)
+
+
+def test_tail_compactor_drives_engine_and_warm_wave_reads_zero():
+    store = build_block_store(_make_table(6, n=2_000), RPB)
+    eng = _mispreset_engine(store)
+    eng.recalibrate()
+    tc = TailCompactor(eng)
+    assert tc.pending_blocks() == 0 and tc.compact() == 0  # clean tail: no-op
+    rng = np.random.default_rng(11)
+    eng.append(Table(
+        dims=rng.integers(0, 3, (2 * RPB, 4)).astype(np.int32),
+        measures=rng.normal(size=(2 * RPB, 2)).astype(np.float32),
+        cards=np.asarray([3, 3, 3, 3]),
+    ))
+    pend = tc.pending_blocks()
+    assert pend >= 2
+    assert tc.compact() == pend and tc.compactions == 1
+    assert tc.pending_blocks() == 0
+    # per-store-version oracle equivalence on the compacted store, then the
+    # warm repeat is served entirely from the tiers
+    queries = _queries(QUERY_POOL)
+    _assert_oracle_identical(eng, queries)
+    warm = _assert_oracle_identical(eng, queries)
+    assert warm.store_blocks_fetched == 0
+
+
+def test_compactor_survives_store_swaps():
+    """The compactor follows the engine across append-adopted stores (the
+    listener re-registration contract TierPrefetcher uses)."""
+    store = build_block_store(_make_table(7, n=1_000), RPB)
+    eng = NeedleTailEngine(store, make_cost_model("ssd"))
+    tc = TailCompactor(eng)
+    rng = np.random.default_rng(13)
+
+    def _tail(n):
+        return Table(dims=rng.integers(0, 3, (n, 4)).astype(np.int32),
+                     measures=rng.normal(size=(n, 2)).astype(np.float32),
+                     cards=np.asarray([3, 3, 3, 3]))
+
+    eng.append(_tail(RPB))
+    assert tc.compact() >= 1
+    eng.append(_tail(RPB))  # second append on the COMPACTED store
+    assert tc.pending_blocks() >= 1
+    assert tc.compact() >= 1 and tc.compactions == 2
+
+
+# ---------------------------------------------------------------------------
+# Property: byte-identity to the per-version oracle under ANY schedule of
+# waves, recalibrations, appends, and compactions.
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 2),
+    st.lists(
+        st.sampled_from(("wave", "recalibrate", "append", "compact")),
+        min_size=2, max_size=7,
+    ),
+)
+def test_oracle_identity_under_calibration_compaction_schedules(seed, schedule):
+    store = build_block_store(_make_table(20 + seed, n=2_000), RPB)
+    eng = _mispreset_engine(store)
+    tc = TailCompactor(eng)
+    rng = np.random.default_rng(seed)
+    for i, op in enumerate(schedule):
+        if op == "wave":
+            off = int(rng.integers(0, len(QUERY_POOL)))
+            _assert_oracle_identical(
+                eng, _queries(QUERY_POOL[off:] + QUERY_POOL[:off]))
+            eng.ledger.note_wave()
+        elif op == "recalibrate":
+            eng.recalibrate()
+        elif op == "append":
+            eng.append(Table(
+                dims=rng.integers(0, 3, (RPB + i, 4)).astype(np.int32),
+                measures=rng.normal(size=(RPB + i, 2)).astype(np.float32),
+                cards=np.asarray([3, 3, 3, 3]),
+            ))
+        elif op == "compact" and tc.pending_blocks():
+            assert tc.compact() > 0
+    _assert_oracle_identical(eng, _queries(QUERY_POOL))
+    # whatever the schedule did, running q-error stays finite and >= 1
+    assert 1.0 <= eng.ledger.qerror() < math.inf

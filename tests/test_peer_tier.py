@@ -313,6 +313,31 @@ def test_heat_tracker_decay_and_eviction_reset():
     assert all(h >= 0 for h in tracker.heat[0].values())
 
 
+def test_heat_tracker_invalidation_resets_heat_and_baseline():
+    """Regression: an append/compaction rewriting a block id must not let
+    the OLD content's accesses count toward whatever is re-admitted under
+    the same id — stale heat keeps the id artificially hot, and a stale
+    last-sample baseline double-counts through the eviction-clamp path."""
+    store = _store(7)
+    group = make_peer_group(store, n_shards=2)
+    tracker = HeatTracker(group, decay=0.5)
+    stack = group.stacks[0]
+    stack.get_many(store, np.asarray([0, 0, 0, 1], dtype=np.int64))
+    tracker.sample()
+    assert tracker.heat[0][0] == pytest.approx(3.0)
+    assert tracker._last[0][0] == 3
+    # the append path notifies the dirtied id: every registered listener
+    # (the shard stacks AND the tracker) forgets block 0; block 1 survives
+    store.notify_invalidated(np.asarray([0], dtype=np.int64))
+    assert 0 not in tracker.heat[0] and 0 not in tracker._last[0]
+    assert tracker.heat[0][1] > 0
+    # the re-admitted content starts cold: one post-rewrite access must fold
+    # in as exactly 1 heat, not old_heat * decay + 1 (the double count)
+    stack.get_many(store, np.asarray([0], dtype=np.int64))
+    tracker.sample()
+    assert tracker.heat[0][0] == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------------------
 # Mesh routing: remote reads answered through DistributedAnyK.fetch_remote.
 # ---------------------------------------------------------------------------

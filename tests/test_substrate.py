@@ -191,6 +191,23 @@ def test_io_time_deduplicates_block_ids():
     assert stack.effective_io_time([9, 9, 2]) == stack.effective_io_time([2, 9])
 
 
+def test_io_time_dedup_survives_calibration():
+    """Refitting the backing model from measured timings must not change
+    the dedup/override semantics the §7.2 arbitration depends on."""
+    from repro.storage import SyntheticTimingBackend, make_tier_stack
+
+    stack = make_tier_stack(None, None, backing="ssd")
+    stack.calibrate(SyntheticTimingBackend({"ssd": make_cost_model("hdd")}))
+    assert stack.effective_io_time([9, 9, 2]) == stack.effective_io_time([2, 9])
+    # cold sets now price at the fitted (hdd-like) backing...
+    hdd = make_cost_model("hdd")
+    got, want = stack.effective_io_time([2, 9]), hdd.io_time([2, 9])
+    q = got / want
+    assert max(q, 1.0 / q) < 1.5
+    # ...and an explicit `backing=` override still wins over the fit
+    assert stack.effective_io_time([2, 9], backing=hdd) == pytest.approx(want)
+
+
 # ------------------------------------------------------------------- serving
 
 

@@ -390,6 +390,99 @@ def test_effective_io_time_prices_by_residency():
     )
 
 
+def _qerr(got: float, want: float) -> float:
+    q = got / want
+    return max(q, 1.0 / q)
+
+
+def test_effective_io_time_calibrated_mixed_residency():
+    """Calibration refits BOTH components effective_io_time composes: a
+    mixed warm/cold set prices as a fitted-dram pass over the residents plus
+    a fitted-backing pass over the misses — dedup and the ``backing=``
+    override behave exactly as on the preset path."""
+    from repro.storage import SyntheticTimingBackend
+
+    store = _store("uniform", 3)
+    # hbm budget 0: nothing ever fits tier 0, residents land in dram
+    stack = make_tier_stack(0, None, backing="ssd", block_bytes=NB)
+    truth_ssd = make_cost_model("hdd", NB)  # the "ssd" really seeks like HDD
+    truth_dram = make_cost_model("dram", 5 * NB)  # host copies 5x slower
+    fitted = stack.calibrate(
+        SyntheticTimingBackend({"ssd": truth_ssd, "dram": truth_dram}))
+    assert stack.backing is fitted["ssd"]
+    assert stack.tiers[1].cost is fitted["dram"]
+    stack.ensure(store, np.asarray([0, 1]))
+    assert list(stack.residency_tier(np.asarray([0, 1, 7, 11]))) == [1, 1, 2, 2]
+    mixed = stack.effective_io_time([0, 1, 7, 11])
+    expect = fitted["dram"].io_time([0, 1]) + fitted["ssd"].io_time([7, 11])
+    assert mixed == pytest.approx(expect)
+    # the fitted components track the deviating truth, not the old presets
+    assert _qerr(fitted["dram"].io_time([0, 1]), truth_dram.io_time([0, 1])) < 1.5
+    assert _qerr(fitted["ssd"].io_time([7, 11]), truth_ssd.io_time([7, 11])) < 1.5
+    # dedup survives the calibrated mixed-residency path, in any order
+    assert stack.effective_io_time([0, 0, 1, 7, 7, 11]) == pytest.approx(mixed)
+    assert stack.effective_io_time([1, 0, 11, 7, 1]) == pytest.approx(mixed)
+    # `backing=` override prices the cold run under the caller's model
+    slow = make_cost_model("hdd", NB)
+    assert stack.effective_io_time([7, 11], backing=slow) == pytest.approx(
+        slow.io_time([7, 11]))
+
+
+def test_effective_io_time_applies_ledger_corrections():
+    """Between recalibrations, the plan ledger's committed q-error
+    correction scales each level's component — misses under the backing's
+    multiplier, residents under their own tier's, an override under the
+    override level's (none recorded → uncorrected)."""
+    from repro.core.plan_ledger import PlanLedger
+
+    store = _store("uniform", 4)
+    stack = make_tier_stack(0, None, backing="hdd", block_bytes=NB)
+    stack.ledger = PlanLedger()
+    ids = [3, 4, 9]
+    base = stack.effective_io_time(ids)
+    stack.ledger.record("placement", "hdd", 1.0, 4.0)
+    corr = stack.ledger.correction("hdd")
+    assert corr == pytest.approx(4.0)
+    assert stack.effective_io_time(ids) == pytest.approx(base * corr)
+    stack.ensure(store, np.asarray([3]))
+    # the demand fetch itself recorded a (wall-clock) placement observation,
+    # so re-read the committed multiplier before composing the expectation
+    corr2 = stack.ledger.correction("hdd")
+    expect = (stack.tiers[1].cost.io_time([3])
+              + stack.backing.io_time([4, 9]) * corr2)
+    assert stack.effective_io_time(ids) == pytest.approx(expect)
+    ssd = make_cost_model("ssd", NB)
+    assert stack.effective_io_time([4, 9], backing=ssd) == pytest.approx(
+        ssd.io_time([4, 9]))
+
+
+def test_effective_io_time_prices_peer_hop_with_fitted_ici():
+    """A peer-resident block prices at the interconnect hop, and a model
+    fitted from measured link timings (4x slower than the ``ici`` preset)
+    overrides the preset through ``make_peer_stack(ici_cost=...)``."""
+    from repro.storage import (
+        PeerGroup, SyntheticTimingBackend, calibrate_model, make_peer_stack,
+    )
+
+    store = _store("uniform", 5)
+    truth_ici = make_cost_model("ici", 4 * NB)
+    fitted_ici = calibrate_model(
+        SyntheticTimingBackend({"ici": truth_ici}), "ici",
+        base=make_cost_model("ici", NB))
+    group = PeerGroup(store, 2)
+    local = make_peer_stack(group, 0, block_bytes=NB, ici_cost=fitted_ici)
+    remote = make_peer_stack(group, 1, block_bytes=NB)
+    remote.get_many(store, np.asarray([42]))  # shard 1 owns block 42
+    peer_idx = local.tiers.index(local.peer_tier)
+    assert local.residency_tier(np.asarray([42]))[0] == peer_idx
+    got = local.effective_io_time([42])
+    assert got == pytest.approx(fitted_ici.io_time([42]))
+    assert _qerr(got, truth_ici.io_time([42])) < 1.5
+    # the hop is priced dearer than the preset assumed, cheaper than a seek
+    assert got > make_cost_model("ici", NB).io_time([42])
+    assert got < local.backing.io_time([42])
+
+
 def test_residency_aware_auto_prefers_resident_plan():
     """The §7.2 arbitration flip: cold, THRESHOLD's two far blocks beat the
     13-block TWO-PRONG window; with the window resident in tiers and the

@@ -1,0 +1,213 @@
+"""Compare two ``BENCH_*.json`` trees and flag metric regressions.
+
+Every benchmark section persists its headline numbers through
+``benchmarks.common.write_bench_json`` — the per-PR perf trajectory lives
+at the repo root as ``BENCH_<section>.json``.  This tool diffs two such
+trees (typically: the checkout before and after a change)::
+
+    PYTHONPATH=src python -m tools.bench_compare BASE_DIR NEW_DIR
+    PYTHONPATH=src python -m tools.bench_compare BASE_DIR NEW_DIR --tolerance 0.2
+    PYTHONPATH=src python -m tools.bench_compare --smoke   # self-check
+
+Each JSON payload is flattened to dotted numeric leaves
+(``continuous.p99_ms``, ``remote_wave.batch_ms``, ...); the ``run_meta``
+block stamped by ``write_bench_json`` is metadata, not a metric, and is
+skipped.  Whether a change is a *regression* depends on the metric's
+direction, inferred from its name:
+
+* **lower is better** — durations (``*_s``, ``*_ms``, ``time``, ``wait``,
+  ``latency``, ``p50/p95/p99``), I/O volumes (``io_*``, ``blocks``,
+  ``reads``, ``fetched``, ``misses``, ``transfers``), and error measures
+  (``error``, ``qerror``, ``violations``, ``halfwidth``);
+* **higher is better** — ``rate``, ``hit``, ``throughput``, ``qps``,
+  ``attainment``, ``speedup``, ``samples``, ``occupancy``;
+* anything else is reported only when it changes, never as a regression
+  (configuration echoes like ``config.rpb`` must match exactly or the
+  pair is flagged as *incomparable* instead).
+
+A metric regresses when it moves in the bad direction by more than
+``--tolerance`` (relative, default 0.15 — wall-clock numbers jitter).
+Exit status 1 on any regression, 0 otherwise; ``--smoke`` (wired into the
+driver as ``python -m benchmarks.run --only bench_compare``) asserts a
+self-diff of the repo's own tree is clean and that a synthetically
+injected 2x regression in a temp copy IS flagged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Name fragments that decide a metric's direction.  Checked on the last
+# dotted component, suffix fragments first (``_s`` must not match ``hits``).
+_LOWER_SUFFIXES = ("_s", "_ms", "_mb")
+_LOWER_PARTS = (
+    "time", "io_", "_io", "p99", "p95", "p50", "latency", "wait", "error",
+    "blocks", "reads", "fetched", "misses", "qerror", "violations",
+    "transfers", "halfwidth", "seeks", "drops", "evictions",
+)
+_HIGHER_PARTS = (
+    "rate", "hit", "throughput", "qps", "attainment", "speedup", "samples",
+    "occupancy", "density", "dedup",
+)
+# leaves under these dotted prefixes are configuration, not metrics: they
+# must be EQUAL for the comparison to be meaningful at all
+_CONFIG_PREFIXES = ("config.", "run_meta.")
+
+
+def direction(key: str) -> str:
+    """'lower' | 'higher' | 'neutral' for a flattened metric key."""
+    leaf = key.rsplit(".", 1)[-1].lower()
+    if any(leaf.endswith(s) for s in _LOWER_SUFFIXES):
+        return "lower"
+    if any(p in leaf for p in _LOWER_PARTS):
+        return "lower"
+    if any(p in leaf for p in _HIGHER_PARTS):
+        return "higher"
+    return "neutral"
+
+
+def flatten(payload, prefix: str = "") -> dict[str, float]:
+    """Numeric leaves of a bench payload as ``{dotted.key: value}``.
+
+    ``run_meta`` is skipped (metadata); booleans are skipped (flags, not
+    metrics); lists index as ``key.0``, ``key.1``, ...
+    """
+    out: dict[str, float] = {}
+    if isinstance(payload, dict):
+        for k, v in sorted(payload.items()):
+            if not prefix and k == "run_meta":
+                continue
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(payload, list):
+        for i, v in enumerate(payload):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(payload, bool):
+        pass
+    elif isinstance(payload, (int, float)):
+        out[prefix[:-1]] = float(payload)
+    return out
+
+
+def compare_payloads(base: dict, new: dict, tolerance: float) -> dict:
+    """Diff two bench payloads; returns dict(regressions, improvements,
+    changed, incomparable) where each entry is (key, base, new)."""
+    fb, fn = flatten(base), flatten(new)
+    regressions, improvements, changed, incomparable = [], [], [], []
+    for key in sorted(set(fb) & set(fn)):
+        b, n = fb[key], fn[key]
+        if any(key.startswith(p) for p in _CONFIG_PREFIXES):
+            if b != n:
+                incomparable.append((key, b, n))
+            continue
+        if b == n:
+            continue
+        rel = (n - b) / max(abs(b), 1e-12)
+        d = direction(key)
+        if d == "lower" and rel > tolerance:
+            regressions.append((key, b, n))
+        elif d == "higher" and rel < -tolerance:
+            regressions.append((key, b, n))
+        elif d == "neutral":
+            changed.append((key, b, n))
+        elif abs(rel) > tolerance:
+            improvements.append((key, b, n))
+    return dict(regressions=regressions, improvements=improvements,
+                changed=changed, incomparable=incomparable)
+
+
+def compare_trees(base_dir: Path, new_dir: Path, tolerance: float) -> int:
+    """Diff every BENCH_*.json present in both trees; prints a report and
+    returns the number of regressions (0 = clean)."""
+    base_files = {p.name: p for p in sorted(Path(base_dir).glob("BENCH_*.json"))}
+    new_files = {p.name: p for p in sorted(Path(new_dir).glob("BENCH_*.json"))}
+    common = sorted(set(base_files) & set(new_files))
+    if not common:
+        print(f"# no BENCH_*.json present in both {base_dir} and {new_dir}")
+        return 0
+    for name in sorted(set(base_files) ^ set(new_files)):
+        side = "base" if name in base_files else "new"
+        print(f"# {name}: only in {side} tree, skipped")
+    total = 0
+    for name in common:
+        base = json.loads(base_files[name].read_text())
+        new = json.loads(new_files[name].read_text())
+        r = compare_payloads(base, new, tolerance)
+        total += len(r["regressions"]) + len(r["incomparable"])
+        status = "OK" if not (r["regressions"] or r["incomparable"]) else "REGRESSED"
+        print(f"== {name}: {status} ({len(r['regressions'])} regressions, "
+              f"{len(r['improvements'])} improvements, "
+              f"{len(r['changed'])} neutral changes)")
+        for key, b, n in r["incomparable"]:
+            print(f"  INCOMPARABLE {key}: {b} != {n} (config/meta mismatch)")
+        for key, b, n in r["regressions"]:
+            print(f"  REGRESSION   {key}: {b} -> {n} "
+                  f"({(n - b) / max(abs(b), 1e-12):+.1%}, "
+                  f"{direction(key)}-is-better)")
+        for key, b, n in r["improvements"]:
+            print(f"  improvement  {key}: {b} -> {n}")
+    return total
+
+
+def _smoke() -> None:
+    """Self-check: the repo tree diffs clean against itself, and an
+    injected 2x regression in a temp copy is flagged."""
+    import shutil
+    import tempfile
+
+    assert compare_trees(REPO, REPO, tolerance=0.15) == 0, \
+        "self-diff of the repo's own BENCH_*.json tree must be clean"
+
+    victims = sorted(REPO.glob("BENCH_*.json"))
+    assert victims, "no BENCH_*.json at the repo root to smoke-test against"
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+        for v in victims:
+            shutil.copy(v, tmp / v.name)
+        # inject a 2x regression into the first lower-is-better metric
+        doc = json.loads(victims[0].read_text())
+        flat = flatten(doc)
+        key = next(k for k in sorted(flat)
+                   if direction(k) == "lower" and flat[k] > 0
+                   and not any(k.startswith(p) for p in _CONFIG_PREFIXES))
+        node, path = doc, key.split(".")
+        for part in path[:-1]:
+            node = node[int(part)] if isinstance(node, list) else node[part]
+        leaf = path[-1]
+        if isinstance(node, list):
+            node[int(leaf)] = node[int(leaf)] * 2
+        else:
+            node[leaf] = node[leaf] * 2
+        (tmp / victims[0].name).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        flagged = compare_trees(REPO, tmp, tolerance=0.15)
+        assert flagged >= 1, f"injected 2x regression on {key!r} was not flagged"
+    print(f"# bench-compare smoke ok: self-diff clean, injected 2x "
+          f"regression on {key!r} flagged")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("base", nargs="?", help="directory holding baseline BENCH_*.json")
+    ap.add_argument("new", nargs="?", help="directory holding candidate BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative slack before a bad-direction move is a "
+                         "regression (default 0.15)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-check: repo tree diffs clean vs itself; an "
+                         "injected 2x regression is flagged")
+    args, _ = ap.parse_known_args(argv)
+    if args.smoke:
+        _smoke()
+        return
+    if not (args.base and args.new):
+        ap.error("need BASE and NEW directories (or --smoke)")
+    regressions = compare_trees(Path(args.base), Path(args.new), args.tolerance)
+    if regressions:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
