@@ -1014,6 +1014,167 @@ def serving_sweep(smoke: bool, max_slots: int = 8,
     return rows, payload
 
 
+def _run_obs_serving(table, rpb, trace, max_slots, obs=None):
+    """Real-clock continuous serving for the observability bench: the whole
+    trace is submitted upfront and the loop ticks with ``drain=True`` until
+    every request completes.  Returns ``(requests, wall_s, serve)``."""
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.engine import ServeEngine
+
+    eng, _stack = _serving_engine(table, rpb)
+    serve = ServeEngine(
+        None, None, max_slots=max_slots,
+        exemplar_policy=AdmissionPolicy(slo_s=0.0, max_wave=max_slots),
+        clock=time.perf_counter, obs=obs)
+    t0 = time.perf_counter()
+    reqs = [serve.submit_exemplar_request(a["predicates"], a["k"])
+            for a in trace]
+    ticks = 0
+    while not all(r.done for r in reqs):
+        serve.exemplar_tick(eng, drain=True)
+        ticks += 1
+        if ticks > 100 * len(reqs):
+            raise AssertionError("obs serving loop stalled")
+    return reqs, time.perf_counter() - t0, serve
+
+
+def obs_sweep(smoke: bool, max_slots: int = 4,
+              seeds=(0, 1, 2, 3, 4), argv=None) -> tuple[list[dict], dict]:
+    """Observability overhead + trace fidelity on the real-clock serving loop.
+
+    Asserts (the obs CI hook, raises on any regression):
+
+    * **byte-identity** — every request's result with tracing ON is identical
+      to the untraced run (tracing observes, never steers);
+    * **trace fidelity** — the exported JSONL *alone* reconstructs every
+      request's critical path: ≥95% of each wall latency is covered by queue
+      wait + serving-tick spans, and every request carries a launch reason;
+    * **disabled is free** — an ``enabled=False`` recorder performs zero
+      clock reads and buffers zero events across a full serving run;
+    * the text report renders from the file with no live engine state.
+
+    Emits ``BENCH_obs.json``: trimmed-mean tracing overhead + span-coverage
+    stats over the seeds (driver key ``obs``).
+    """
+    import os
+    import tempfile
+
+    from benchmarks.common import trimmed_mean, write_bench_json
+    from repro.obs import NULL_SPAN, MetricsRegistry, TraceRecorder
+    try:
+        from tools.trace_report import load_events, render, request_paths
+    except ImportError:  # direct script run: repo root not on sys.path
+        sys.path.insert(
+            0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        from tools.trace_report import load_events, render, request_paths
+
+    num_records = 40_000
+    rpb = 256
+    n = 24 if smoke else 96
+    table = make_clustered_table(num_records=num_records, num_dims=8,
+                                 density=0.1, seed=0, mean_cluster=2 * rpb)
+    # warm any lazy compilation/caches outside the timed pairs so the first
+    # (untraced) run of a pair does not eat one-time costs
+    _run_obs_serving(table, rpb, _serving_trace(4, seed=1), max_slots)
+
+    rows: list[dict] = []
+    overheads, cov_mins, cov_means = [], [], []
+    walls_plain, walls_obs = [], []
+    event_counts, span_counts = [], []
+    for seed in seeds:
+        trace = _serving_trace(n, seed=2000 + seed)
+        plain, wall_plain, _ = _run_obs_serving(table, rpb, trace, max_slots)
+        rec = TraceRecorder(metrics=MetricsRegistry())
+        traced, wall_obs, _ = _run_obs_serving(
+            table, rpb, trace, max_slots, obs=rec)
+
+        for a, b in zip(plain, traced):
+            ra, rb = a.result, b.result
+            if not (np.array_equal(ra.record_block, rb.record_block)
+                    and np.array_equal(ra.record_row, rb.record_row)
+                    and np.array_equal(ra.measures, rb.measures)):
+                raise AssertionError(
+                    f"obs byte-identity violated for rid {a.rid} (seed {seed})")
+
+        if rec.dropped:
+            raise AssertionError(
+                f"trace ring buffer overflowed: {rec.dropped} dropped")
+        with tempfile.TemporaryDirectory() as td:
+            events = load_events(rec.export_jsonl(os.path.join(td, "t.jsonl")))
+        paths = request_paths(events)
+        if len(paths) != n:
+            raise AssertionError(
+                f"trace reconstructed {len(paths)}/{n} requests (seed {seed})")
+        bad = sorted(r for r, p in paths.items() if p["coverage"] < 0.95)
+        if bad:
+            raise AssertionError(
+                f"span tree covers <95% of wall latency for rids {bad[:5]} "
+                f"(seed {seed})")
+        if any(p["reason"] is None for p in paths.values()):
+            raise AssertionError(f"request missing a launch reason (seed {seed})")
+        report = render(events, max_requests=5)
+        if "requests (critical path):" not in report:
+            raise AssertionError("trace report failed to render from JSONL")
+
+        covs = [p["coverage"] for p in paths.values()]
+        overhead = (wall_obs - wall_plain) / max(wall_plain, 1e-9)
+        overheads.append(overhead)
+        cov_mins.append(min(covs))
+        cov_means.append(float(np.mean(covs)))
+        walls_plain.append(wall_plain)
+        walls_obs.append(wall_obs)
+        event_counts.append(len(events))
+        span_counts.append(sum(1 for e in events if e["kind"] == "span"))
+        rows.append(dict(
+            seed=seed, n=n,
+            wall_plain_ms=round(wall_plain * 1e3, 2),
+            wall_obs_ms=round(wall_obs * 1e3, 2),
+            overhead=round(overhead, 4),
+            events=len(events), spans=span_counts[-1],
+            cov_min=round(cov_mins[-1], 4), cov_mean=round(cov_means[-1], 4),
+        ))
+
+    # disabled is free: zero clock reads, zero events, the shared null span
+    calls = 0
+
+    def _counting_clock() -> float:
+        nonlocal calls
+        calls += 1
+        return 0.0
+
+    rec_off = TraceRecorder(clock=_counting_clock, enabled=False)
+    if rec_off.span("probe") is not NULL_SPAN:
+        raise AssertionError("disabled recorder allocated a live span")
+    _run_obs_serving(table, rpb, _serving_trace(n, seed=2000), max_slots,
+                     obs=rec_off)
+    if calls or rec_off.events:
+        raise AssertionError(
+            f"disabled recorder not free: {calls} clock reads, "
+            f"{len(rec_off.events)} buffered events")
+
+    overhead_frac = trimmed_mean(overheads)
+    if overhead_frac > 3.0:
+        raise AssertionError(
+            f"tracing overhead pathological: {overhead_frac:+.1%} of the "
+            "untraced wall time")
+
+    payload = dict(
+        config=dict(num_records=num_records, rpb=rpb, max_slots=max_slots,
+                    n_requests=n, seeds=len(seeds), smoke=bool(smoke)),
+        overhead_frac=round(overhead_frac, 4),
+        wall_plain=round(trimmed_mean(walls_plain), 4),
+        wall_obs=round(trimmed_mean(walls_obs), 4),
+        coverage=dict(min=round(min(cov_mins), 4),
+                      mean=round(trimmed_mean(cov_means), 4)),
+        trace=dict(events=int(trimmed_mean(event_counts)),
+                   spans=int(trimmed_mean(span_counts))),
+        disabled=dict(clock_reads=calls, events=len(rec_off.events)),
+    )
+    path = write_bench_json("obs", payload, argv=argv, seeds=seeds)
+    print(f"# wrote {path}")
+    return rows, payload
+
+
 def aggregate_sweep(smoke: bool) -> tuple[list[dict], dict]:
     """Online-aggregation serving on a tiered engine: a cold standalone run
     warms the tiers, then the SAME design (same seed ⇒ same pinned chosen
@@ -1326,6 +1487,14 @@ def main(argv=None):
                          "oracle throughout, and the post-compaction warm "
                          "wave reads 0 store blocks; emits "
                          "BENCH_calibration.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="also run the observability sweep: real-clock "
+                         "continuous serving traced vs untraced; asserts "
+                         "byte-identical results with tracing on, ≥95% "
+                         "per-request wall-latency coverage reconstructed "
+                         "from the JSONL export alone (launch reason + span "
+                         "timeline), and zero clock reads / zero events for "
+                         "a disabled recorder; emits BENCH_obs.json")
     ap.add_argument("--aggregate", action="store_true",
                     help="also run the online-aggregation serving smoke: a "
                          "cold error-SLO run warms the tier stack, then the "
@@ -1447,6 +1616,22 @@ def main(argv=None):
         print(f"# compaction: {c['tail_blocks_rewritten']} tail blocks "
               f"re-sorted; warm wave read {c['warm_store_blocks']} store "
               "blocks (asserted 0)")
+
+    if args.obs:
+        print("\n# --- observability (trace overhead + fidelity) ---")
+        orows, opayload = obs_sweep(args.smoke, argv=section_argv)
+        emit(orows, ["seed", "n", "wall_plain_ms", "wall_obs_ms", "overhead",
+                     "events", "spans", "cov_min", "cov_mean"])
+        c = opayload["coverage"]
+        print(f"# tracing overhead (trimmed mean over "
+              f"{opayload['config']['seeds']} seeds): "
+              f"{opayload['overhead_frac']:+.1%}; per-request critical-path "
+              f"coverage min {c['min']:.3f}, mean {c['mean']:.3f} "
+              "(asserted >= 0.95 per request)")
+        d = opayload["disabled"]
+        print(f"# disabled recorder: {d['clock_reads']} clock reads, "
+              f"{d['events']} events (asserted 0) — results byte-identical "
+              "with tracing on and off")
 
     if args.aggregate:
         print("\n# --- online-aggregation serving (error-SLO waves on tiers) ---")

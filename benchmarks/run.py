@@ -37,6 +37,8 @@ SECTIONS = {
     "calibration": ("Calibrated cost model: q-error shrinks, decisions flip, "
                     "post-compaction warm wave reads 0 store blocks",
                     "benchmarks.bench_multi_query", ["--calibration", "--smoke"]),
+    "obs": ("Observability: tracing overhead, trace fidelity, disabled-is-free",
+            "benchmarks.bench_multi_query", ["--obs", "--smoke"]),
     "bench_compare": ("Bench trajectory diff: self-clean + injected regression flagged",
                       "tools.bench_compare", ["--smoke"]),
     "docs": ("Docs guard: doctests + cross-references", "tools.docs_check"),

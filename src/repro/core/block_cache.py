@@ -62,6 +62,10 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     invalidations: int = 0
+    # re-reads of append-invalidated blocks: the store dirtied them, so their
+    # next admission is append churn, NOT a cold miss — kept out of ``misses``
+    # (and out of ``hit_rate``) so trace reports don't misattribute it
+    invalidation_rereads: int = 0
     store_fetch_calls: int = 0  # physical store.fetch round-trips
     store_blocks_fetched: int = 0  # blocks physically read from the store
     bytes_cached: int = 0
@@ -113,6 +117,9 @@ class BlockLRUCache:
         self._slabs: "OrderedDict[int, tuple[np.ndarray, np.ndarray, np.ndarray, int]]" = (
             OrderedDict()
         )
+        # ids the store reported append-dirtied: their next admission books
+        # as ``invalidation_rereads`` instead of ``misses`` (one-shot marks)
+        self._invalidated: set[int] = set()
 
     # ------------------------------------------------------------------ admin
     def __contains__(self, block_id: int) -> bool:
@@ -126,8 +133,11 @@ class BlockLRUCache:
         return self.stats.bytes_cached
 
     def clear(self) -> None:
+        # wholesale store swap: the next reads hit genuinely new data, so
+        # they ARE cold misses — drop any append-reread marks too
         self.stats.invalidations += len(self._slabs)
         self._slabs.clear()
+        self._invalidated.clear()
         self.stats.bytes_cached = 0
         self.stats.blocks_cached = 0
 
@@ -135,13 +145,27 @@ class BlockLRUCache:
         """Evict exactly `block_ids` (the append-dirtied tail); returns #evicted."""
         n = 0
         for b in block_ids:
+            self._invalidated.add(int(b))
             entry = self._slabs.pop(int(b), None)
             if entry is not None:
                 self.stats.bytes_cached -= entry[3]
                 n += 1
+        if len(self._invalidated) > (1 << 20):  # safety valve: marks degrade
+            self._invalidated.clear()  # to plain misses, never grow unbounded
         self.stats.blocks_cached = len(self._slabs)
         self.stats.invalidations += n
         return n
+
+    def _split_rereads(self, miss_set: set[int]) -> set[int]:
+        """Partition a miss set: returns the append-invalidated ids in it
+        (consuming their one-shot marks); the caller books those as
+        ``invalidation_rereads`` and the rest as cold ``misses``."""
+        if not self._invalidated:
+            return set()
+        re_ids = self._invalidated & miss_set
+        if re_ids:
+            self._invalidated -= re_ids
+        return re_ids
 
     def _evict_to_fit(self, incoming_nbytes: int) -> None:
         if self.capacity_bytes is None:
@@ -176,7 +200,10 @@ class BlockLRUCache:
         if not miss_set:
             return 0
         miss = np.asarray(sorted(miss_set), dtype=np.int64)
-        self.stats.misses += int(miss.size)  # admissions are logical misses
+        re_ids = self._split_rereads(miss_set)
+        # admissions are logical misses — except append-invalidated re-reads
+        self.stats.misses += int(miss.size) - len(re_ids)
+        self.stats.invalidation_rereads += len(re_ids)
         self.stats.store_fetch_calls += 1
         self.stats.store_blocks_fetched += int(miss.size)
         if self.fetch_log is not None:
@@ -209,7 +236,10 @@ class BlockLRUCache:
         miss_set = {int(b) for b in ids} - self._slabs.keys()
         hits = sum(1 for b in ids if int(b) not in miss_set)
         self.stats.hits += int(hits)
-        self.stats.misses += int(ids.size - hits)
+        re_ids = self._split_rereads(miss_set)
+        n_re = sum(1 for b in ids if int(b) in re_ids) if re_ids else 0
+        self.stats.misses += int(ids.size - hits) - n_re
+        self.stats.invalidation_rereads += n_re
         fetched_off: dict[int, int] = {}
         mbd = mbm = mbv = None
         if miss_set:

@@ -66,6 +66,7 @@ class NeedleTailEngine:
         calibrated_cost: bool = False,
         timing_backend=None,
         ledger=None,
+        obs=None,
     ):
         from repro.core.block_cache import BlockLRUCache, PlanOrderCache
 
@@ -100,6 +101,13 @@ class NeedleTailEngine:
         # shared with a TierStack block cache so every pricing site agrees.
         self.ledger = ledger
         self.timing_backend = timing_backend
+        # obs: a repro.obs.TraceRecorder.  None (the default) keeps every
+        # traced site at one attribute test; when set, the same recorder is
+        # shared with a TierStack block cache so fetch events land in the
+        # same stream as plan/wave spans.
+        self.obs = obs
+        if obs is not None and hasattr(self.block_cache, "obs"):
+            self.block_cache.obs = obs
         if hasattr(self.block_cache, "effective_io_time"):
             if ledger is not None:
                 self.block_cache.ledger = ledger
@@ -193,6 +201,8 @@ class NeedleTailEngine:
         if lg is not None:
             for level in fitted:  # refit models subsume the old corrections
                 lg.reset_correction(level)
+        if getattr(self, "obs", None) is not None and fitted:
+            self.obs.event("calibration.refit", levels=sorted(fitted))
         return fitted
 
     # ------------------------------------------------------------------ plans
@@ -271,6 +281,11 @@ class NeedleTailEngine:
             bt, b2 = plan_threshold(), plan_two_prong()
             ct, c2 = self.plan_cost(bt), self.plan_cost(b2)
             blocks, used = (bt, "threshold") if ct <= c2 else (b2, "two_prong")
+            if getattr(self, "obs", None) is not None:
+                self.obs.event(
+                    "plan.arbitration", choice=used, n_blocks=int(blocks.size),
+                    cost_threshold=float(ct), cost_two_prong=float(c2),
+                )
             self._record_arbitration(blocks, ct if used == "threshold" else c2)
             return blocks, used
         raise ValueError(f"unknown algo {algo!r}")
@@ -306,6 +321,7 @@ class NeedleTailEngine:
         op: str = AND,
         algo: str = "auto",
     ) -> QueryResult:
+        obs = getattr(self, "obs", None)
         t0 = time.perf_counter()
         fetched: list[np.ndarray] = []
         rec_blocks: list[np.ndarray] = []
@@ -317,12 +333,23 @@ class NeedleTailEngine:
         exclude = np.asarray([], dtype=np.int64)
         need = k
         while got < k and rounds < self.max_refills:
-            blocks, used_algo = self.plan(predicates, need, op, algo, exclude)
-            blocks = np.setdiff1d(blocks, exclude)
-            if blocks.size == 0:
-                break
-            blocks = np.sort(blocks)  # §4.1 fetch optimization
-            bd, bm, bv = self.block_cache.get_many(self.store, blocks)
+            if obs is not None:
+                with obs.span("anyk.round", round=rounds, need=int(need)) as sp:
+                    blocks, used_algo = self.plan(predicates, need, op, algo, exclude)
+                    blocks = np.setdiff1d(blocks, exclude)
+                    sp.set(algo=used_algo, n_blocks=int(blocks.size),
+                           predicted_io_s=float(self.cost.io_time(blocks)))
+                    if blocks.size == 0:
+                        break
+                    blocks = np.sort(blocks)  # §4.1 fetch optimization
+                    bd, bm, bv = self.block_cache.get_many(self.store, blocks)
+            else:
+                blocks, used_algo = self.plan(predicates, need, op, algo, exclude)
+                blocks = np.setdiff1d(blocks, exclude)
+                if blocks.size == 0:
+                    break
+                blocks = np.sort(blocks)  # §4.1 fetch optimization
+                bd, bm, bv = self.block_cache.get_many(self.store, blocks)
             mask = np.asarray(self._mask(bd, predicates, op) & bv)
             bi, ri = np.nonzero(mask)
             rec_blocks.append(blocks[bi])

@@ -470,6 +470,28 @@ def _execute_wave(
     accounting).  Shared verbatim by the host-mirror and device plan loops so
     the only thing that differs between them is where plans are computed.
     Returns ``(progressed, blocks_requested_delta)``."""
+    obs = getattr(engine, "obs", None)
+    if obs is not None:
+        with obs.span("wave.execute", n_active=len(active)) as sp:
+            progressed, requested = _execute_wave_body(
+                engine, cache, active, wave_blocks, touched, touched_set
+            )
+            sp.set(requested=requested, progressed=progressed,
+                   satisfied=sum(1 for st in active if st.done))
+            return progressed, requested
+    return _execute_wave_body(
+        engine, cache, active, wave_blocks, touched, touched_set
+    )
+
+
+def _execute_wave_body(
+    engine: "NeedleTailEngine",
+    cache,
+    active: list[_QueryState],
+    wave_blocks: list[np.ndarray],
+    touched: list[int],
+    touched_set: set[int],
+) -> tuple[bool, int]:
     union = np.unique(np.concatenate(wave_blocks)) if wave_blocks else np.asarray([])
     if union.size:
         for b in union:
@@ -525,6 +547,28 @@ def plan_round_host(
     per-state block sets, aligned with `active`, ready for
     :func:`_execute_wave`.
     """
+    obs = getattr(engine, "obs", None)
+    if obs is not None:
+        site = "sharded" if planner is not None else "host"
+        with obs.span("plan.round", site=site, n_active=len(active)) as sp:
+            wave_blocks = _plan_round_host_body(engine, active, algo, planner)
+            union = (np.unique(np.concatenate(wave_blocks))
+                     if wave_blocks else np.asarray([], dtype=np.int64))
+            choices: dict[str, int] = {}
+            for st in active:
+                choices[st.used_algo] = choices.get(st.used_algo, 0) + 1
+            sp.set(n_blocks=int(union.size), choices=choices,
+                   predicted_io_s=float(engine.cost.io_time(union)))
+            return wave_blocks
+    return _plan_round_host_body(engine, active, algo, planner)
+
+
+def _plan_round_host_body(
+    engine: "NeedleTailEngine",
+    active: list[_QueryState],
+    algo: str,
+    planner=None,
+) -> list[np.ndarray]:
     by_algo: dict[str, list[_QueryState]] = {}
     for st in active:
         by_algo.setdefault(st.query.algo or algo, []).append(st)
@@ -792,6 +836,10 @@ class DeviceWave:
         with jax.transfer_guard_device_to_host("allow"):
             packed_np = np.asarray(packed)
         dstate.transfers += 1
+        obs = getattr(engine, "obs", None)
+        if obs is not None:
+            obs.event("device.transfer", n=dstate.transfers,
+                      nbytes=int(packed_np.nbytes), n_active=len(active))
         th_mask, _, tps, tpe = unpack_plan(packed_np, self.lam)
         # forward_optimal falls back to the host DP (sequential by nature);
         # its combined rows come from the host mirror, not the device
@@ -833,6 +881,15 @@ class DeviceWave:
             if blocks.size == 0:
                 st.done = True  # plan exhausted: nothing new to read
             wave_blocks.append(blocks)
+        if obs is not None:
+            choices: dict[str, int] = {}
+            for st in active:
+                choices[st.used_algo] = choices.get(st.used_algo, 0) + 1
+            union = (np.unique(np.concatenate(wave_blocks))
+                     if wave_blocks else np.asarray([], dtype=np.int64))
+            obs.event("plan.round", site="device", n_active=len(active),
+                      n_blocks=int(union.size), choices=choices,
+                      predicted_io_s=float(engine.cost.io_time(union)))
         return active, wave_blocks
 
 
@@ -919,6 +976,12 @@ def run_batch(
     only path that feeds the :class:`~repro.core.block_cache.PlanOrderCache`
     memo.
     """
+    obs = getattr(engine, "obs", None)
+    sp = obs.span("batch.run", n_queries=len(queries),
+                  site="host" if plan_on_host else "device") if obs is not None \
+        else None
+    if sp is not None:
+        sp.__enter__()
     t0 = time.perf_counter()
     states = [new_query_state(q) for q in queries]
     cache = engine.block_cache
@@ -959,6 +1022,13 @@ def run_batch(
         for st in states
     ]
     touched_ids = np.asarray(touched, dtype=np.int64)
+    if sp is not None:
+        sp.set(waves=waves, requested=requested_total,
+               unique_blocks=int(touched_ids.size),
+               device_transfers=device_transfers,
+               store_blocks_fetched=int(cache.stats.store_blocks_fetched - store0),
+               cache_hits=int(cache.stats.hits - hits0))
+        sp.__exit__(None, None, None)
     return BatchQueryResult(
         results=results,
         unique_blocks_fetched=touched_ids,

@@ -1,0 +1,85 @@
+"""One ``last_wave_stats`` schema for every serving pool.
+
+Before this module each pool wrote its own ad-hoc dict: the drained exemplar
+wave had no ``pending``/``prefetch``, only the continuous exemplar tick
+recorded ``plan_qerror``, the aggregate tick alone carried ``kind`` and
+``answered``, and the LM tick recorded nothing at all.  Consumers (benches,
+tests, trace reports) had to know which pool ran to know which keys exist.
+
+:func:`make_wave_stats` closes the schema: every wave ledger has **all** the
+keys in :data:`WAVE_STATS_KEYS`, with explicit defaults for whatever a pool
+cannot measure (``None`` for absent subsystems — tiers on a flat LRU,
+prefetch when disabled, ``plan_qerror`` without a ledger — and zeros for
+counts).  Passing an unknown key raises, so the schema cannot silently fork
+again.  :func:`record_wave_metrics` mirrors each wave into a
+:class:`~repro.obs.metrics.MetricsRegistry` under the ``wave.<kind>.*``
+naming contract, which is where trace reports and the bench regression gate
+read per-pool p50/p99 from.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import MetricsRegistry
+
+#: The closed key set of every ``last_wave_stats`` dict, all pools.
+WAVE_STATS_KEYS: tuple[str, ...] = (
+    "kind",                  # "exemplar" | "lm" | "aggregate"
+    "wave_size",             # active slots this round
+    "rounds",                # refill rounds executed (1 per continuous tick)
+    "device_transfers",      # packed device→host plan transfers this wave
+    "store_blocks_fetched",  # physical backing-store reads this wave
+    "cache_hits",            # block gathers served from cache this wave
+    "unique_blocks",         # first-touched unique blocks this wave
+    "tiers",                 # per-tier placement delta dict, None on flat LRU
+    "slot_occupancy",        # busy-slot fraction per round
+    "modeled_store_io_s",    # modeled cost of this wave's demand store reads
+    "pending",               # requests still queued in admission after the wave
+    "prefetch",              # PrefetchStats snapshot, None when disabled
+    "plan_qerror",           # running placement q-error, None without a ledger
+    "answered",              # aggregate answer records (rid/reason/...), [] else
+)
+
+_DEFAULTS = {
+    "wave_size": 0, "rounds": 0, "device_transfers": 0,
+    "store_blocks_fetched": 0, "cache_hits": 0, "unique_blocks": 0,
+    "tiers": None, "slot_occupancy": 0.0, "modeled_store_io_s": 0.0,
+    "pending": 0, "prefetch": None, "plan_qerror": None,
+}
+
+
+def make_wave_stats(kind: str, **values) -> dict:
+    """A schema-complete wave-stats dict for pool `kind`.
+
+    Unspecified keys take their defaults; unknown keys raise (the schema is
+    closed — grow :data:`WAVE_STATS_KEYS` deliberately, not per call site).
+    """
+    stats = {"kind": kind, **_DEFAULTS, "answered": []}  # WAVE_STATS_KEYS order
+    unknown = set(values) - set(stats)
+    if unknown:
+        raise ValueError(f"unknown wave-stats keys: {sorted(unknown)}")
+    stats.update(values)
+    return stats
+
+
+def record_wave_metrics(metrics: MetricsRegistry, stats: dict) -> None:
+    """Mirror one wave ledger into the registry (``wave.<kind>.*``)."""
+    kind = stats["kind"]
+    p = f"wave.{kind}"
+    metrics.inc(f"{p}.waves")
+    metrics.inc(f"{p}.rounds", stats["rounds"])
+    metrics.inc(f"{p}.device_transfers", stats["device_transfers"])
+    metrics.inc(f"{p}.store_blocks_fetched", stats["store_blocks_fetched"])
+    metrics.inc(f"{p}.cache_hits", stats["cache_hits"])
+    metrics.inc(f"{p}.unique_blocks", stats["unique_blocks"])
+    metrics.observe(f"{p}.wave_size", stats["wave_size"])
+    metrics.observe(f"{p}.modeled_store_io_s", stats["modeled_store_io_s"])
+    metrics.set_gauge(f"{p}.slot_occupancy", stats["slot_occupancy"])
+    metrics.set_gauge(f"{p}.pending", stats["pending"])
+    if stats["plan_qerror"] is not None:
+        metrics.observe(f"{p}.plan_qerror", stats["plan_qerror"])
+    tiers = stats["tiers"]
+    if tiers:
+        for k, v in tiers.items():
+            metrics.inc(f"tiers.{k}", v)
+    pf = stats["prefetch"]
+    if pf:
+        metrics.absorb("prefetch", pf)

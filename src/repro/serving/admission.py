@@ -119,10 +119,15 @@ class AdmissionController:
         clock: Callable[[], float] = time.monotonic,
         residency_probe: Callable[[list], bool] | None = None,
         cost_probe: Callable[[list], float | None] | None = None,
+        obs=None,
     ):
         self.policy = policy or AdmissionPolicy()
         self.clock = clock
         self.stats = AdmissionStats()
+        # obs: a repro.obs.TraceRecorder.  Each pop emits one
+        # ``admission.launch`` event carrying the launch reason and the
+        # per-request queue waits (the span timeline's "queue wait" leg).
+        self.obs = obs
         # residency-aware early launch (repro.storage.residency): a stat-free
         # peek answering "would this wave be served entirely from cache
         # tiers?".  When it says yes, poll launches the wave before its SLO
@@ -237,6 +242,16 @@ class AdmissionController:
             waits=waits, reason=reason,
             prev_max_wait=prev_max_wait, prev_max_size=prev_max_size,
         )
+        if self.obs is not None and wave:
+            m = self.obs.metrics
+            for w, _ in waits.values():
+                m.observe("admission.wait_s", w)
+            self.obs.event(
+                "admission.launch", reason=reason, wave_size=len(wave),
+                rids=[getattr(r, "rid", None) for r in wave],
+                waits_s=[round(w, 9) for w, _ in waits.values()],
+                violations=violations,
+            )
         return wave
 
     def peek_pending(self, n: int | None = None) -> list[Any]:

@@ -275,6 +275,7 @@ class ServeEngine:
         exemplar_prefetch: bool = False,
         aggregate_policy: AdmissionPolicy | None = None,
         recalibrate_every: int = 0,
+        obs=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -317,13 +318,20 @@ class ServeEngine:
         # per-wave accounting of the most recent exemplar wave (transfer
         # ledger + BlockLRUCache residency feed); see pump_exemplar_requests
         self.last_wave_stats: dict | None = None
+        # obs: a repro.obs.TraceRecorder shared by every subsystem this loop
+        # drives — the admission controllers get it here, the any-k engine
+        # (and its tier stack / peer group) on first tick (_wire_obs).  The
+        # default None keeps every traced site at one attribute test.
+        self.obs = obs
         self.queue: deque[Request] = deque()
         self.exemplar_queue: deque[ExemplarRequest] = deque()  # legacy intake
         self.exemplar_admission = AdmissionController(
-            exemplar_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
+            exemplar_policy or AdmissionPolicy(max_wave=max_slots), clock=clock,
+            obs=obs,
         )
         self.aggregate_admission = AdmissionController(
-            aggregate_policy or AdmissionPolicy(max_wave=max_slots), clock=clock
+            aggregate_policy or AdmissionPolicy(max_wave=max_slots), clock=clock,
+            obs=obs,
         )
         # optional marginal-value cutoff for the answer-now arbitration
         # (modeled seconds per unit of expected CI-width reduction); None
@@ -349,6 +357,10 @@ class ServeEngine:
     def submit(self, prompt, max_new_tokens: int = 32) -> Request:
         req = Request(next(self._rid), np.asarray(prompt, np.int32), max_new_tokens)
         self.queue.append(req)
+        obs = getattr(self, "obs", None)
+        if obs is not None:
+            obs.event("request.submit", rid=req.rid, kind="lm")
+            obs.metrics.inc("serve.lm.submitted")
         return req
 
     def _next_wave(self) -> list[Request]:
@@ -410,12 +422,41 @@ class ServeEngine:
         ``exemplar_queue`` deque is migrated into the controller FIFO."""
         adm = getattr(self, "exemplar_admission", None)
         if adm is None:
-            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots))
+            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots),
+                                      obs=getattr(self, "obs", None))
             self.exemplar_admission = adm
         q = getattr(self, "exemplar_queue", None)
         while q:
             adm.submit(q.popleft())
         return adm
+
+    def _wire_obs(self, engine) -> None:
+        """Share this loop's recorder with the any-k engine and everything
+        under it (tier stack, peer group) so one request's trace carries the
+        whole lifecycle: queue wait → admission → plan → fetch → transfer →
+        satisfy.  Never overrides a recorder the engine already owns."""
+        obs = getattr(self, "obs", None)
+        if obs is None:
+            return
+        if getattr(engine, "obs", None) is None:
+            engine.obs = obs
+        bc = getattr(engine, "block_cache", None)
+        if bc is not None and getattr(bc, "obs", "absent") is None:
+            bc.obs = obs
+        peer_tier = getattr(bc, "peer_tier", None)
+        group = getattr(peer_tier, "group", None)
+        if group is not None and getattr(group, "obs", "absent") is None:
+            group.obs = obs
+
+    def _note_wave_stats(self) -> None:
+        """Mirror the wave ledger just written to ``last_wave_stats`` into
+        the recorder's metrics registry (``wave.<kind>.*``).  No-op without
+        a recorder — the dict ledger itself is always schema-complete."""
+        obs = getattr(self, "obs", None)
+        if obs is not None and self.last_wave_stats is not None:
+            from repro.obs.wave_stats import record_wave_metrics
+
+            record_wave_metrics(obs.metrics, self.last_wave_stats)
 
     def _install_admission_probes(self, engine, adm: AdmissionController) -> None:
         """Wire the engine-bound launch probes onto the controller: the
@@ -468,6 +509,10 @@ class ServeEngine:
         """Admit an exemplar lookup under the SLO policy; it rides in the next
         wave that launches (full wave, SLO deadline, or drain barrier)."""
         req = ExemplarRequest(next(self._rid), predicates, k, op)
+        obs = getattr(self, "obs", None)
+        if obs is not None:
+            obs.event("request.submit", rid=req.rid, kind="exemplar", k=k)
+            obs.metrics.inc("serve.exemplar.submitted")
         self._exemplar_admission().submit(req)
         return req
 
@@ -507,20 +552,29 @@ class ServeEngine:
         occ = (
             sum(apr) / (len(apr) * max(self.max_slots, 1)) if apr else 0.0
         )
-        self.last_wave_stats = {
-            "wave_size": len(wave),
-            "rounds": batch.rounds,
-            "device_transfers": batch.device_transfers,
-            "store_blocks_fetched": batch.store_blocks_fetched,
-            "cache_hits": batch.cache_hits,
-            "unique_blocks": int(batch.unique_blocks_fetched.size),
-            "tiers": batch.tier_stats,
-            "slot_occupancy": min(occ, 1.0),
-            "modeled_store_io_s": batch.modeled_store_io_s,
-        }
+        from repro.obs.wave_stats import make_wave_stats
+
+        self.last_wave_stats = make_wave_stats(
+            "exemplar",
+            wave_size=len(wave),
+            rounds=batch.rounds,
+            device_transfers=batch.device_transfers,
+            store_blocks_fetched=batch.store_blocks_fetched,
+            cache_hits=batch.cache_hits,
+            unique_blocks=int(batch.unique_blocks_fetched.size),
+            tiers=batch.tier_stats,
+            slot_occupancy=min(occ, 1.0),
+            modeled_store_io_s=batch.modeled_store_io_s,
+            pending=self._exemplar_admission().pending,
+        )
+        self._note_wave_stats()
+        obs = getattr(self, "obs", None)
         for req, res in zip(wave, batch.results):
             req.result = res
             req.done = True
+            if obs is not None:
+                obs.event("request.done", rid=req.rid, kind="exemplar",
+                          rounds=res.plan_rounds, records=res.num_records)
 
     def pump_exemplar_requests(self, engine, now: float | None = None) -> list[ExemplarRequest]:
         """Opportunistic admission tick: launch every wave that is ready
@@ -596,6 +650,23 @@ class ServeEngine:
         ``modeled_store_io_s`` of demand reads, prefetch stats).  Returns
         the requests completed this tick.
         """
+        self._wire_obs(engine)
+        obs = getattr(self, "obs", None)
+        if obs is None:
+            return self._exemplar_tick_body(engine, now, drain)
+        with obs.span("serve.exemplar_tick") as sp:
+            done = self._exemplar_tick_body(engine, now, drain)
+            sp.set(completed=len(done))
+            for req in done:
+                r = req.result
+                obs.event("request.done", rid=req.rid, kind="exemplar",
+                          rounds=getattr(r, "plan_rounds", 0),
+                          records=getattr(r, "num_records", 0))
+        return done
+
+    def _exemplar_tick_body(
+        self, engine, now: float | None, drain: bool
+    ) -> list[ExemplarRequest]:
         from repro.core.multi_query import (
             BatchQuery, _execute_wave, finalize_query_result, new_query_state,
             plan_round_host,
@@ -696,31 +767,35 @@ class ServeEngine:
         )
         if pf is not None:
             pf.observe_wave(union)
-        self.last_wave_stats = {
-            "wave_size": len(active),
-            "rounds": 1,
-            "device_transfers": (
-                (loop.dwave.transfers - transfers0) if loop.dwave is not None else 0
-            ),
-            "store_blocks_fetched": int(cache.stats.store_blocks_fetched - store0),
-            "cache_hits": int(cache.stats.hits - hits0),
-            "unique_blocks": len(loop.touched) - touched0,
-            "tiers": (
-                {k: v - tier0[k] for k, v in tier_fn().items()}
-                if tier0 is not None
-                else None
-            ),
-            "slot_occupancy": sched.occupancy,
-            "modeled_store_io_s": sum(engine.cost.io_time(m) for m in missed),
-            "pending": adm.pending,
-            "prefetch": pf.stats.snapshot() if pf is not None else None,
-        }
         # close the plan ledger's wave: per-tier predicted-vs-observed totals
         # snapshot into its audit trail, running q-error surfaces per wave
         lg = getattr(engine, "ledger", None)
         if lg is not None:
             lg.note_wave()
-            self.last_wave_stats["plan_qerror"] = lg.qerror(site="placement")
+        from repro.obs.wave_stats import make_wave_stats
+
+        self.last_wave_stats = make_wave_stats(
+            "exemplar",
+            wave_size=len(active),
+            rounds=1,
+            device_transfers=(
+                (loop.dwave.transfers - transfers0) if loop.dwave is not None else 0
+            ),
+            store_blocks_fetched=int(cache.stats.store_blocks_fetched - store0),
+            cache_hits=int(cache.stats.hits - hits0),
+            unique_blocks=len(loop.touched) - touched0,
+            tiers=(
+                {k: v - tier0[k] for k, v in tier_fn().items()}
+                if tier0 is not None
+                else None
+            ),
+            slot_occupancy=sched.occupancy,
+            modeled_store_io_s=sum(engine.cost.io_time(m) for m in missed),
+            pending=adm.pending,
+            prefetch=pf.stats.snapshot() if pf is not None else None,
+            plan_qerror=lg.qerror(site="placement") if lg is not None else None,
+        )
+        self._note_wave_stats()
         return done
 
     def _aggregate_admission(self) -> AdmissionController:
@@ -728,7 +803,8 @@ class ServeEngine:
         built without ``__init__`` (test shims)."""
         adm = getattr(self, "aggregate_admission", None)
         if adm is None:
-            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots))
+            adm = AdmissionController(AdmissionPolicy(max_wave=self.max_slots),
+                                      obs=getattr(self, "obs", None))
             self.aggregate_admission = adm
         return adm
 
@@ -757,6 +833,10 @@ class ServeEngine:
             estimator=estimator, algo=algo, seed=seed,
             chunk_blocks=chunk_blocks, max_rounds=max_rounds,
         )
+        obs = getattr(self, "obs", None)
+        if obs is not None:
+            obs.event("request.submit", rid=req.rid, kind="aggregate")
+            obs.metrics.inc("serve.aggregate.submitted")
         self._aggregate_admission().submit(req)
         return req
 
@@ -779,6 +859,21 @@ class ServeEngine:
         each leave under ``"answered"`` (rid / reason / rounds / halfwidth).
         Returns the requests answered this tick.
         """
+        self._wire_obs(engine)
+        obs = getattr(self, "obs", None)
+        if obs is None:
+            return self._aggregate_tick_body(engine, now, drain)
+        with obs.span("serve.aggregate_tick") as sp:
+            done = self._aggregate_tick_body(engine, now, drain)
+            sp.set(completed=len(done))
+            for req in done:
+                obs.event("request.done", rid=req.rid, kind="aggregate",
+                          rounds=req.rounds, reason=req.reason)
+        return done
+
+    def _aggregate_tick_body(
+        self, engine, now: float | None, drain: bool
+    ) -> list[AggregateRequest]:
         from repro.core.online_agg import AggregateQuery, OnlineAggregator
         from repro.serving.admission import arbitrate_aggregate
         from repro.storage.prefetch import effective_block_cost
@@ -881,23 +976,26 @@ class ServeEngine:
                     "rounds": agg.rounds,
                     "halfwidth": agg.halfwidth(),
                 })
-        self.last_wave_stats = {
-            "kind": "aggregate",
-            "wave_size": len(staged),
-            "rounds": 1,
-            "store_blocks_fetched": int(cache.stats.store_blocks_fetched - store0),
-            "cache_hits": int(cache.stats.hits - hits0),
-            "unique_blocks": int(union.size),
-            "tiers": (
+        from repro.obs.wave_stats import make_wave_stats
+
+        self.last_wave_stats = make_wave_stats(
+            "aggregate",
+            wave_size=len(staged),
+            rounds=1,
+            store_blocks_fetched=int(cache.stats.store_blocks_fetched - store0),
+            cache_hits=int(cache.stats.hits - hits0),
+            unique_blocks=int(union.size),
+            tiers=(
                 {k: v - tier0[k] for k, v in tier_fn().items()}
                 if tier0 is not None
                 else None
             ),
-            "slot_occupancy": sched.occupancy,
-            "modeled_store_io_s": sum(engine.cost.io_time(m) for m in missed),
-            "pending": adm.pending,
-            "answered": answered,
-        }
+            slot_occupancy=sched.occupancy,
+            modeled_store_io_s=sum(engine.cost.io_time(m) for m in missed),
+            pending=adm.pending,
+            answered=answered,
+        )
+        self._note_wave_stats()
         return done
 
     def lm_tick(self) -> list[Request]:
@@ -915,7 +1013,38 @@ class ServeEngine:
         padding would) — then decodes ONE step and retires slots on
         EOS/``max_new_tokens`` immediately, freeing them for the next tick's
         joiners.  Returns the requests completed this tick.
+
+        A tick that actually ran (prefill or decode step) writes a
+        ``kind="lm"`` wave ledger to ``last_wave_stats`` — the same closed
+        schema as the exemplar/aggregate pools (:mod:`repro.obs.wave_stats`);
+        I/O-plane keys stay at their zero defaults (the LM pool does no
+        block I/O).
         """
+        obs = getattr(self, "obs", None)
+        if obs is None:
+            return self._lm_tick_body()
+        with obs.span("serve.lm_tick") as sp:
+            done = self._lm_tick_body()
+            sp.set(completed=len(done))
+            for req in done:
+                obs.event("request.done", rid=req.rid, kind="lm",
+                          tokens=len(req.out_tokens))
+        return done
+
+    def _note_lm_wave(self, wave_size: int) -> None:
+        """One LM tick's wave ledger (schema-complete, metrics-mirrored)."""
+        from repro.obs.wave_stats import make_wave_stats
+
+        self.last_wave_stats = make_wave_stats(
+            "lm",
+            wave_size=wave_size,
+            rounds=1,
+            slot_occupancy=wave_size / max(self.max_slots, 1),
+            pending=len(self.queue),
+        )
+        self._note_wave_stats()
+
+    def _lm_tick_body(self) -> list[Request]:
         if self._prefill is None:
             return []
         done: list[Request] = []
@@ -934,6 +1063,7 @@ class ServeEngine:
                 r.out_tokens.append(int(nxt[b]))
                 slots[b] = r
             self._lm = {"cache": cache, "pos": plen, "slots": slots}
+            self._note_lm_wave(len(wave))
             return done  # prefill is the tick; first decode lands next tick
         lm = self._lm
         pos = int(lm["pos"])
@@ -964,6 +1094,7 @@ class ServeEngine:
                 done.append(slots[b])
                 slots[b] = None
             self._lm = None
+            self._note_lm_wave(len(active))
             return done
         cur = np.full(self.max_slots, self.pad_id, np.int32)
         for b in active:
@@ -989,6 +1120,7 @@ class ServeEngine:
                 done.append(r)
         if all(s is None for s in slots):
             self._lm = None
+        self._note_lm_wave(len(active))
         return done
 
     def step(

@@ -103,6 +103,7 @@ class PeerGroup:
         # migrated by repro.storage.rebalance afterwards
         self.owner: dict[int, int] = {}
         self.stats = PeerGroupStats()
+        self.obs = None  # optional repro.obs.TraceRecorder (serving thread)
         self._down: dict[int, str] = {}  # shard -> "miss" | "raise"
         self._epoch: dict[int, int] = {}  # per-block invalidation stamp
         self._lock = threading.Lock()
@@ -208,6 +209,9 @@ class PeerGroup:
                 return None
             self.stats.remote_fetches += 1
             self.stats.remote_bytes += int(entry[3])
+        if self.obs is not None:
+            self.obs.event("fetch.peer", block=b, shard=sid,
+                           nbytes=int(entry[3]))
         self._host_tier(sid).touch(b)
         return slab
 

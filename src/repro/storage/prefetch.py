@@ -319,6 +319,10 @@ class TierPrefetcher:
             want = want[: self.max_blocks]
         ids = np.asarray(want, dtype=np.int64)
         self.stats.issued += int(ids.size)
+        obs = getattr(engine, "obs", None)
+        if obs is not None:
+            obs.event("prefetch.kick", n=int(ids.size),
+                      predicted_requests=n_pred, tier=self.tier)
         # ledger the kick's pricing like the admission gate's: these are the
         # blocks speculative I/O is about to pay for
         _record_priced_decision(
@@ -399,6 +403,10 @@ class TierPrefetcher:
             self.stats.fetched += got
             moved += got
         self._inflight = still
+        if moved:
+            obs = getattr(self.engine, "obs", None)
+            if obs is not None:
+                obs.event("prefetch.drain", admitted=moved, tier=self.tier)
         return moved
 
     # ------------------------------------------------------------------ credit

@@ -291,6 +291,12 @@ class TierStack:
         # run_batch swaps in a list for exact per-batch physical-I/O logging
         self.fetch_log: list | None = None
         self._accesses: dict[int, int] = {}  # logical touches per block id
+        # ids the store reported append-dirtied: their next admission books
+        # as ``invalidation_rereads`` instead of ``misses`` (one-shot marks)
+        self._invalidated: set[int] = set()
+        # optional repro.obs.TraceRecorder: fetch outcomes + invalidation
+        # events stream into it; None (the default) adds one attribute test
+        self.obs = None
         # measured-cost feedback (both optional; see repro.storage.calibration
         # and repro.core.plan_ledger): the ledger supplies per-level price
         # corrections and receives predicted-vs-observed placement records;
@@ -337,22 +343,42 @@ class TierStack:
             tier.stats.bytes_cached = 0
             tier.stats.blocks_cached = 0
         self._accesses.clear()
+        # wholesale swap: the next reads hit genuinely new data (cold misses)
+        self._invalidated.clear()
         self._sync_gauges()
 
     def invalidate(self, block_ids: Iterable[int]) -> int:
         """Evict exactly `block_ids` from EVERY tier (the append-dirtied
         tail); returns the number of resident copies evicted."""
         n = 0
+        marked = 0
         for b in block_ids:
             b = int(b)
+            self._invalidated.add(b)
+            marked += 1
             for tier in self.tiers:
                 if tier.pop(b) is not None:
                     tier.stats.invalidations += 1
                     n += 1
             self._accesses.pop(b, None)
+        if len(self._invalidated) > (1 << 20):  # safety valve: marks degrade
+            self._invalidated.clear()  # to plain misses, never grow unbounded
         self.stats.invalidations += n
         self._sync_gauges()
+        if self.obs is not None:
+            self.obs.event("tier.invalidate", dirtied=marked, evicted=n)
         return n
+
+    def _split_rereads(self, miss_set: set[int]) -> set[int]:
+        """Partition a miss set: returns the append-invalidated ids in it
+        (consuming their one-shot marks); the caller books those as
+        ``invalidation_rereads`` and the rest as cold ``misses``."""
+        if not self._invalidated:
+            return set()
+        re_ids = self._invalidated & miss_set
+        if re_ids:
+            self._invalidated -= re_ids
+        return re_ids
 
     # ------------------------------------------------------------- residency
     def residency_tier(self, block_ids) -> np.ndarray:
@@ -586,9 +612,12 @@ class TierStack:
         nb = self.block_nbytes(store)
         # predicted price of this miss batch BEFORE fetching (corrected by the
         # ledger like every other quote); the observation closes the loop below
+        # — the trace recorder consumes the same predicted/observed pair, so
+        # pricing is computed whenever EITHER consumer is wired
+        priced = (self.ledger is not None or self.obs is not None) and miss.size
         pred = 0.0
         t_wall = 0.0
-        if self.ledger is not None and miss.size:
+        if priced:
             pred = self.backing.io_time(miss) * self._corr(self.backing.name)
             t_wall = time.perf_counter()
         # sequential admission decisions: reserve bytes as targets are chosen
@@ -634,7 +663,7 @@ class TierStack:
                 self._place(targets[int(b)], int(b), (*slab_dev, nbytes), how="admit")
         self.stats.store_fetch_calls += calls
         self.stats.store_blocks_fetched += int(miss.size)
-        if self.ledger is not None and miss.size:
+        if priced:
             from repro.storage.calibration import measurable
 
             be = self.timing_backend
@@ -645,7 +674,13 @@ class TierStack:
                 obs = be.io_seconds(self.backing.name, miss)
             else:
                 obs = time.perf_counter() - t_wall
-            self.ledger.record("placement", self.backing.name, pred, obs)
+            if self.ledger is not None:
+                self.ledger.record("placement", self.backing.name, pred, obs)
+            if self.obs is not None:
+                self.obs.event(
+                    "fetch.store", n=int(miss.size), level=self.backing.name,
+                    predicted_io_s=pred, observed_io_s=obs,
+                )
         return inscope
 
     def ensure(self, store: "BlockStore", block_ids) -> int:
@@ -656,7 +691,10 @@ class TierStack:
         if not miss_set:
             return 0
         miss = np.asarray(sorted(miss_set), dtype=np.int64)
-        self.stats.misses += int(miss.size)  # admissions are logical misses
+        re_ids = self._split_rereads(miss_set)
+        # admissions are logical misses — except append-invalidated re-reads
+        self.stats.misses += int(miss.size) - len(re_ids)
+        self.stats.invalidation_rereads += len(re_ids)
         self._fetch_and_admit(store, miss)
         return int(miss.size)
 
@@ -733,7 +771,10 @@ class TierStack:
         miss_set = {int(b) for b in ids if self._find(int(b)) is None}
         hits = sum(1 for b in ids if int(b) not in miss_set)
         self.stats.hits += int(hits)
-        self.stats.misses += int(ids.size - hits)
+        re_ids = self._split_rereads(miss_set)
+        n_re = sum(1 for b in ids if int(b) in re_ids) if re_ids else 0
+        self.stats.misses += int(ids.size - hits) - n_re
+        self.stats.invalidation_rereads += n_re
         inscope: dict[int, tuple] = {}
         if miss_set:
             miss = np.asarray(sorted(miss_set), dtype=np.int64)

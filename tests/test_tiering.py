@@ -228,6 +228,48 @@ def test_append_invalidates_all_tiers(kind, seed, n_extra, spec):
         )
 
 
+@pytest.mark.parametrize("mode", ["flat", "tiered"])
+def test_append_rereads_not_counted_as_misses(mode):
+    """Re-reading blocks evicted by append invalidation books under
+    ``invalidation_rereads``, NOT ``misses`` — a warm cache that just
+    absorbed an append must not look cold to the cost model / bench gates
+    (counter-drift regression guard, flat LRU and tier stack alike)."""
+    base = _make_table("clustered", 3)
+    extra_full = _make_table("clustered", 103)
+    extra = Table(dims=extra_full.dims[: 2 * RPB],
+                  measures=extra_full.measures[: 2 * RPB],
+                  cards=base.cards)
+    store = build_block_store(base, RPB)
+    if mode == "tiered":
+        eng = NeedleTailEngine(store, tiers=make_tier_stack(4 * NB, None))
+    else:
+        eng = NeedleTailEngine(store)
+    cache = eng.block_cache
+    cache.ensure(store, np.arange(store.num_blocks))
+
+    first_touched = store.num_records // RPB
+    grown = eng.append(extra)
+    touched = np.arange(first_touched, grown.num_blocks)
+
+    misses0 = cache.stats.misses
+    rereads0 = cache.stats.invalidation_rereads
+    cache.ensure(grown, touched)
+    assert cache.stats.invalidation_rereads - rereads0 == touched.size
+    assert cache.stats.misses == misses0, (
+        "append-invalidation re-reads inflated the cold-miss counter")
+
+    # one-shot marks: the blocks are resident again, a repeat is pure hits
+    misses1, rereads1 = cache.stats.misses, cache.stats.invalidation_rereads
+    cache.ensure(grown, touched)
+    assert (cache.stats.misses, cache.stats.invalidation_rereads) \
+        == (misses1, rereads1)
+
+    ref = NeedleTailEngine(grown, cache_bytes=0)
+    queries = _queries(QUERY_POOL[:3])
+    _assert_batch_equal(eng.any_k_batch(queries, algo="auto"),
+                        ref.any_k_batch(queries, algo="auto"))
+
+
 # ---------------------------------------------------------------------------
 # Device pipeline under a tiny tier-0 budget: byte-identity + transfer ledger.
 # ---------------------------------------------------------------------------

@@ -7,7 +7,16 @@ trees (typically: the checkout before and after a change)::
 
     PYTHONPATH=src python -m tools.bench_compare BASE_DIR NEW_DIR
     PYTHONPATH=src python -m tools.bench_compare BASE_DIR NEW_DIR --tolerance 0.2
+    PYTHONPATH=src python -m tools.bench_compare --gate    # vs HEAD baselines
     PYTHONPATH=src python -m tools.bench_compare --smoke   # self-check
+
+``--gate`` is the cross-PR regression gate: every ``BENCH_*.json`` in the
+working tree is diffed against the copy checked in at ``HEAD`` (via ``git
+show``).  Files with no committed baseline are skipped (new benchmarks),
+pairs whose ``config.*`` leaves differ are INCOMPARABLE and skipped (a
+smoke rerun of a full baseline is not a regression), and the gate exits 1
+only when a metric moved in its bad direction by more than ``--tolerance``
+(default 0.15, i.e. a >15% p99 regression fails).
 
 Each JSON payload is flattened to dotted numeric leaves
 (``continuous.p99_ms``, ``remote_wave.batch_ms``, ...); the ``run_meta``
@@ -152,6 +161,59 @@ def compare_trees(base_dir: Path, new_dir: Path, tolerance: float) -> int:
     return total
 
 
+def gate(tolerance: float, repo: Path = REPO) -> int:
+    """Diff the working tree's BENCH_*.json against the HEAD baselines.
+
+    Returns the number of regressions (0 = clean).  Degrades gracefully:
+    no git, no commits, or no committed baseline for a file all SKIP rather
+    than fail — the gate only judges pairs it can actually compare, and a
+    config mismatch (e.g. smoke rerun vs full baseline) is INCOMPARABLE,
+    reported but never counted as a regression.
+    """
+    import subprocess
+
+    new_files = sorted(Path(repo).glob("BENCH_*.json"))
+    if not new_files:
+        print(f"# gate: no BENCH_*.json under {repo}, nothing to check")
+        return 0
+    total = 0
+    for p in new_files:
+        try:
+            proc = subprocess.run(
+                ["git", "-C", str(repo), "show", f"HEAD:{p.name}"],
+                capture_output=True, text=True, timeout=30)
+        except (OSError, subprocess.TimeoutExpired) as exc:
+            print(f"# gate: git unavailable ({exc}); skipping {p.name}")
+            continue
+        if proc.returncode != 0:
+            print(f"# gate: {p.name}: no baseline at HEAD, skipped (new bench)")
+            continue
+        try:
+            base = json.loads(proc.stdout)
+            new = json.loads(p.read_text())
+        except json.JSONDecodeError as exc:
+            print(f"# gate: {p.name}: unparsable ({exc}), skipped")
+            continue
+        r = compare_payloads(base, new, tolerance)
+        if r["incomparable"]:
+            print(f"== {p.name} vs HEAD: INCOMPARABLE (run configs differ), "
+                  "skipped")
+            for key, b, n in r["incomparable"]:
+                print(f"   {key}: {b} != {n}")
+            continue
+        status = "OK" if not r["regressions"] else "REGRESSED"
+        print(f"== {p.name} vs HEAD: {status} "
+              f"({len(r['regressions'])} regressions, "
+              f"{len(r['improvements'])} improvements, "
+              f"{len(r['changed'])} neutral changes)")
+        for key, b, n in r["regressions"]:
+            print(f"  REGRESSION   {key}: {b} -> {n} "
+                  f"({(n - b) / max(abs(b), 1e-12):+.1%}, "
+                  f"{direction(key)}-is-better)")
+        total += len(r["regressions"])
+    return total
+
+
 def _smoke() -> None:
     """Self-check: the repo tree diffs clean against itself, and an
     injected 2x regression in a temp copy is flagged."""
@@ -184,8 +246,45 @@ def _smoke() -> None:
         (tmp / victims[0].name).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
         flagged = compare_trees(REPO, tmp, tolerance=0.15)
         assert flagged >= 1, f"injected 2x regression on {key!r} was not flagged"
+
+        # gate plumbing: a tree with no git history skips every file cleanly,
+        # and the injected 2x regression IS caught when the doctored tree is
+        # committed as its own HEAD baseline and then compared to the
+        # original numbers
+        assert gate(tolerance=0.15, repo=tmp) == 0, \
+            "gate must skip (not fail) when no HEAD baseline exists"
+        import subprocess
+        env = {"GIT_AUTHOR_NAME": "bench", "GIT_AUTHOR_EMAIL": "b@e.nch",
+               "GIT_COMMITTER_NAME": "bench", "GIT_COMMITTER_EMAIL": "b@e.nch",
+               "HOME": td, "PATH": "/usr/bin:/bin:/usr/local/bin"}
+        try:
+            for cmd in (["git", "init", "-q"], ["git", "add", "-A"],
+                        ["git", "commit", "-qm", "baseline"]):
+                subprocess.run(cmd, cwd=td, env=env, check=True,
+                               capture_output=True, timeout=30)
+        except (OSError, subprocess.CalledProcessError, subprocess.TimeoutExpired):
+            print("# bench-compare smoke: git unavailable, gate-catch leg skipped")
+        else:
+            # doctored numbers are now HEAD; restore the original file in the
+            # working tree -> the doctored baseline shows a 2x IMPROVEMENT,
+            # while overwriting with a further 2x bump flags a regression
+            (tmp / victims[0].name).write_text(victims[0].read_text())
+            assert gate(tolerance=0.15, repo=tmp) == 0, \
+                "gate flagged an improvement as a regression"
+            node2, doc2 = None, json.loads(victims[0].read_text())
+            node2 = doc2
+            for part in path[:-1]:
+                node2 = node2[int(part)] if isinstance(node2, list) else node2[part]
+            if isinstance(node2, list):
+                node2[int(leaf)] = node2[int(leaf)] * 4
+            else:
+                node2[leaf] = node2[leaf] * 4
+            (tmp / victims[0].name).write_text(
+                json.dumps(doc2, indent=2, sort_keys=True) + "\n")
+            assert gate(tolerance=0.15, repo=tmp) >= 1, \
+                "gate missed a 4x bad-direction move vs its HEAD baseline"
     print(f"# bench-compare smoke ok: self-diff clean, injected 2x "
-          f"regression on {key!r} flagged")
+          f"regression on {key!r} flagged, gate skips/catches correctly")
 
 
 def main(argv=None) -> None:
@@ -195,12 +294,22 @@ def main(argv=None) -> None:
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="relative slack before a bad-direction move is a "
                          "regression (default 0.15)")
+    ap.add_argument("--gate", action="store_true",
+                    help="cross-PR regression gate: diff the working tree's "
+                         "BENCH_*.json against the HEAD baselines (git show); "
+                         "exit 1 on any >tolerance bad-direction move, skip "
+                         "files without a committed baseline or with "
+                         "mismatched run configs")
     ap.add_argument("--smoke", action="store_true",
                     help="self-check: repo tree diffs clean vs itself; an "
                          "injected 2x regression is flagged")
     args, _ = ap.parse_known_args(argv)
     if args.smoke:
         _smoke()
+        return
+    if args.gate:
+        if gate(args.tolerance):
+            raise SystemExit(1)
         return
     if not (args.base and args.new):
         ap.error("need BASE and NEW directories (or --smoke)")
